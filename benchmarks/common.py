@@ -1,0 +1,98 @@
+"""Shared benchmark scaffolding: model/SLO setup and deployment tuning.
+
+Protocol (paper §7.1): AMPD uses the offline planner's deployment; every
+baseline is tuned over the candidate grid and reports its best result.
+SLO thresholds scale with the model's decode floor (TPU v5e is ~5x more
+HBM-bound than the paper's H20s, so absolute H20 thresholds would put every
+system at 0% — the *relative* comparison is the reproduction target).
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from typing import Dict, List, Tuple
+
+from repro.configs import get_config
+from repro.core import (
+    Deployment,
+    PerfModel,
+    SLOSpec,
+    WorkerGroup,
+    simulate_deployment,
+)
+from repro.core.simulator import SimConfig
+from repro.core.routing import RoutingConfig
+from repro.workloads import make_trace
+
+PAPER_MODELS = ["qwen3-32b", "llama3.1-70b", "mixtral-8x7b"]
+TRACE_GPUS = {"toolbench": 8, "hotpotqa": 8, "dureader": 16, "gaia": 32}
+SCHEDULERS = ["ampd", "dynamo", "vllm", "continuum"]
+
+
+def perf_for(model: str) -> PerfModel:
+    return PerfModel(get_config(model))
+
+
+def slo_for(model: str, perf: PerfModel, trace: str) -> SLOSpec:
+    """Thresholds proportional to the model's decode floor / prefill scale."""
+    tp = 4
+    itl = 2.2 * perf.dec[tp].alpha
+    base_ttft = {"toolbench": 1.5, "hotpotqa": 2.0, "dureader": 2.5,
+                 "gaia": 6.0}[trace]
+    scale = max(1.0, perf.pre[tp].beta / 1.6e-4)   # bigger model -> looser
+    return SLOSpec(ttft_thres=base_ttft * scale, itl_thres=itl)
+
+
+def candidate_deployments(N: int) -> List[Deployment]:
+    """Single-degree splits over the trace's GPU budget (paper Table 2 form)."""
+    out = []
+    for tp_p in (1, 2, 4, 8):
+        for tp_d in (1, 2, 4, 8):
+            if tp_p > N or tp_d > N:
+                continue
+            for frac in (0.25, 0.5, 0.75):
+                gp = max(tp_p, int(round(N * frac / tp_p)) * tp_p)
+                gd = N - gp
+                if gd < tp_d:
+                    continue
+                dpp, dpd = gp // tp_p, gd // tp_d
+                if dpp < 1 or dpd < 1:
+                    continue
+                d = Deployment((WorkerGroup(tp_p, dpp),),
+                               (WorkerGroup(tp_d, dpd),))
+                if d.gpus() <= N and d not in out:
+                    out.append(d)
+    return out
+
+
+def run_cell(model: str, trace: str, rate: float, scheduler: str,
+             *, num_sessions: int = 150, seeds=(11, 12), deployment=None,
+             sim_kw: Dict = None, routing_kw: Dict = None, max_deps: int = 8):
+    """Average SLO attainment (and stats) over seeds for one config."""
+    perf = perf_for(model)
+    slo = slo_for(model, perf, trace)
+    N = TRACE_GPUS[trace]
+    deps = [deployment] if deployment else candidate_deployments(N)
+    if len(deps) > max_deps:   # stride-sample the tuning grid (CPU budget)
+        stride = len(deps) / max_deps
+        deps = [deps[int(i * stride)] for i in range(max_deps)]
+    best = None
+    for dep in deps:
+        accs, res = [], None
+        for s in seeds:
+            sessions = make_trace(trace, num_sessions=num_sessions,
+                                  arrival_rate=rate, seed=s)
+            cfg = SimConfig(scheduler=scheduler, seed=s,
+                            routing=RoutingConfig(
+                                ttft_thres=slo.ttft_thres,
+                                itl_thres=slo.itl_thres,
+                                **(routing_kw or {})),
+                            **(sim_kw or {}))
+            from repro.core.simulator import Simulation
+            res = Simulation(perf, dep, sessions, slo, cfg).run()
+            accs.append(res.slo_attainment)
+        score = sum(accs) / len(accs)
+        if best is None or score > best[0]:
+            best = (score, dep, res)
+    return best  # (attainment, deployment, last SimResult)

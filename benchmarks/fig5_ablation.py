@@ -1,0 +1,41 @@
+"""Fig. 5: ablation of the two online-scheduling techniques + local/remote
+execution proportions."""
+from benchmarks.common import run_cell
+
+VARIANTS = ["dynamo", "ampd-noreorder", "ampd-noroute", "ampd"]
+LABEL = {"dynamo": "base (disagg FCFS)", "ampd-noreorder": "+routing",
+         "ampd-noroute": "+reordering", "ampd": "+both (AMPD)"}
+
+
+def run(model="qwen3-32b", traces=("dureader", "gaia"), rate=None,
+        num_sessions=80):
+    rows = []
+    rates = {"dureader": 1.0, "gaia": 0.4, "toolbench": 2.0, "hotpotqa": 1.2}
+    for trace in traces:
+        r = rate or rates[trace]
+        # fix the deployment to AMPD's planner choice for a clean ablation
+        _, dep, _ = run_cell(model, trace, r, "ampd",
+                             num_sessions=num_sessions)
+        for var in VARIANTS:
+            att, _, res = run_cell(model, trace, r, var, deployment=dep,
+                                   num_sessions=num_sessions)
+            rows.append({
+                "trace": trace, "variant": LABEL[var], "slo": round(att, 3),
+                "local_frac": round(res.local_fraction, 3),
+                "p95_ttft": round(res.p95_ttft, 2),
+                "avg_itl_ms": round(res.avg_itl * 1000, 1),
+            })
+    return rows
+
+
+def main():
+    rows = run()
+    print("trace,variant,slo,local_frac,p95_ttft,avg_itl_ms")
+    for r in rows:
+        print(f"{r['trace']},{r['variant']},{r['slo']},{r['local_frac']},"
+              f"{r['p95_ttft']},{r['avg_itl_ms']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Fig. 7: offline planning (ILP) time vs cluster size.  The paper reports
+~1 minute at 256 GPUs with SCIP; HiGHS via scipy solves the same formulation
+in milliseconds at 512."""
+import time
+
+import numpy as np
+
+from benchmarks.common import perf_for
+
+from repro.core.planner import solve_ilp
+
+
+def run(sizes=(8, 16, 32, 64, 128, 256, 512, 1024)):
+    rows = []
+    perf = perf_for("qwen3-32b")
+    degrees = (1, 2, 4, 8, 16)
+    for N in sizes:
+        tau_p = {n: perf.t_pre(0, 2048, n) * 20 for n in degrees if n <= N}
+        tau_d = {n: perf.t_dec(32, n, 2048) * 50 for n in degrees if n <= N}
+        t0 = time.time()
+        sol = solve_ilp(tau_p, tau_d, N, [n for n in degrees if n <= N])
+        rows.append({"gpus": N, "seconds": round(time.time() - t0, 4),
+                     "status": sol.status, "z": round(sol.z, 4)})
+    return rows
+
+
+def main():
+    rows = run()
+    print("gpus,seconds,status")
+    for r in rows:
+        print(f"{r['gpus']},{r['seconds']},{r['status']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Fig. 8 (appendix): average end-to-end latency — AMPD should stay
+comparable to Dynamo (small gap) while winning SLO attainment."""
+from benchmarks.common import SCHEDULERS, run_cell
+
+
+def run(model="qwen3-32b", traces=("toolbench", "dureader"),
+        num_sessions=80):
+    rates = {"dureader": 1.0, "gaia": 0.4, "toolbench": 2.0, "hotpotqa": 1.2}
+    rows = []
+    for trace in traces:
+        cell = {}
+        for sched in SCHEDULERS:
+            att, dep, res = run_cell(model, trace, rates[trace], sched,
+                                     num_sessions=num_sessions)
+            cell[sched] = (res.avg_e2e, att)
+        rows.append({"trace": trace,
+                     **{f"{s}_e2e": round(cell[s][0], 2) for s in SCHEDULERS},
+                     **{f"{s}_slo": round(cell[s][1], 3) for s in SCHEDULERS}})
+    return rows
+
+
+def main():
+    rows = run()
+    for r in rows:
+        print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Generate the §Dry-run and §Roofline markdown tables from artifacts."""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from benchmarks.roofline import analyze  # noqa: E402
+
+DRYRUN = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def dryrun_table(mesh):
+    rows = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        parts = p.stem.split("__")
+        if len(parts) > 3:        # tagged perf-iteration artifacts
+            continue
+        rec = json.loads(p.read_text())
+        if rec["mesh"] != mesh:
+            continue
+        coll = rec["collective_bytes_per_device"]
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['compile_s']}s "
+            f"| {rec['flops_per_device']:.2e} "
+            f"| {rec['memory']['peak_bytes']/2**30:.1f} "
+            f"| {sum(coll.values())/2**30:.2f} "
+            f"| ag:{coll['all-gather']/2**30:.1f}/ar:{coll['all-reduce']/2**30:.1f}"
+            f"/rs:{coll['reduce-scatter']/2**30:.1f}/a2a:{coll['all-to-all']/2**30:.1f} |")
+    hdr = ("| arch | shape | compile | FLOPs/dev | peak GiB/dev | coll GiB/dev "
+           "| breakdown |\n|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def roofline_table(mesh="16x16"):
+    rows = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        parts = p.stem.split("__")
+        if len(parts) > 3:
+            continue
+        rec = json.loads(p.read_text())
+        if rec["mesh"] != mesh:
+            continue
+        rec["tag"] = ""
+        a = analyze(rec)
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | {a['t_compute_s']*1e3:.1f} "
+            f"| {a['t_memory_s']*1e3:.1f} | {a['t_collective_s']*1e3:.1f} "
+            f"| **{a['bottleneck']}** | {a['useful_ratio']:.2f} "
+            f"| {a['roofline_fraction']:.3f} | {a['suggestion']} |")
+    hdr = ("| arch | shape | compute ms | memory ms | collective ms | "
+           "bottleneck | useful | roofline frac | what moves it |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def skips():
+    from repro.configs import ALL_SHAPES, ASSIGNED_ARCHS, cell_supported, get_config
+    out = []
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for shp in ALL_SHAPES:
+            ok, reason = cell_supported(cfg, shp)
+            if not ok:
+                out.append(f"| {arch} | {shp.name} | SKIP | {reason} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### single-pod 16x16\n")
+        print(dryrun_table("16x16"))
+        print("\n### multi-pod 2x16x16\n")
+        print(dryrun_table("2x16x16"))
+        print("\n### skipped cells\n")
+        print(skips())
+    if which in ("all", "roofline"):
+        print("\n### roofline (single-pod)\n")
+        print(roofline_table())

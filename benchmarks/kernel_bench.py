@@ -1,0 +1,70 @@
+"""Kernel micro-bench: interpret-mode correctness + XLA-path wall times for
+the attention operators at serving-relevant shapes (CPU; TPU wall-times come
+from the roofline terms)."""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.kernels.decode_attn.ops import decode_attention  # noqa: E402
+from repro.kernels.flash_prefill.ops import flash_attention  # noqa: E402
+
+
+def _time(fn, *args, n=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6   # us
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    cases = [
+        ("prefill_512x512_h8", 1, 512, 8, 2, 64, 512, 0),
+        ("incr_prefill_256+1024", 1, 256, 8, 2, 64, 1280, 1024),
+        ("prefill_1k_gqa40/8", 1, 1024, 40, 8, 64, 1024, 0),
+    ]
+    for name, B, S, H, G, hd, T, hist in cases:
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (B, T, G, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (B, T, G, hd), jnp.float32)
+        qp = jnp.broadcast_to(hist + jnp.arange(S, dtype=jnp.int32), (B, S))
+        kp = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+        us = _time(flash_attention, q, k, v, q_positions=qp, kv_positions=kp,
+                   scale=hd ** -0.5, force_ref=True)
+        rows.append((f"flash_prefill_ref/{name}", us,
+                     f"{2*B*S*T*H*hd*2/1e9:.2f}GFLOP"))
+    dec_cases = [("decode_b8_kv4096", 8, 32, 8, 128, 4096),
+                 ("decode_b32_kv2048", 32, 16, 8, 128, 2048)]
+    for name, B, H, G, hd, T in dec_cases:
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, 1, H, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (B, T, G, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (B, T, G, hd), jnp.float32)
+        qp = jnp.full((B, 1), T - 1, jnp.int32)
+        kp = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+        us = _time(decode_attention, q, k, v, q_positions=qp, kv_positions=kp,
+                   scale=hd ** -0.5, force_ref=True)
+        kv_gib = B * T * G * hd * 2 * 4 / 2 ** 30
+        rows.append((f"decode_attn_ref/{name}", us, f"{kv_gib:.3f}GiB-KV"))
+    return rows
+
+
+def main():
+    rows = run()
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh)
+from the dry-run artifacts.
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory     = HLO_bytes_per_device / HBM_bw_per_chip
+  collective = collective_bytes_per_device / ICI_link_bw
+
+(Equivalent to the global-form definitions: per-device values already divide
+by the chip count.)  MODEL_FLOPS uses 6*N*D for train and 2*N_active*D for
+serve steps; the useful-compute ratio flags remat/redundancy waste.  Note:
+the XLA attention path computes unmasked S*T scores (a causal flash kernel
+halves that), so prefill/train compute terms are conservative upper bounds.
+"""
+import json
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config, shape_by_name  # noqa: E402
+
+PEAK_FLOPS = 197.0e12       # bf16 / chip (TPU v5e)
+HBM_BW = 819.0e9            # bytes/s / chip
+LINK_BW = 50.0e9            # bytes/s / ICI link
+
+DRYRUN_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def model_flops(rec) -> float:
+    cfg = get_config(rec["arch"])
+    shape = shape_by_name(rec["shape"])
+    n_active = rec.get("active_params") or cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if rec["shape"] != "decode"
+                                   else 1)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch          # decode: 1 tok/seq
+
+
+def suggest(dom: str, rec) -> str:
+    if dom == "compute":
+        if rec["shape"].startswith("train") or rec["shape"].startswith("prefill"):
+            return ("causal flash kernel (skip masked KV blocks) halves "
+                    "attention FLOPs; check useful-ratio for remat waste")
+        return "increase per-chip batch or quantize weights"
+    if dom == "memory":
+        if "decode" in rec["shape"]:
+            return ("KV-cache bytes dominate: quantize KV to int8 or shard "
+                    "batch wider")
+        return "fuse elementwise chains; avoid fp32 intermediates"
+    return ("overlap collectives with compute (latency-hiding scheduler); "
+            "reshard to cut all-gather volume")
+
+
+def analyze(rec) -> dict:
+    t_comp = rec["flops_per_device"] / PEAK_FLOPS
+    t_mem = rec["bytes_accessed_per_device"] / HBM_BW
+    coll = rec["collective_bytes_per_device"]
+    coll_bytes = sum(coll.values())
+    t_coll = coll_bytes / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    hlo_global = rec["flops_per_device"] * rec["chips"]
+    useful = mf / hlo_global if hlo_global else 0.0
+    # roofline fraction: useful model FLOPs per second achievable if the
+    # dominant term sets step time, vs the chip's peak
+    step_time = max(terms.values())
+    frac = (mf / rec["chips"] / step_time) / PEAK_FLOPS if step_time else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "bottleneck": dom,
+        "model_flops": mf,
+        "useful_ratio": useful,
+        "roofline_fraction": frac,
+        "peak_gib": rec["memory"]["peak_bytes"] / 2 ** 30,
+        "suggestion": suggest(dom, rec),
+        "opts": rec.get("opts", {}),
+        "tag": rec.get("tag", ""),
+    }
+
+
+def load_all(mesh="16x16", tag=""):
+    rows = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec["mesh"] != mesh:
+            continue
+        name_tag = p.stem.split("__")[3] if len(p.stem.split("__")) > 3 else ""
+        if name_tag != tag:
+            continue
+        rec["tag"] = name_tag
+        rows.append(analyze(rec))
+    return rows
+
+
+def main(mesh="16x16"):
+    rows = load_all(mesh)
+    print("arch,shape,mesh,t_compute_ms,t_memory_ms,t_collective_ms,"
+          "bottleneck,useful_ratio,roofline_frac,peak_gib")
+    for r in rows:
+        print(f"{r['arch']},{r['shape']},{r['mesh']},"
+              f"{r['t_compute_s']*1e3:.3f},{r['t_memory_s']*1e3:.3f},"
+              f"{r['t_collective_s']*1e3:.3f},{r['bottleneck']},"
+              f"{r['useful_ratio']:.3f},{r['roofline_fraction']:.3f},"
+              f"{r['peak_gib']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Benchmark entrypoint: one function per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--full]``
+
+Prints one ``name,us_per_call,derived`` CSV line per benchmark (plus each
+benchmark's own table above it).  Default is the quick profile (~minutes on
+one CPU core); --full runs all three paper models over the full rate grid.
+"""
+import argparse
+import sys
+import time
+
+
+def _section(title):
+    print(f"\n===== {title} " + "=" * max(0, 60 - len(title)))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(sys.argv[1:])
+
+    summary = []
+
+    def record(name, t0, derived):
+        us = (time.time() - t0) * 1e6
+        summary.append((name, us, derived))
+
+    _section("Table 1: trace statistics")
+    from benchmarks import table1_traces
+    t0 = time.time()
+    rows = table1_traces.main()
+    worst = max(abs(r["rounds"] - r["rounds_paper"]) / r["rounds_paper"]
+                for r in rows)
+    record("table1_traces", t0, f"max_rel_err={worst:.3f}")
+
+    _section("Fig. 7: planning time vs cluster size")
+    from benchmarks import fig7_planning_time
+    t0 = time.time()
+    rows = fig7_planning_time.main()
+    record("fig7_planning_time", t0,
+           f"512gpu={rows[-2]['seconds']}s" if len(rows) > 1 else "")
+
+    _section("Table 2: planner vs simulated serving ranking")
+    from benchmarks import table2_planner
+    t0 = time.time()
+    rows = table2_planner.main()
+    record("table2_planner", t0, f"{len(rows)} traces")
+
+    _section("Fig. 4: end-to-end SLO attainment")
+    from benchmarks import fig4_e2e
+    t0 = time.time()
+    rows = fig4_e2e.main(quick=not args.full)
+    wins = sum(1 for r in rows if r["ampd_vs_best_base"] >= -0.02)
+    record("fig4_e2e", t0, f"ampd_best_or_tied={wins}/{len(rows)}")
+
+    _section("Fig. 5: ablation (routing / reordering)")
+    from benchmarks import fig5_ablation
+    t0 = time.time()
+    rows = fig5_ablation.main()
+    full = [r["slo"] for r in rows if r["variant"].startswith("+both")]
+    base = [r["slo"] for r in rows if r["variant"].startswith("base")]
+    record("fig5_ablation", t0,
+           f"ampd_minus_base={sum(full)/len(full)-sum(base)/len(base):+.3f}")
+
+    _section("Fig. 6: sensitivity (w, alpha, beta)")
+    from benchmarks import fig6_sensitivity
+    t0 = time.time()
+    rows = fig6_sensitivity.main()
+    record("fig6_sensitivity", t0, f"{len(rows)} points")
+
+    _section("Fig. 8: average end-to-end latency")
+    from benchmarks import fig8_latency
+    t0 = time.time()
+    rows = fig8_latency.main()
+    record("fig8_latency", t0, f"{len(rows)} traces")
+
+    _section("Fault tolerance / stragglers (beyond-paper)")
+    from benchmarks import fault_tolerance
+    t0 = time.time()
+    rows = fault_tolerance.main()
+    record("fault_tolerance", t0,
+           f"recoveries={sum(r['recoveries'] for r in rows)}")
+
+    _section("Kernel micro-bench")
+    from benchmarks import kernel_bench
+    t0 = time.time()
+    kernel_bench.main()
+    record("kernel_bench", t0, "ref-path CPU")
+
+    _section("Roofline (from dry-run artifacts)")
+    from benchmarks import roofline
+    t0 = time.time()
+    try:
+        rows = roofline.main()
+        doms = {}
+        for r in rows:
+            doms[r["bottleneck"]] = doms.get(r["bottleneck"], 0) + 1
+        record("roofline", t0, f"cells={len(rows)} bottlenecks={doms}")
+    except Exception as e:  # noqa: BLE001
+        record("roofline", t0, f"skipped ({e})")
+
+    _section("SUMMARY  name,us_per_call,derived")
+    for name, us, derived in summary:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Table 1: trace statistics — generators must reproduce the paper's means."""
+from benchmarks.common import *  # noqa: F401,F403  (path setup)
+
+from repro.workloads import TRACES, make_trace, trace_stats
+
+EXPECTED = {
+    "toolbench": (3.96, 703.79, 50.39),
+    "gaia": (11.32, 6161.02, 528.76),
+    "hotpotqa": (3.0, 1569.8, 80.03),
+    "dureader": (4.0, 3081.23, 150.10),
+}
+
+
+def run(num_sessions=800):
+    rows = []
+    for name, (er, ep, ed) in EXPECTED.items():
+        st = trace_stats(make_trace(name, num_sessions=num_sessions, seed=0))
+        rows.append({
+            "trace": name,
+            "rounds": round(st["avg_rounds"], 2), "rounds_paper": er,
+            "prefill": round(st["avg_prefill_len"], 1), "prefill_paper": ep,
+            "decode": round(st["avg_decode_len"], 1), "decode_paper": ed,
+        })
+    return rows
+
+
+def main():
+    rows = run()
+    print("trace,rounds,rounds_paper,prefill,prefill_paper,decode,decode_paper")
+    for r in rows:
+        print(",".join(str(r[k]) for k in
+                       ("trace", "rounds", "rounds_paper", "prefill",
+                        "prefill_paper", "decode", "decode_paper")))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

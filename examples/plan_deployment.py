@@ -1,0 +1,44 @@
+"""Offline deployment planning demo (paper §5): ILP + load-aware ranking for
+every paper model x trace, plus elastic re-planning when capacity changes.
+
+Run:  PYTHONPATH=src python examples/plan_deployment.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config
+from repro.core import PerfModel, SLOSpec
+from repro.core.planner import plan, solve_ilp
+from repro.workloads import make_trace
+
+
+def main():
+    for model in ("qwen3-32b", "mixtral-8x7b"):
+        perf = PerfModel(get_config(model))
+        slo = SLOSpec(ttft_thres=2.5, itl_thres=2.2 * perf.dec[4].alpha)
+        for trace, N, rate in (("hotpotqa", 8, 1.0), ("dureader", 16, 0.8)):
+            res = plan(perf,
+                       lambda: make_trace(trace, num_sessions=60,
+                                          arrival_rate=rate, seed=1),
+                       N=N, slo=slo, max_candidates=20, seed=1)
+            print(f"{model} / {trace} (N={N}):")
+            print(f"  ILP [{res.ilp.solve_seconds*1e3:.0f}ms] "
+                  f"Z={res.ilp.z:.3f} -> {res.ilp.deployment().label()}")
+            for i, (dep, att, p95) in enumerate(res.ranked[:3], 1):
+                print(f"  sim #{i}: {dep.label():34s} slo={att:.2f} "
+                      f"p95_e2e={p95:.1f}s")
+
+    print("\nelastic scaling: re-plan as the cluster grows (ILP ms each):")
+    perf = PerfModel(get_config("qwen3-32b"))
+    for N in (16, 64, 256, 512):
+        tau_p = {n: perf.t_pre(0, 2048, n) * 20 for n in (1, 2, 4, 8, 16)}
+        tau_d = {n: perf.t_dec(32, n, 2048) * 50 for n in (1, 2, 4, 8, 16)}
+        sol = solve_ilp(tau_p, tau_d, N)
+        print(f"  N={N:4d}: {sol.solve_seconds*1e3:6.1f} ms  "
+              f"-> {sol.deployment().label()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Architecture registry.
+
+``get_config("qwen2.5-14b")`` / ``--arch qwen2.5-14b`` resolve here.  The ten
+ASSIGNED_ARCHS are the graded dry-run/roofline matrix; PAPER_MODELS are the
+three models AMPD's own experiments use (Fig. 4-8 benchmarks).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401  (re-exported)
+    ALL_SHAPES,
+    ATTN,
+    CROSS,
+    DECODE_32K,
+    LOCAL,
+    LONG_500K,
+    PREFILL_32K,
+    RGLRU,
+    SSD,
+    TRAIN_4K,
+    ModelConfig,
+    ShapeConfig,
+    cell_supported,
+    shape_by_name,
+)
+
+_MODULES = {
+    # ten assigned architectures
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "dbrx-132b": "dbrx_132b",
+    "qwen2.5-14b": "qwen2_5_14b",
+    "gemma2-2b": "gemma2_2b",
+    "command-r-35b": "command_r_35b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "mamba2-130m": "mamba2_130m",
+    "musicgen-medium": "musicgen_medium",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    # paper experiment models
+    "qwen3-32b": "qwen3_32b",
+    "llama3.1-70b": "llama3_1_70b",
+    "mixtral-8x7b": "mixtral_8x7b",
+}
+
+ASSIGNED_ARCHS: List[str] = [
+    "llama-3.2-vision-11b",
+    "kimi-k2-1t-a32b",
+    "dbrx-132b",
+    "qwen2.5-14b",
+    "gemma2-2b",
+    "command-r-35b",
+    "qwen2.5-32b",
+    "mamba2-130m",
+    "musicgen-medium",
+    "recurrentgemma-2b",
+]
+
+PAPER_MODELS: List[str] = ["qwen3-32b", "llama3.1-70b", "mixtral-8x7b"]
+
+_cache: Dict[str, ModelConfig] = {}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _cache:
+        if name not in _MODULES:
+            raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+        mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+        cfg = mod.CONFIG
+        assert cfg.name == name, (cfg.name, name)
+        _cache[name] = cfg
+    return _cache[name]
+
+
+def list_archs() -> List[str]:
+    return list(ASSIGNED_ARCHS)
+
+
+def all_cells():
+    """Yield every (config, shape, supported, reason) dry-run cell."""
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for shape in ALL_SHAPES:
+            ok, reason = cell_supported(cfg, shape)
+            yield cfg, shape, ok, reason

@@ -1,0 +1,251 @@
+"""Model/config schema shared by every assigned architecture.
+
+A ``ModelConfig`` is a frozen dataclass fully describing one backbone:
+dimensions, attention flavour, layer pattern, MoE/SSM/RG-LRU extras, and the
+modality frontend stub.  ``ShapeConfig`` describes one assigned input-shape
+cell (train_4k / prefill_32k / decode_32k / long_500k).
+
+The FULL configs are only ever lowered abstractly (dry-run); smoke tests use
+``reduced()`` which shrinks every axis while preserving the family structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Sequence, Tuple
+
+# Layer kinds used in ``layer_pattern`` (cycled over the depth).
+ATTN = "attn"            # global self attention
+LOCAL = "local"          # sliding-window self attention
+CROSS = "cross"          # cross attention to frontend embeddings (vlm)
+SSD = "ssd"              # Mamba-2 state-space dual block
+RGLRU = "rglru"          # RG-LRU recurrent block (Griffin)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int                   # query heads (0 for attention-free)
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+
+    # -- attention details -------------------------------------------------
+    qkv_bias: bool = False
+    attn_logit_softcap: Optional[float] = None
+    final_logit_softcap: Optional[float] = None
+    sliding_window: Optional[int] = None      # window for LOCAL layers
+    layer_pattern: Tuple[str, ...] = (ATTN,)  # cycled to num_layers
+    query_scale_override: Optional[float] = None
+    rope_theta: float = 1.0e6
+
+    # -- norm / activation --------------------------------------------------
+    norm: str = "rms"                # rms | ln
+    activation: str = "swiglu"       # swiglu | geglu | gelu
+    post_block_norm: bool = False    # gemma2-style sandwich norms
+    tie_embeddings: bool = False
+
+    # -- MoE ----------------------------------------------------------------
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_capacity_factor: float = 1.25
+
+    # -- SSM (Mamba-2 / SSD) -------------------------------------------------
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    conv_kernel: int = 4
+    expand: int = 2
+
+    # -- RG-LRU (Griffin / RecurrentGemma) ------------------------------------
+    lru_width: int = 0
+
+    # -- modality frontend stub ----------------------------------------------
+    frontend: Optional[str] = None        # "vision" | "audio" | None
+    frontend_tokens: int = 0              # stub embedding tokens per request
+
+    # -- numerics -------------------------------------------------------------
+    rms_eps: float = 1.0e-6
+    dtype: str = "bfloat16"
+    scale_embeddings: bool = False   # gemma-style sqrt(d_model) embed scaling
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        if self.num_heads:
+            return self.d_model // self.num_heads
+        return 0
+
+    @property
+    def d_inner(self) -> int:
+        """SSM inner width."""
+        return self.expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim if self.ssm_state else 0
+
+    @property
+    def rglru_width(self) -> int:
+        return self.lru_width or self.d_model
+
+    def pattern_for_depth(self) -> Tuple[str, ...]:
+        """Expand layer_pattern cyclically to num_layers entries."""
+        pat = self.layer_pattern
+        return tuple(pat[i % len(pat)] for i in range(self.num_layers))
+
+    @property
+    def is_attention_free(self) -> bool:
+        kinds = set(self.pattern_for_depth())
+        return not (kinds & {ATTN, LOCAL, CROSS})
+
+    @property
+    def supports_long_context_decode(self) -> bool:
+        """True when per-token decode state is o(context): SSM / windowed-only."""
+        kinds = set(self.pattern_for_depth())
+        return not (kinds & {ATTN, CROSS})  # global attention disqualifies
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND roofline arithmetic)."""
+        d, v = self.d_model, self.vocab_size
+        total = v * d  # embedding
+        if not self.tie_embeddings:
+            total += v * d  # unembedding
+        hd = self.resolved_head_dim
+        for kind in self.pattern_for_depth():
+            if kind in (ATTN, LOCAL, CROSS):
+                qk = d * self.num_heads * hd + d * self.num_kv_heads * hd * 2
+                total += qk + self.num_heads * hd * d  # q,k,v,o
+                if self.qkv_bias:
+                    total += (self.num_heads + 2 * self.num_kv_heads) * hd
+            elif kind == SSD:
+                di, ds, nh = self.d_inner, self.ssm_state, self.ssm_heads
+                total += d * (2 * di + 2 * ds + nh)      # in_proj (x,z,B,C,dt)
+                total += self.conv_kernel * (di + 2 * ds)  # conv over x,B,C
+                total += di * d                            # out proj
+                total += 2 * nh                            # A_log, D
+            elif kind == RGLRU:
+                w = self.rglru_width
+                total += d * w * 2 + w * d                # in (x,gate), out
+                total += self.conv_kernel * w             # temporal conv
+                total += 2 * w                            # lru gates (a, input)
+            # FFN attached to every block except SSD/RGLRU (which are full blocks)
+            if kind in (ATTN, LOCAL, CROSS):
+                if self.num_experts:
+                    total += self.num_experts * 3 * d * self.d_ff + d * self.num_experts
+                else:
+                    mult = 3 if self.activation in ("swiglu", "geglu") else 2
+                    total += mult * d * self.d_ff
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k experts only)."""
+        if not self.num_experts:
+            return self.param_count()
+        d = self.d_model
+        n_moe = sum(1 for k in self.pattern_for_depth() if k in (ATTN, LOCAL, CROSS))
+        unused = (self.num_experts - self.num_experts_per_tok) * 3 * d * self.d_ff
+        return self.param_count() - n_moe * unused
+
+    def kv_bytes_per_token(self, dtype_bytes: int = 2) -> int:
+        """Session-state growth per context token (KV rings count up to window)."""
+        hd = self.resolved_head_dim
+        per_layer = 2 * self.num_kv_heads * hd * dtype_bytes
+        n = sum(1 for k in self.pattern_for_depth() if k in (ATTN, CROSS))
+        # LOCAL layers stop growing past the window; callers use session_state_bytes
+        # for absolute sizes.  Here we report the asymptotic growth rate.
+        return n * per_layer
+
+    def session_state_bytes(self, context_len: int, dtype_bytes: int = 2) -> int:
+        """Absolute per-sequence recurrent state at a given context length.
+
+        This is what AMPD's T_kv transfers between prefill and decode workers.
+        """
+        hd = self.resolved_head_dim
+        per_tok = 2 * self.num_kv_heads * hd * dtype_bytes
+        total = 0
+        for kind in self.pattern_for_depth():
+            if kind in (ATTN, CROSS):
+                ctx = context_len if kind == ATTN else self.frontend_tokens
+                total += ctx * per_tok
+            elif kind == LOCAL:
+                total += min(context_len, self.sliding_window or context_len) * per_tok
+            elif kind == SSD:
+                total += (self.ssm_heads * self.ssm_head_dim * self.ssm_state
+                          + self.d_inner * self.conv_kernel) * 4  # fp32 state
+            elif kind == RGLRU:
+                total += self.rglru_width * 4
+        return total
+
+    # ------------------------------------------------------------------
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        pat_period = len(self.layer_pattern)
+        n_layers = max(2, min(self.num_layers, 2 * pat_period))
+        # keep the full pattern period so every block kind is exercised
+        if pat_period > n_layers:
+            n_layers = pat_period
+        heads = min(self.num_heads, 4) if self.num_heads else 0
+        kv = min(self.num_kv_heads, max(1, heads // 2)) if self.num_kv_heads else 0
+        if heads and kv and heads % kv:
+            kv = 1
+        return replace(
+            self,
+            num_layers=n_layers,
+            d_model=64,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=16 if heads else 0,
+            d_ff=128,
+            vocab_size=512,
+            num_experts=min(self.num_experts, 4),
+            num_experts_per_tok=min(self.num_experts_per_tok, 2),
+            ssm_state=min(self.ssm_state, 16),
+            ssm_head_dim=16 if self.ssm_state else self.ssm_head_dim,
+            ssm_chunk=32,
+            lru_width=64 if self.lru_width else 0,
+            sliding_window=min(self.sliding_window, 32) if self.sliding_window else None,
+            frontend_tokens=min(self.frontend_tokens, 8),
+            dtype="float32",
+        )
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+ALL_SHAPES: Tuple[ShapeConfig, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+
+def shape_by_name(name: str) -> ShapeConfig:
+    for s in ALL_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown shape {name!r}; have {[s.name for s in ALL_SHAPES]}")
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether an (arch x shape) cell runs, and the reason if not.
+
+    DESIGN.md §Arch-applicability: long_500k requires sub-quadratic decode
+    state; pure/global-attention archs skip it.
+    """
+    if shape.name == "long_500k" and not cfg.supports_long_context_decode:
+        return False, ("global-attention KV at 524288 ctx exceeds HBM budget; "
+                       "assigned skip for full-attention archs")
+    return True, ""

@@ -1,0 +1,27 @@
+"""gemma2-2b [dense] — 26L d_model=2304 8H (GQA kv=4) d_ff=9216 vocab=256000.
+Local+global alternating attention, logit softcaps, sandwich norms.
+[arXiv:2408.00118]
+"""
+from repro.configs.base import ModelConfig, ATTN, LOCAL
+
+CONFIG = ModelConfig(
+    name="gemma2-2b",
+    family="dense",
+    num_layers=26,
+    d_model=2304,
+    num_heads=8,
+    num_kv_heads=4,
+    head_dim=256,
+    d_ff=9216,
+    vocab_size=256000,
+    layer_pattern=(LOCAL, ATTN),
+    sliding_window=4096,
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    post_block_norm=True,
+    tie_embeddings=True,
+    query_scale_override=256 ** -0.5,  # query_pre_attn_scalar = 256
+    rope_theta=10000.0,
+    activation="geglu",
+    scale_embeddings=True,
+)

@@ -1,0 +1,27 @@
+"""kimi-k2-1t-a32b [moe] — 61L d_model=7168 64H (GQA kv=8) d_ff=2048
+vocab=163840, MoE 384 experts top-8.  Trillion-parameter MoE (paper-table).
+[arXiv:2501.kimi2]
+
+~1.04T total / ~32B active params.  Expert d_ff is the fine-grained 2048;
+all layers are MoE per the assigned config.  Training this arch defaults to
+Adafactor (AdamW fp32 moments do not fit a single v5e pod — see DESIGN.md §10
+and EXPERIMENTS.md).
+"""
+from repro.configs.base import ModelConfig, ATTN
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=112,   # 7168 / 64
+    d_ff=2048,      # per-expert intermediate
+    vocab_size=163840,
+    layer_pattern=(ATTN,),
+    num_experts=384,
+    num_experts_per_tok=8,
+    rope_theta=1.0e6,
+    activation="swiglu",
+)

@@ -1,0 +1,19 @@
+"""llama3.1-70b — paper experiment model (§7.1). 80L d_model=8192 64H (GQA
+kv=8) d_ff=28672 vocab=128256. [arXiv:2407.21783]
+"""
+from repro.configs.base import ModelConfig, ATTN
+
+CONFIG = ModelConfig(
+    name="llama3.1-70b",
+    family="dense",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    layer_pattern=(ATTN,),
+    rope_theta=5.0e5,
+    activation="swiglu",
+)

@@ -1,0 +1,27 @@
+"""llama-3.2-vision-11b [vlm] — 40L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=128256, cross-attn image layers. [hf:meta-llama/Llama-3.2-11B-Vision]
+
+Backbone only: the vision tower is a STUB — ``input_specs()`` supplies
+precomputed patch embeddings of shape (batch, frontend_tokens, d_model); the
+8 cross-attention layers (every 5th, matching the released model's layout)
+attend to them.  Cross KV is computed once at initial prefill and kept in the
+session state (it is part of what AMPD's T_kv transfers).
+"""
+from repro.configs.base import ModelConfig, ATTN, CROSS
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=128256,
+    layer_pattern=(ATTN, ATTN, ATTN, CROSS, ATTN),  # cross at 3, 8, ..., 38
+    rope_theta=500000.0,
+    activation="swiglu",
+    frontend="vision",
+    frontend_tokens=1601,
+)

@@ -1,0 +1,27 @@
+"""mamba2-130m [ssm] — 24L d_model=768 (attention-free) d_ff=0 vocab=50280,
+ssm_state=128.  SSD (state-space duality). [arXiv:2405.21060]
+
+Attention-free: the per-session recurrent state is O(1) in context length
+(conv state + SSD state), so this arch runs the long_500k cell.  AMPD's
+technique applies with the SSM state standing in for the KV cache
+(DESIGN.md §Arch-applicability).
+"""
+from repro.configs.base import ModelConfig, SSD
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    family="ssm",
+    num_layers=24,
+    d_model=768,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,                 # SSD blocks only, no FFN (per assigned config)
+    vocab_size=50280,
+    layer_pattern=(SSD,),
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    conv_kernel=4,
+    expand=2,               # d_inner = 1536, 24 SSD heads
+    tie_embeddings=True,
+)

@@ -1,0 +1,21 @@
+"""mixtral-8x7b — paper experiment model (§7.1). 32L d_model=4096 32H (GQA
+kv=8) d_ff=14336, MoE 8 experts top-2, vocab=32000. [arXiv:2401.04088]
+"""
+from repro.configs.base import ModelConfig, ATTN
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=32000,
+    layer_pattern=(ATTN,),
+    num_experts=8,
+    num_experts_per_tok=2,
+    rope_theta=1.0e6,
+    activation="swiglu",
+)

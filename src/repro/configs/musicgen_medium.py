@@ -1,0 +1,27 @@
+"""musicgen-medium [audio] — 48L d_model=1536 24H (MHA kv=24) d_ff=6144
+vocab=2048.  Decoder-only over EnCodec tokens. [arXiv:2306.05284]
+
+Backbone only: the EnCodec tokenizer/detokenizer is a STUB — the model sees
+precomputed codec token ids (vocab 2048) directly, per the assignment note
+that ``input_specs()`` provides frame-level inputs.  LayerNorm + GELU per the
+original MusicGen transformer.
+"""
+from repro.configs.base import ModelConfig, ATTN
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    num_layers=48,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,
+    head_dim=64,
+    d_ff=6144,
+    vocab_size=2048,
+    layer_pattern=(ATTN,),
+    norm="ln",
+    activation="gelu",
+    rope_theta=10000.0,
+    frontend="audio",
+    frontend_tokens=0,
+)

@@ -1,0 +1,19 @@
+"""qwen3-32b — paper experiment model (§7.1). 64L d_model=5120 64H (GQA kv=8)
+d_ff=25600 vocab=151936. [arXiv:2505.09388]
+"""
+from repro.configs.base import ModelConfig, ATTN
+
+CONFIG = ModelConfig(
+    name="qwen3-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=25600,
+    vocab_size=151936,
+    layer_pattern=(ATTN,),
+    rope_theta=1.0e6,
+    activation="swiglu",
+)

@@ -1,0 +1,29 @@
+"""recurrentgemma-2b [hybrid] — 26L d_model=2560 10H (GQA kv=1) d_ff=7680
+vocab=256000.  RG-LRU + local attention, 1:2 ratio. [arXiv:2402.19427]
+
+Pattern (rglru, rglru, local) repeated: 26 layers = 8 full periods + 2
+trailing recurrent blocks.  Session state is O(1)-ish (RG-LRU state + 2048
+window KV), so this arch runs the long_500k cell.
+"""
+from repro.configs.base import ModelConfig, RGLRU, LOCAL
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    num_layers=26,
+    d_model=2560,
+    num_heads=10,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    vocab_size=256000,
+    layer_pattern=(RGLRU, RGLRU, LOCAL),
+    sliding_window=2048,
+    lru_width=2560,
+    conv_kernel=4,
+    final_logit_softcap=30.0,
+    tie_embeddings=True,
+    rope_theta=10000.0,
+    activation="geglu",
+    scale_embeddings=True,
+)

@@ -1,0 +1,20 @@
+"""AMPD core: the paper's primary contribution as a composable library.
+
+Performance model (§3), adaptive routing (§4.1), prefill reordering (§4.2),
+ILP deployment planner (§5) and the discrete-event serving simulator
+(App. A.1).  Consumed by both the live serving runtime (repro.serving) and
+the benchmarks.
+"""
+from repro.core.perf_model import Hardware, PerfModel  # noqa: F401
+from repro.core.planner import (  # noqa: F401
+    Deployment,
+    PlanResult,
+    WorkerGroup,
+    plan,
+    solve_ilp,
+    uniform_candidates,
+)
+from repro.core.reordering import reorder_queue  # noqa: F401
+from repro.core.routing import RouteDecision, RoutingConfig, route_prefill  # noqa: F401
+from repro.core.simulator import SimConfig, SimResult, Simulation, simulate_deployment  # noqa: F401
+from repro.core.types import PrefillTask, RoundSpec, Session, SLOSpec  # noqa: F401

@@ -1,0 +1,202 @@
+"""Piecewise alpha-beta performance model (paper §3).
+
+Three cost functions, each per parallelism strategy theta (= TP degree of the
+worker's mesh slice):
+
+  T_pre(l_hist, l_incr; theta)  — prefill a chunk of l_incr tokens whose
+      session already holds l_hist tokens of KV.  alpha (dispatch floor)
+      + beta*l_incr (linear FLOPs term) + gamma*l_incr*(l_hist + l_incr/2)
+      (attention term).  The *piecewise* part: the max() with the dispatch
+      floor models the latency-bound small-chunk regime.
+  T_dec(b; theta[, l_ctx])      — one decode step of a batch of b sessions.
+      Weight-read floor + per-sequence KV-read slope (memory-bound).
+  T_kv(l_ctx; theta_src, theta_dst) — Hockney alpha-beta session-state
+      transfer across worker slices, with a resharding penalty when the
+      source/destination layouts differ.
+
+Coefficients come from either (a) analytic TPU v5e constants + the
+ModelConfig (defaults — what the planner uses before any profiling), or
+(b) least-squares fits of measured step times (``fit_from_samples``), the
+offline profiler path (§3).  For attention-free archs the gamma (l_hist)
+term fits to ~0 automatically — AMPD's scheduling needs no special-casing
+(DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class Hardware:
+    peak_flops: float = 197.0e12        # bf16 / chip (TPU v5e)
+    hbm_bw: float = 819.0e9             # bytes/s / chip
+    ici_bw: float = 50.0e9              # bytes/s / link
+    mfu_prefill: float = 0.55           # achievable fraction, compute-bound
+    mbu_decode: float = 0.70            # achievable fraction, memory-bound
+    dispatch_floor: float = 2.0e-3      # s, per prefill call
+    decode_floor: float = 1.5e-3        # s, per decode step
+    kv_setup: float = 0.5e-3            # s, per transfer (lazy-read metadata)
+    reshard_penalty: float = 1.2        # theta_src != theta_dst factor
+    dtype_bytes: int = 2
+
+
+@dataclass
+class PrefillCoeffs:
+    alpha: float
+    beta: float        # s / token
+    gamma: float       # s / (token * ctx-token)
+
+
+@dataclass
+class DecodeCoeffs:
+    alpha: float
+    beta: float        # s / sequence (weight+state reads amortize)
+    gamma: float       # s / (sequence * ctx-token)  (KV reads)
+
+
+@dataclass
+class KvCoeffs:
+    alpha: float
+    inv_bw: float      # s / byte
+
+
+class PerfModel:
+    def __init__(self, cfg: ModelConfig, hw: Hardware = Hardware(),
+                 tp_degrees: Sequence[int] = (1, 2, 4, 8, 16)):
+        self.cfg = cfg
+        self.hw = hw
+        self.tp_degrees = tuple(tp_degrees)
+        self.pre: Dict[int, PrefillCoeffs] = {}
+        self.dec: Dict[int, DecodeCoeffs] = {}
+        self.kv: KvCoeffs = self._analytic_kv()
+        for tp in self.tp_degrees:
+            self.pre[tp] = self._analytic_prefill(tp)
+            self.dec[tp] = self._analytic_decode(tp)
+
+    # ------------------------------------------------------------------
+    # Analytic defaults
+    # ------------------------------------------------------------------
+    def _analytic_prefill(self, tp: int) -> PrefillCoeffs:
+        cfg, hw = self.cfg, self.hw
+        n_active = cfg.active_param_count()
+        flops_per_tok = 2.0 * n_active
+        eff = tp * hw.peak_flops * hw.mfu_prefill
+        beta = flops_per_tok / eff
+        # attention: 4 * L_attn * H * hd flops per (q, ctx) token pair
+        pat = cfg.pattern_for_depth()
+        n_attn = sum(1 for k in pat if k == "attn")
+        n_local = sum(1 for k in pat if k == "local")
+        hhd = cfg.num_heads * cfg.resolved_head_dim
+        gamma = 4.0 * n_attn * hhd / eff
+        # local layers cap the ctx term at the window; fold an average in
+        if n_local and cfg.sliding_window:
+            gamma += 4.0 * n_local * hhd / eff * 0.1  # bounded-window correction
+        return PrefillCoeffs(alpha=hw.dispatch_floor, beta=beta, gamma=gamma)
+
+    def _analytic_decode(self, tp: int) -> DecodeCoeffs:
+        cfg, hw = self.cfg, self.hw
+        bw = tp * hw.hbm_bw * hw.mbu_decode
+        weight_bytes = cfg.active_param_count() * hw.dtype_bytes
+        alpha = hw.decode_floor + weight_bytes / bw
+        kv_tok = cfg.kv_bytes_per_token(hw.dtype_bytes)
+        # O(1)-state archs read their fixed state per step instead
+        state_bytes = cfg.session_state_bytes(0, hw.dtype_bytes)
+        beta = state_bytes / bw + 64.0 * cfg.d_model * hw.dtype_bytes / bw
+        gamma = kv_tok / bw
+        return DecodeCoeffs(alpha=alpha, beta=beta, gamma=gamma)
+
+    def _analytic_kv(self) -> KvCoeffs:
+        hw = self.hw
+        return KvCoeffs(alpha=hw.kv_setup, inv_bw=1.0 / hw.ici_bw)
+
+    # ------------------------------------------------------------------
+    # Cost functions (paper §3)
+    # ------------------------------------------------------------------
+    def _tp(self, tp: int) -> int:
+        if tp in self.pre:
+            return tp
+        # snap to nearest available degree
+        return min(self.tp_degrees, key=lambda t: abs(t - tp))
+
+    def t_pre(self, l_hist: int, l_incr: int, tp: int,
+              speed: float = 1.0) -> float:
+        c = self.pre[self._tp(tp)]
+        lin = c.beta * l_incr + c.gamma * l_incr * (l_hist + l_incr / 2.0)
+        return (c.alpha + lin) / speed
+
+    def t_dec(self, batch: int, tp: int, avg_ctx: float = 0.0,
+              speed: float = 1.0) -> float:
+        c = self.dec[self._tp(tp)]
+        return (c.alpha + c.beta * batch + c.gamma * batch * avg_ctx) / speed
+
+    def t_kv(self, l_ctx: int, tp_src: int, tp_dst: int) -> float:
+        nbytes = self.cfg.session_state_bytes(l_ctx, self.hw.dtype_bytes)
+        links = min(self._tp(tp_src), self._tp(tp_dst))
+        t = self.kv.alpha + nbytes * self.kv.inv_bw / max(links, 1)
+        if tp_src != tp_dst:
+            t *= self.hw.reshard_penalty
+        return t
+
+    # ------------------------------------------------------------------
+    # Profiler fits (§3 offline stage)
+    # ------------------------------------------------------------------
+    def fit_prefill(self, tp: int,
+                    samples: Iterable[Tuple[int, int, float]]) -> None:
+        """samples: (l_hist, l_incr, seconds) measured by the profiler."""
+        rows, ys = [], []
+        for l_hist, l_incr, t in samples:
+            rows.append([1.0, l_incr, l_incr * (l_hist + l_incr / 2.0)])
+            ys.append(t)
+        coef, *_ = np.linalg.lstsq(np.asarray(rows), np.asarray(ys), rcond=None)
+        a, b, g = (max(float(v), 0.0) for v in coef)
+        self.pre[tp] = PrefillCoeffs(alpha=a, beta=b, gamma=g)
+
+    def fit_decode(self, tp: int,
+                   samples: Iterable[Tuple[int, float, float]]) -> None:
+        """samples: (batch, avg_ctx, seconds)."""
+        rows, ys = [], []
+        for b, ctx, t in samples:
+            rows.append([1.0, b, b * ctx])
+            ys.append(t)
+        coef, *_ = np.linalg.lstsq(np.asarray(rows), np.asarray(ys), rcond=None)
+        a, b_, g = (max(float(v), 0.0) for v in coef)
+        self.dec[tp] = DecodeCoeffs(alpha=a, beta=b_, gamma=g)
+
+    def fit_kv(self, samples: Iterable[Tuple[int, float]]) -> None:
+        """samples: (l_ctx, seconds) at equal src/dst layouts."""
+        rows, ys = [], []
+        for l_ctx, t in samples:
+            rows.append([1.0, float(self.cfg.session_state_bytes(l_ctx))])
+            ys.append(t)
+        coef, *_ = np.linalg.lstsq(np.asarray(rows), np.asarray(ys), rcond=None)
+        self.kv = KvCoeffs(alpha=max(float(coef[0]), 0.0),
+                           inv_bw=max(float(coef[1]), 0.0))
+
+    # ------------------------------------------------------------------
+    # Eq. (1) / Eq. (2) — scheduling cost estimates
+    # ------------------------------------------------------------------
+    def local_cost(self, task, decode_worker) -> float:
+        """Eq. (1): execute + queue on the bound decode worker."""
+        tp, speed = decode_worker.tp, getattr(decode_worker, "speed", 1.0)
+        t = self.t_pre(task.l_hist, task.l_incr, tp, speed)
+        for k in decode_worker.prefill_queue:
+            t += self.t_pre(k.l_hist, k.l_incr, tp, speed)
+        return t
+
+    def remote_cost(self, task, decode_worker, prefill_worker) -> float:
+        """Eq. (2): prefill + KV back-and-forth + queueing."""
+        tp_p = prefill_worker.tp
+        tp_d = decode_worker.tp
+        speed = getattr(prefill_worker, "speed", 1.0)
+        t_pre = self.t_pre(task.l_hist, task.l_incr, tp_p, speed)
+        t_kv = (self.t_kv(task.l_hist, tp_d, tp_p)       # lazy history read
+                + self.t_kv(task.l_incr, tp_p, tp_d))    # incremental KV back
+        t_queue = sum(self.t_pre(k.l_hist, k.l_incr, tp_p, speed)
+                      for k in prefill_worker.prefill_queue)
+        return t_pre + t_kv + t_queue

@@ -1,0 +1,218 @@
+"""Offline deployment planner (paper §5, Eq. 5).
+
+Faithful ILP: decision vectors x (prefill) / y (decode) indexed by model-
+parallel degree n in T = {1,2,4,8,16}; auxiliary Z bounds the worst
+instantiated worker's P95 latency; capacity sum(n*(x+y)) <= N.  The
+"Z >= tau(n) where x(n) >= 1" conditionals become big-M constraints with
+indicator binaries; solved by ``scipy.optimize.milp`` (HiGHS — same family
+as the paper's SCIP/HiGHS usage).
+
+Practical layer on top (what Table 2 evaluates): ``plan()`` computes
+load-aware tau coefficients by simulating a single worker of each degree at
+its fair-share arrival rate, solves the ILP, and then *ranks* uniform
+(P:<TP,DP>, D:<TP,DP>) deployments by full-simulation SLO attainment —
+returning planner-predicted vs simulated top-k for the Table 2 comparison.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+from scipy.optimize import Bounds, LinearConstraint, milp
+
+from repro.core.perf_model import PerfModel
+
+
+@dataclass(frozen=True)
+class WorkerGroup:
+    tp: int
+    count: int
+
+
+@dataclass
+class Deployment:
+    prefill: Tuple[WorkerGroup, ...]
+    decode: Tuple[WorkerGroup, ...]
+
+    def gpus(self) -> int:
+        return (sum(g.tp * g.count for g in self.prefill)
+                + sum(g.tp * g.count for g in self.decode))
+
+    def label(self) -> str:
+        p = "+".join(f"<TP={g.tp},DP={g.count}>" for g in self.prefill)
+        d = "+".join(f"<TP={g.tp},DP={g.count}>" for g in self.decode)
+        return f"P:{p}, D:{d}"
+
+
+@dataclass
+class ILPSolution:
+    x: Dict[int, int]
+    y: Dict[int, int]
+    z: float
+    status: str
+    solve_seconds: float
+
+    def deployment(self) -> Deployment:
+        return Deployment(
+            prefill=tuple(WorkerGroup(n, c) for n, c in sorted(self.x.items())
+                          if c > 0),
+            decode=tuple(WorkerGroup(n, c) for n, c in sorted(self.y.items())
+                         if c > 0),
+        )
+
+
+def solve_ilp(
+    tau_pre: Dict[int, float],
+    tau_dec: Dict[int, float],
+    N: int,
+    degrees: Sequence[int] = (1, 2, 4, 8, 16),
+    *,
+    prefer_full_use: bool = True,
+) -> ILPSolution:
+    """Eq. (5).  Variables: [x_n..] [y_n..] [dx_n..] [dy_n..] [Z]."""
+    T = [n for n in degrees if n <= N]
+    k = len(T)
+    nv = 4 * k + 1
+    iZ = 4 * k
+    big_m = 2.0 * max(list(tau_pre.values()) + list(tau_dec.values()) + [1.0])
+
+    # objective: minimize Z (plus a tiny bonus per GPU used, tie-breaking
+    # toward full utilization as §5's discussion prescribes)
+    c = np.zeros(nv)
+    c[iZ] = 1.0
+    if prefer_full_use:
+        for j, n in enumerate(T):
+            c[j] = -1e-9 * n          # x_n
+            c[k + j] = -1e-9 * n      # y_n
+
+    cons: List[LinearConstraint] = []
+
+    # capacity (C3)
+    cap = np.zeros(nv)
+    for j, n in enumerate(T):
+        cap[j] = n
+        cap[k + j] = n
+    cons.append(LinearConstraint(cap, -np.inf, N))
+
+    for j, n in enumerate(T):
+        # link x_n with indicator dx_n:  x_n <= N*dx_n  and  x_n >= dx_n
+        a = np.zeros(nv); a[j] = 1.0; a[2 * k + j] = -float(N)
+        cons.append(LinearConstraint(a, -np.inf, 0.0))
+        a = np.zeros(nv); a[j] = 1.0; a[2 * k + j] = -1.0
+        cons.append(LinearConstraint(a, 0.0, np.inf))
+        # (C1):  Z >= tau_pre(n) - M*(1 - dx_n)
+        a = np.zeros(nv); a[iZ] = 1.0; a[2 * k + j] = -big_m
+        cons.append(LinearConstraint(a, tau_pre[n] - big_m, np.inf))
+        # same for y / dy
+        a = np.zeros(nv); a[k + j] = 1.0; a[3 * k + j] = -float(N)
+        cons.append(LinearConstraint(a, -np.inf, 0.0))
+        a = np.zeros(nv); a[k + j] = 1.0; a[3 * k + j] = -1.0
+        cons.append(LinearConstraint(a, 0.0, np.inf))
+        a = np.zeros(nv); a[iZ] = 1.0; a[3 * k + j] = -big_m
+        cons.append(LinearConstraint(a, tau_dec[n] - big_m, np.inf))
+
+    # at least one worker of each phase
+    a = np.zeros(nv); a[2 * k:3 * k] = 1.0
+    cons.append(LinearConstraint(a, 1.0, np.inf))
+    a = np.zeros(nv); a[3 * k:4 * k] = 1.0
+    cons.append(LinearConstraint(a, 1.0, np.inf))
+
+    integrality = np.ones(nv)
+    integrality[iZ] = 0.0
+    lb = np.zeros(nv)
+    ub = np.full(nv, float(N))
+    ub[2 * k:4 * k] = 1.0
+    ub[iZ] = np.inf
+
+    t0 = time.time()
+    res = milp(c=c, constraints=cons, integrality=integrality,
+               bounds=Bounds(lb, ub))
+    dt = time.time() - t0
+    if not res.success:
+        return ILPSolution({}, {}, float("inf"), f"failed:{res.message}", dt)
+    xs = {n: int(round(res.x[j])) for j, n in enumerate(T)}
+    ys = {n: int(round(res.x[k + j])) for j, n in enumerate(T)}
+    return ILPSolution(xs, ys, float(res.x[iZ]), "optimal", dt)
+
+
+# ---------------------------------------------------------------------------
+# Load-aware planning + Table-2 style ranking
+# ---------------------------------------------------------------------------
+
+def uniform_candidates(N: int,
+                       degrees: Sequence[int] = (1, 2, 4, 8, 16),
+                       ) -> List[Deployment]:
+    """All P:<TP,DP> + D:<TP,DP> single-degree deployments fitting N GPUs."""
+    out = []
+    for np_, nd in itertools.product(degrees, degrees):
+        if np_ > N or nd > N:
+            continue
+        for dpp in range(1, N // np_ + 1):
+            rem = N - np_ * dpp
+            if rem < nd:
+                continue
+            for dpd in range(1, rem // nd + 1):
+                out.append(Deployment((WorkerGroup(np_, dpp),),
+                                      (WorkerGroup(nd, dpd),)))
+    return out
+
+
+@dataclass
+class PlanResult:
+    ilp: ILPSolution
+    ranked: List[Tuple[Deployment, float, float]]  # (dep, slo_attainment, p95_e2e)
+    tau_pre: Dict[int, float]
+    tau_dec: Dict[int, float]
+
+    def top(self, k: int = 3) -> List[Deployment]:
+        return [d for d, _, _ in self.ranked[:k]]
+
+
+def plan(
+    perf: PerfModel,
+    make_trace,                   # () -> List[Session]  (fresh trace copy)
+    N: int,
+    slo,
+    *,
+    degrees: Sequence[int] = (1, 2, 4, 8, 16),
+    simulate=None,                # injected: (deployment, sessions, slo) -> SimResult
+    tau_rate_scale: float = 1.0,
+    max_candidates: int = 64,
+    seed: int = 0,
+) -> PlanResult:
+    """Full offline planning: tau coefficients -> ILP -> ranked candidates."""
+    from repro.core.simulator import simulate_deployment  # lazy (cycle)
+    simulate = simulate or simulate_deployment
+
+    # tau(n): P95 latency of a single worker at its fair GPU share of traffic.
+    tau_pre: Dict[int, float] = {}
+    tau_dec: Dict[int, float] = {}
+    for n in degrees:
+        if n > N:
+            continue
+        share = n / N * tau_rate_scale
+        sessions = make_trace()
+        # thin the trace to the worker's share
+        keep = max(1, int(len(sessions) * share))
+        sub = sessions[:keep]
+        dep = Deployment((WorkerGroup(n, 1),), (WorkerGroup(n, 1),))
+        r = simulate(perf, dep, sub, slo, seed=seed)
+        tau_pre[n] = r.p95_ttft if r.p95_ttft > 0 else 1e-3
+        tau_dec[n] = r.p95_itl * 50 if r.p95_itl > 0 else 1e-3  # per-50-token unit
+
+    ilp = solve_ilp(tau_pre, tau_dec, N, [n for n in degrees if n <= N])
+
+    cands = uniform_candidates(N, degrees)
+    if len(cands) > max_candidates:
+        stride = len(cands) / max_candidates
+        cands = [cands[int(i * stride)] for i in range(max_candidates)]
+    ranked = []
+    for dep in cands:
+        sessions = make_trace()
+        r = simulate(perf, dep, sessions, slo, seed=seed)
+        ranked.append((dep, r.slo_attainment, r.p95_e2e))
+    ranked.sort(key=lambda t: (-t[1], t[2]))
+    return PlanResult(ilp=ilp, ranked=ranked, tau_pre=tau_pre, tau_dec=tau_dec)

@@ -1,0 +1,80 @@
+"""TTFT-aware prefill reordering policy (paper §4.2, Algorithm 2).
+
+To schedule the next task from a prefill queue: peek a lookahead window of
+w head tasks, enumerate feasible orderings, predict each task's completion
+(Eq. 3) and count TTFT-SLO-satisfying tasks (Eq. 4); commit the argmax
+ordering and dequeue its head.  Starvation control: a task postponed (moved
+later than its FCFS position) more than w times pins orderings that would
+postpone it again.
+
+Window size is small (w <= 5 in practice) so the w! enumeration is trivial;
+orderings are visited in lexicographic index order, which makes FCFS the
+tie-break winner.
+"""
+from __future__ import annotations
+
+from itertools import permutations
+from typing import Callable, List, Optional, Sequence
+
+from repro.core.types import PrefillTask
+
+
+def predict_satisfied(
+    ordering: Sequence[PrefillTask],
+    now: float,
+    ttft_thres: float,
+    est_time: Callable[[PrefillTask], float],
+) -> int:
+    """Eq. (3)-(4): completion times under `ordering`, count SLO-satisfying."""
+    t, sat = 0.0, 0
+    for task in ordering:
+        t += est_time(task)                      # C^{pi(k)}
+        waited = now - task.enqueue_time
+        if waited + t <= ttft_thres:
+            sat += 1
+    return sat
+
+
+def reorder_queue(
+    queue: List[PrefillTask],
+    now: float,
+    ttft_thres: float,
+    est_time: Callable[[PrefillTask], float],
+    w: int = 3,
+) -> List[PrefillTask]:
+    """Algorithm 2: reorder the first w tasks in-place; returns the queue.
+
+    The caller dequeues queue[0] afterwards.
+    """
+    if len(queue) <= 1 or w <= 1:
+        return queue
+    W = queue[:w]
+    n = len(W)
+
+    best_perm: Optional[tuple] = None
+    best_s = -1
+    for perm in permutations(range(n)):
+        # postponement capacity (lines 3-4): a task at original index i that
+        # has exhausted its budget may not move later than i
+        if any(W[idx].postponements >= w and pos > idx
+               for pos, idx in enumerate(perm)):
+            continue
+        s = predict_satisfied([W[i] for i in perm], now, ttft_thres, est_time)
+        if s > best_s:
+            best_s, best_perm = s, perm
+
+    if best_perm is None:                        # all orderings pinned: FCFS
+        best_perm = tuple(range(n))
+
+    # line 7: increment postponement counters for postponed tasks
+    for pos, idx in enumerate(best_perm):
+        if pos > idx:
+            W[idx].postponements += 1
+
+    queue[:w] = [W[i] for i in best_perm]
+    return queue
+
+
+def fcfs_queue(queue: List[PrefillTask], *_args, **_kw) -> List[PrefillTask]:
+    """Baseline no-op policy."""
+    return queue

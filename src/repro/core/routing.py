@@ -1,0 +1,92 @@
+"""Adaptive routing mechanism (paper §4.1, Algorithm 1).
+
+Decides *where* each (initial or incremental) prefill task executes:
+  1. any prefill worker with windowed TTFT <= alpha * TTFT_thres -> remote
+     (workers probed in random order for load spreading);
+  2. else if the bound decode worker's windowed ITL <= beta * ITL_thres
+     -> local (pause its decode batch for one prefill);
+  3. else argmin over estimated costs: Eq. (1) local vs Eq. (2) remote
+     (prefill + KV round-trip + queueing), via the perf model.
+
+Consumed by both the discrete-event simulator and the live serving runtime —
+the worker arguments are duck-typed views exposing ``tp``, ``speed``,
+``windowed_ttft`` / ``windowed_itl`` and ``prefill_queue``.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.perf_model import PerfModel
+from repro.core.types import PrefillTask
+
+
+@dataclass(frozen=True)
+class RoutingConfig:
+    alpha: float = 0.9               # prefill-side slack factor
+    beta: float = 0.85               # decode-side slack factor
+    ttft_thres: float = 2.0          # seconds
+    itl_thres: float = 0.1           # seconds
+
+
+@dataclass(frozen=True)
+class RouteDecision:
+    kind: str                        # "local" | "remote"
+    worker_idx: Optional[int] = None # prefill worker index for remote
+    est_cost: float = 0.0
+    reason: str = ""
+
+
+def route_prefill(
+    task: PrefillTask,
+    decode_worker,
+    prefill_workers: Sequence,
+    perf: PerfModel,
+    cfg: RoutingConfig,
+    rng: random.Random,
+) -> RouteDecision:
+    """Algorithm 1."""
+    # lines 1-3: slack on the prefill side (random probe order)
+    if prefill_workers:
+        order = list(range(len(prefill_workers)))
+        rng.shuffle(order)
+        for i in order:
+            w = prefill_workers[i]
+            if not getattr(w, "alive", True):
+                continue
+            if w.windowed_ttft <= cfg.alpha * cfg.ttft_thres:
+                return RouteDecision("remote", i, reason="ttft-slack")
+
+    # lines 4-5: slack on the decode side
+    if decode_worker.windowed_itl <= cfg.beta * cfg.itl_thres:
+        return RouteDecision("local", reason="itl-slack")
+
+    # lines 6-9: cost comparison
+    t_local = perf.local_cost(task, decode_worker)
+    best = RouteDecision("local", est_cost=t_local, reason="cost")
+    for i, w in enumerate(prefill_workers):
+        if not getattr(w, "alive", True):
+            continue
+        t_r = perf.remote_cost(task, decode_worker, w)
+        if t_r < best.est_cost:
+            best = RouteDecision("remote", i, est_cost=t_r, reason="cost")
+    return best
+
+
+def always_remote(
+    task: PrefillTask,
+    decode_worker,
+    prefill_workers: Sequence,
+    perf: PerfModel,
+    cfg: RoutingConfig,
+    rng: random.Random,
+) -> RouteDecision:
+    """Dynamo-style baseline: every prefill goes to the least-loaded prefill
+    worker (pure disaggregation, no local execution)."""
+    alive = [(i, w) for i, w in enumerate(prefill_workers)
+             if getattr(w, "alive", True)]
+    if not alive:
+        return RouteDecision("local", reason="no-prefill-workers")
+    i, _ = min(alive, key=lambda iw: perf.remote_cost(task, decode_worker, iw[1]))
+    return RouteDecision("remote", i, reason="always-remote")

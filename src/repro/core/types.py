@@ -1,0 +1,91 @@
+"""Shared task/session datatypes used by the scheduler, simulator and the
+live serving runtime (the paper's algorithms are one library consumed by
+both — DESIGN.md §2)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+@dataclass
+class PrefillTask:
+    """One (initial or incremental) prefill unit of work.
+
+    ``l_hist`` tokens of session history already have KV on the bound decode
+    worker; ``l_incr`` new tokens must be prefilled before decoding resumes.
+    """
+    session_id: int
+    round_idx: int
+    l_hist: int
+    l_incr: int
+    enqueue_time: float                # T_enq — when it entered a prefill queue
+    arrival_time: float                # when the round became runnable
+    is_initial: bool = False
+    postponements: int = 0             # Alg. 2 starvation counter
+    routed_to: Optional[str] = None    # "local" | "remote:<i>"
+
+    @property
+    def total_ctx(self) -> int:
+        return self.l_hist + self.l_incr
+
+
+@dataclass
+class RoundSpec:
+    prefill_len: int                   # l_incr of this round
+    decode_len: int                    # tokens generated before interaction/stop
+    env_delay: float = 0.0             # environment interaction time after decode
+
+
+@dataclass
+class Session:
+    session_id: int
+    arrival_time: float
+    rounds: List[RoundSpec]
+    # runtime state
+    current_round: int = 0
+    context_len: int = 0               # tokens with KV on the decode worker
+    decode_worker: Optional[int] = None
+    ttfts: List[float] = field(default_factory=list)   # one per round
+    itls: List[float] = field(default_factory=list)    # per generated token
+    finish_time: Optional[float] = None
+
+    @property
+    def num_rounds(self) -> int:
+        return len(self.rounds)
+
+    def total_prefill(self) -> int:
+        return sum(r.prefill_len for r in self.rounds)
+
+    def total_decode(self) -> int:
+        return sum(r.decode_len for r in self.rounds)
+
+
+@dataclass
+class SLOSpec:
+    """A request attains its SLO iff every round's TTFT meets ttft_thres AND
+    its ITL statistic meets itl_thres.
+
+    ``itl_quantile``: None -> request-mean TPOT (the discriminating metric —
+    PD interference inflates a co-located worker's mean token latency, which
+    is what AMPD's beta gate protects); otherwise a per-token quantile.
+    """
+    ttft_thres: float                  # seconds, per round
+    itl_thres: float                   # seconds, per token
+    itl_quantile: Optional[float] = None   # None = mean TPOT
+
+    def itl_stat(self, itls: List[float]) -> float:
+        if not itls:
+            return 0.0
+        if self.itl_quantile is None:
+            return sum(itls) / len(itls)
+        srt = sorted(itls)
+        return srt[min(len(srt) - 1, int(self.itl_quantile * len(srt)))]
+
+    def satisfied(self, s: Session) -> bool:
+        if not s.ttfts or len(s.ttfts) < s.num_rounds:
+            return False               # never completed
+        if any(t > self.ttft_thres for t in s.ttfts):
+            return False
+        if s.itls and self.itl_stat(s.itls) > self.itl_thres:
+            return False
+        return True

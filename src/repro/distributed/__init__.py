@@ -1,0 +1,9 @@
+from repro.distributed.sharding import (  # noqa: F401
+    ShardingEnv,
+    axis_rules,
+    current_env,
+    logical_spec,
+    named_sharding,
+    shard,
+    make_rules,
+)

@@ -1,0 +1,1 @@
+from repro.kernels.decode_attn.ops import combine_partials, decode_attention  # noqa: F401

@@ -1,0 +1,86 @@
+"""Jit wrapper for the decode attention kernel.
+
+Framework layout in: q (B, 1, H, hd), cache k/v (B, T, G, hd).  Reshapes to
+GQA groups (rows = q_per_group, padded to a sublane multiple of 8), pads T
+and head_dim, dispatches kernel or oracle, optionally returns flash-decoding
+residuals for the context-parallel combine.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attn import ref as ref_mod
+from repro.kernels.decode_attn.decode_attn import (
+    DEFAULT_BLOCK_KV,
+    INVALID_POS,
+    combine_partials,          # noqa: F401  (re-export)
+    decode_attn_bgrd,
+)
+
+
+def _pad_to(x, axis, mult, value=0):
+    rem = (-x.shape[axis]) % mult
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "attn_softcap", "scale", "block_kv",
+                     "interpret", "force_ref", "return_residuals"))
+def decode_attention(
+    q: jax.Array,                    # (B, 1, H, hd)
+    k: jax.Array,                    # (B, T, G, hd)
+    v: jax.Array,
+    *,
+    q_positions: jax.Array,          # (B, 1)
+    kv_positions: jax.Array,         # (B, T)
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+    scale: float,
+    block_kv: int = DEFAULT_BLOCK_KV,
+    interpret: bool = False,
+    force_ref: bool = False,
+    return_residuals: bool = False,
+):
+    B, S, H, hd = q.shape
+    assert S == 1, "decode takes exactly one new token per sequence"
+    T, G = k.shape[1], k.shape[2]
+    qpg = H // G
+
+    rows = max(8, -(-qpg // 8) * 8)
+    qg = q[:, 0].reshape(B, G, qpg, hd)
+    qg = _pad_to(qg, 2, rows)
+    qp = jnp.broadcast_to(q_positions, (B, rows)).astype(jnp.int32)
+    qp = jnp.where(jnp.arange(rows)[None, :] < qpg, qp, INVALID_POS)
+
+    kt = jnp.swapaxes(k, 1, 2)                               # (B, G, T, hd)
+    vt = jnp.swapaxes(v, 1, 2)
+
+    use_kernel = interpret or jax.default_backend() == "tpu"
+    if force_ref or not use_kernel:
+        o, m, l = ref_mod.ref_decode_attn(
+            qg, kt, vt, qp, kv_positions, scale=scale, window=window,
+            softcap=attn_softcap)
+    else:
+        bkv = min(block_kv, max(128, T))
+        kt = _pad_to(_pad_to(kt, 2, bkv), 3, 128)
+        vt = _pad_to(_pad_to(vt, 2, bkv), 3, 128)
+        qg_p = _pad_to(qg, 3, 128)
+        kp = _pad_to(kv_positions, 1, bkv, value=INVALID_POS).astype(jnp.int32)
+        o, m, l = decode_attn_bgrd(
+            qg_p, kt, vt, qp, kp, scale=scale, window=window,
+            softcap=attn_softcap, block_kv=bkv, interpret=interpret)
+        o = o[..., :hd]
+
+    out = o[:, :, :qpg].reshape(B, 1, H, hd)
+    if return_residuals:
+        return out, m[:, :, :qpg].reshape(B, H), l[:, :, :qpg].reshape(B, H)
+    return out

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for decode attention (one query token per sequence)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+INVALID_POS = -(2 ** 30)
+
+
+def ref_decode_attn(
+    q: jax.Array,                    # (B, G, rows, hd)
+    k: jax.Array,                    # (B, G, T, hd)
+    v: jax.Array,
+    q_positions: jax.Array,          # (B, rows)
+    kv_positions: jax.Array,         # (B, T)
+    *,
+    scale: float,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    s = jnp.einsum("bgrd,bgtd->bgrt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    qp = q_positions[:, None, :, None]
+    kp = kv_positions[:, None, None, :]
+    mask = (kp > INVALID_POS // 2) & (kp <= qp)
+    if window is not None:
+        mask = mask & ((qp - kp) < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m = jnp.max(s, axis=-1)                                   # (B,G,rows)
+    p = jnp.where(mask, jnp.exp(s - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    o = jnp.einsum("bgrt,bgtd->bgrd", p, v.astype(jnp.float32)) / l_safe[..., None]
+    return o.astype(q.dtype), m, l

@@ -1,0 +1,82 @@
+"""Jit wrapper for the flash prefill kernel: padding, layout, dispatch.
+
+Accepts the framework attention layout (B, S, H, hd) / (B, T, G, hd), pads
+S/T to block multiples and head_dim to a 128-lane multiple (zero K padding
+contributes 0 logits; padded KV rows carry INVALID_POS so they mask out), and
+transposes to the kernel's (B, H, S, hd) layout.  Falls back to the pure-jnp
+oracle on non-TPU backends unless ``interpret=True`` is forced (tests).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_prefill import ref as ref_mod
+from repro.kernels.flash_prefill.flash_prefill import (
+    DEFAULT_BLOCK_KV,
+    DEFAULT_BLOCK_Q,
+    INVALID_POS,
+    flash_prefill_bhsd,
+)
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "attn_softcap", "scale",
+                     "block_q", "block_kv", "interpret", "force_ref"))
+def flash_attention(
+    q: jax.Array,                    # (B, S, H, hd)
+    k: jax.Array,                    # (B, T, G, hd)
+    v: jax.Array,
+    *,
+    q_positions: jax.Array,
+    kv_positions: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+    scale: float,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_kv: int = DEFAULT_BLOCK_KV,
+    interpret: bool = False,
+    force_ref: bool = False,
+) -> jax.Array:
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+
+    use_kernel = interpret or jax.default_backend() == "tpu"
+    if force_ref or not use_kernel:
+        qt = jnp.swapaxes(q, 1, 2)
+        kt = jnp.swapaxes(k, 1, 2)
+        vt = jnp.swapaxes(v, 1, 2)
+        out = ref_mod.ref_attention_bhsd(
+            qt, kt, vt, q_positions, kv_positions, scale=scale, causal=causal,
+            window=window, softcap=attn_softcap)
+        return jnp.swapaxes(out, 1, 2)
+
+    bq = min(block_q, max(8, S))
+    bkv = min(block_kv, max(8, T))
+
+    qt = _pad_to(_pad_to(jnp.swapaxes(q, 1, 2), 2, bq), 3, 128)
+    kt = _pad_to(_pad_to(jnp.swapaxes(k, 1, 2), 2, bkv), 3, 128)
+    vt = _pad_to(_pad_to(jnp.swapaxes(v, 1, 2), 2, bkv), 3, 128)
+    qp = _pad_to(q_positions, 1, bq, value=INVALID_POS)
+    kp = _pad_to(kv_positions, 1, bkv, value=INVALID_POS)
+
+    out = flash_prefill_bhsd(
+        qt, kt, vt, qp, kp, scale=scale, causal=causal, window=window,
+        softcap=attn_softcap, block_q=bq, block_kv=bkv, interpret=interpret)
+    out = out[:, :, :S, :hd]
+    return jnp.swapaxes(out, 1, 2)

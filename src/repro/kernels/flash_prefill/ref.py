@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for the flash prefill kernel.
+
+Identical contract to :func:`repro.models.attention.ref_attention` (that
+function is the framework-wide reference; this module re-exposes it so the
+kernel package is self-contained per the kernels/ layout convention).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+INVALID_POS = -(2 ** 30)
+
+
+def ref_attention_bhsd(
+    q: jax.Array,                    # (B, H, S, hd)
+    k: jax.Array,                    # (B, G, T, hd)
+    v: jax.Array,
+    q_positions: jax.Array,          # (B, S)
+    kv_positions: jax.Array,         # (B, T)
+    *,
+    scale: float,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    B, H, S, hd = q.shape
+    G, T = k.shape[1], k.shape[2]
+    qpg = H // G
+    qg = q.reshape(B, G, qpg, S, hd).astype(jnp.float32)
+
+    s = jnp.einsum("bgqsd,bgtd->bgqst", qg, k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+
+    qp = q_positions[:, None, None, :, None]
+    kp = kv_positions[:, None, None, None, :]
+    mask = kp > INVALID_POS // 2
+    if causal:
+        mask = mask & (kp <= qp)
+    if window is not None:
+        mask = mask & ((qp - kp) < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(mask, axis=-1, keepdims=True), p, 0.0)
+    out = jnp.einsum("bgqst,bgtd->bgqsd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, S, hd).astype(q.dtype)

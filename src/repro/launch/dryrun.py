@@ -1,0 +1,343 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The ``XLA_FLAGS`` assignment below MUST stay ahead of any jax import — jax
+locks the device count on first init, and the production meshes need 512
+placeholder host devices.  Smoke tests and benches never import this module.
+
+Per cell this emits an artifact JSON under ``experiments/dryrun/`` holding
+``memory_analysis()``, ``cost_analysis()`` and per-collective byte counts
+parsed from the post-SPMD optimized HLO — the inputs to §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-14b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+  ... --kv-seq-shard --tag cpopt     (perf-iteration variants)
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL_SHAPES, ASSIGNED_ARCHS, cell_supported, get_config, shape_by_name
+from repro.launch.hlo_costs import analyze_hlo
+from repro.launch.mesh import data_axes_of, make_production_mesh
+from repro.launch.steps import (
+    StepOptions,
+    abstract_train_state,
+    build_decode_step,
+    build_prefill_step,
+    build_train_step,
+    default_options,
+    make_env,
+    serve_out_shardings,
+)
+from repro.models import build_model
+from repro.training.optimizer import select_optimizer
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _first_shape_bytes(type_str: str) -> int:
+    """Sum byte sizes of all array shapes in an HLO result type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes moved by each collective kind in optimized HLO.
+
+    Accounting per op (result type = per-device shape post-SPMD):
+      all-gather: result bytes; all-reduce: 2x operand(=result) bytes;
+      reduce-scatter / all-to-all / collective-permute: result bytes.
+    `-start` variants counted once (`-done` carries no type payload of its own
+    in post-optimization HLO dumps that matters here — we match assignment
+    lines only).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    out["counts"] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w\.\-]+\s*=\s*(\([^)]*\)|[^=]+?)\s+"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)(-start)?\(", line)
+        if not m:
+            continue
+        kind = m.group(2)
+        nbytes = _first_shape_bytes(m.group(1))
+        if kind == "all-reduce":
+            nbytes *= 2
+        out[kind] += nbytes
+        out["counts"][kind] += 1
+    return out
+
+
+def analytic_hbm_bytes(arch: str, shape_name: str, multi_pod: bool,
+                       opts: Optional[StepOptions]) -> float:
+    """Per-device HBM traffic estimate for the roofline memory term.
+
+    Weights/cache use EXACT per-device sharded sizes (from the abstract
+    trees); activation traffic is formulaic (~6 residual-stream passes per
+    block in bf16, x3 for fwd+bwd, x1 extra under remat).  TPU-target
+    accounting: flash attention keeps S*T scores in VMEM, so score traffic
+    is excluded.  (XLA's 'bytes accessed' both under-counts while bodies and
+    over-counts fusion-internal traffic, so it is kept only as *_xla_raw.)
+    """
+    import numpy as np
+
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 512 if multi_pod else 256
+    model = build_model(cfg)
+    n_data = 1
+    for a in data_axes_of(mesh):
+        n_data *= mesh.shape[a]
+    o = opts or default_options(cfg, shape, n_data)
+    env = make_env(mesh, cfg, shape, o)
+
+    def tree_dev_bytes(tree) -> float:
+        total = 0.0
+        for leaf in jax.tree.leaves(tree):
+            per = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+            shd = getattr(leaf, "sharding", None)
+            if shd is not None and hasattr(shd, "spec"):
+                for p in shd.spec:
+                    if p is None:
+                        continue
+                    for ax in ((p,) if isinstance(p, str) else p):
+                        per //= mesh.shape[ax]
+            total += per
+        return float(total)
+
+    params_dev = tree_dev_bytes(model.abstract_params(env))
+    tokens_dev = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                       else 1) / chips
+    act_dev = cfg.num_layers * tokens_dev * cfg.d_model * 6 * 2  # bf16 passes
+
+    if shape.kind == "train":
+        opt_mult = 4.0 if cfg.param_count() <= 2e11 else 0.5   # adam vs adafactor
+        passes = 3.0 + (1.0 if o.remat else 0.0)
+        return (params_dev * (2.0 + passes)            # fwd/bwd reads + grads
+                + params_dev * 2.0 * opt_mult          # fp32 moments r/w
+                + act_dev * passes)
+    cache_dev = tree_dev_bytes(
+        model.abstract_cache(shape.global_batch, shape.seq_len, env))
+    if shape.kind == "prefill":
+        return params_dev + cache_dev + act_dev * 1.0
+    # decode: read weights + full cache, tiny writes
+    return params_dev + cache_dev + act_dev
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               opts: Optional[StepOptions] = None):
+    """Returns (lowered, compiled, meta) for one dry-run cell."""
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    ok, reason = cell_supported(cfg, shape)
+    if not ok:
+        raise RuntimeError(f"cell skipped by design: {reason}")
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    n_data = 1
+    for a in data_axes_of(mesh):
+        n_data *= mesh.shape[a]
+    if opts is None:
+        opts = default_options(cfg, shape, n_data)
+    env = make_env(mesh, cfg, shape, opts)
+
+    meta = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "opts": {k: getattr(opts, k) for k in (
+            "expert_mode", "remat", "microbatches", "fsdp", "kv_seq_shard",
+            "seq_shard_activations", "shard_heads")},
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+
+    inputs = model.input_specs(shape, env)
+
+    if shape.kind == "train":
+        opt_cfg = select_optimizer(cfg.param_count())
+        meta["optimizer"] = opt_cfg.name
+        step = build_train_step(model, opt_cfg, env, opts)
+        state = abstract_train_state(model, opt_cfg, env)
+        jitted = jax.jit(step, donate_argnums=(0,))
+        lowered = jitted.lower(state, inputs)
+    elif shape.kind == "prefill":
+        step = build_prefill_step(model, env, opts, max_len=shape.seq_len)
+        jitted = jax.jit(step, out_shardings=serve_out_shardings(
+            model, env, shape.global_batch, shape.seq_len))
+        params = model.abstract_params(env)
+        args = [params, inputs["tokens"]]
+        if "cross_embeds" in inputs:
+            args.append(inputs["cross_embeds"])
+        lowered = jitted.lower(*args)
+    else:  # decode
+        step = build_decode_step(model, env, opts)
+        jitted = jax.jit(step, donate_argnums=(1,),
+                         out_shardings=serve_out_shardings(
+                             model, env, shape.global_batch, shape.seq_len))
+        params = model.abstract_params(env)
+        cache = model.abstract_cache(shape.global_batch, shape.seq_len, env)
+        lowered = jitted.lower(params, cache, inputs["tokens"])
+
+    return lowered, meta
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir: Path,
+             opts: Optional[StepOptions] = None, tag: str = "") -> Dict:
+    t0 = time.time()
+    lowered, meta = lower_cell(arch, shape_name, multi_pod=multi_pod, opts=opts)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    coll = parse_collective_bytes(hlo_text)
+    # Trip-aware accounting: XLA cost_analysis counts while bodies once; the
+    # parser rescales dots/collectives by known_trip_count (hlo_costs.py).
+    trip = analyze_hlo(hlo_text)
+
+    rec = dict(meta)
+    rec.update({
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "flops_per_device": trip["dot_flops_per_device"],
+        "flops_per_device_xla_raw": cost.get("flops", 0.0),
+        "bytes_accessed_per_device": analytic_hbm_bytes(
+            arch, shape_name, multi_pod, opts),
+        "bytes_accessed_xla_raw": cost.get("bytes accessed", 0.0),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+            "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0)
+                           + getattr(mem, "output_size_in_bytes", 0)
+                           + getattr(mem, "temp_size_in_bytes", 0)
+                           - getattr(mem, "alias_size_in_bytes", 0)),
+        },
+        "collective_bytes_per_device": trip["collective_bytes_per_device"],
+        "collective_counts": trip["collective_counts"],
+        "collective_bytes_untripped": {k: coll[k] for k in _COLLECTIVES},
+    })
+
+    mesh_tag = rec["mesh"].replace("x", "_")
+    suffix = f"__{tag}" if tag else ""
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"{arch}__{shape_name}__{mesh_tag}{suffix}.json"
+    path.write_text(json.dumps(rec, indent=2, default=float))
+    print(f"[dryrun] {arch} {shape_name} mesh={rec['mesh']} "
+          f"compile={rec['compile_s']}s "
+          f"flops/dev={rec['flops_per_device']:.3e} "
+          f"peak={rec['memory']['peak_bytes']/2**30:.2f}GiB -> {path}")
+    return rec
+
+
+def opts_from_args(args) -> Optional[StepOptions]:
+    if not (args.kv_seq_shard or args.seq_shard_acts or args.no_fsdp
+            or args.expert_mode or args.microbatches != 1
+            or args.no_shard_heads or args.no_remat):
+        return None
+    base = StepOptions()
+    return StepOptions(
+        expert_mode=args.expert_mode or base.expert_mode,
+        remat=not args.no_remat,
+        microbatches=args.microbatches,
+        fsdp=not args.no_fsdp,
+        kv_seq_shard=args.kv_seq_shard,
+        seq_shard_activations=args.seq_shard_acts,
+        shard_heads=not args.no_shard_heads,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--kv-seq-shard", action="store_true", dest="kv_seq_shard")
+    ap.add_argument("--seq-shard-acts", action="store_true", dest="seq_shard_acts")
+    ap.add_argument("--no-fsdp", action="store_true", dest="no_fsdp")
+    ap.add_argument("--no-remat", action="store_true", dest="no_remat")
+    ap.add_argument("--no-shard-heads", action="store_true", dest="no_shard_heads")
+    ap.add_argument("--expert-mode", choices=["tp", "ep"], default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    opts = opts_from_args(args)
+
+    cells = []
+    if args.all:
+        for arch in ASSIGNED_ARCHS:
+            cfg = get_config(arch)
+            for shp in ALL_SHAPES:
+                cells.append((arch, shp.name, cfg, shp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells.append((args.arch, args.shape, get_config(args.arch),
+                      shape_by_name(args.shape)))
+
+    failures = []
+    for arch, shp_name, cfg, shp in cells:
+        ok, reason = cell_supported(cfg, shp)
+        if not ok:
+            print(f"[dryrun] SKIP {arch} {shp_name}: {reason}")
+            continue
+        for mp in meshes:
+            try:
+                run_cell(arch, shp_name, multi_pod=mp, out_dir=out_dir,
+                         opts=opts, tag=args.tag)
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                failures.append((arch, shp_name, mp, str(e)[:200]))
+            finally:
+                jax.clear_caches()  # keep sequential 80-cell sweeps bounded
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:")
+        for f in failures:
+            print("   ", f)
+        raise SystemExit(1)
+    print("[dryrun] all requested cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,224 @@
+"""Builders for the three jit-able step functions the framework lowers:
+
+  train_step   (state, batch)            -> (state, metrics)
+  prefill_step (params, tokens[, cross]) -> (cache, last_logits)
+  decode_step  (params, cache, tokens)   -> (cache, last_logits)   [donates cache]
+
+Each builder takes a ``ShardingEnv`` (mesh + logical-axis rules) and a
+``StepOptions`` knob set — the §Perf hillclimb changes ONLY these knobs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import ShardingEnv, axis_rules, make_rules, shard
+from repro.launch.mesh import data_axes_of
+from repro.models import Model
+from repro.models.transformer import cache_shardings, forward_cached, forward_train, init_cache
+from repro.training.optimizer import (
+    OptimizerConfig,
+    abstract_opt_state,
+    apply_updates,
+    init_opt_state,
+)
+
+
+@dataclass(frozen=True)
+class StepOptions:
+    attn_impl: str = "auto"
+    expert_mode: str = "tp"              # "tp" | "ep"
+    remat: bool = True
+    microbatches: int = 1
+    fsdp: bool = True                    # shard param embed dim over data (train)
+    fsdp_over_pod: bool = False          # extend FSDP to the pod axis
+    kv_seq_shard: bool = True            # context-parallel KV caches (serve)
+    seq_shard_activations: bool = True   # SP / context-parallel fallback
+    shard_heads: bool = True
+    moe_aux_coef: float = 0.01
+
+
+def default_options(cfg: ModelConfig, shape: ShapeConfig,
+                    n_data: int) -> StepOptions:
+    ep_ok = cfg.num_experts and cfg.num_experts % n_data == 0
+    # EP is mandatory for archs whose expert weights exceed one TP group
+    # (kimi-k2, dbrx — DESIGN.md §5); TP-MoE suffices for mixtral-scale.
+    need_ep = ep_ok and cfg.param_count() > 8.0e10
+    return StepOptions(
+        expert_mode="ep" if need_ep else "tp",
+        remat=shape.kind == "train",
+        fsdp=shape.kind == "train",
+    )
+
+
+def make_env(mesh, cfg: ModelConfig, shape: ShapeConfig,
+             opts: StepOptions) -> ShardingEnv:
+    data_axes = data_axes_of(mesh)
+    n_data = 1
+    for a in data_axes:
+        n_data *= mesh.shape[a]
+    batch_shardable = shape.global_batch % max(1, n_data) == 0
+    rules = make_rules(
+        mode=shape.kind,
+        data_axes=data_axes,
+        seq_shard_activations=opts.seq_shard_activations,
+        kv_seq_shard=opts.kv_seq_shard,
+        expert_sharding="ep" if opts.expert_mode == "ep" else "tp",
+        shard_heads=opts.shard_heads,
+        batch_shardable=batch_shardable,
+    )
+    if opts.expert_mode == "ep":
+        rules["experts"] = "data"
+    if opts.fsdp and shape.kind == "train":
+        rules["embed"] = ("pod", "data") if opts.fsdp_over_pod else "data"
+    return ShardingEnv(mesh=mesh, rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """logits (B, S, V) fp32 (vocab-sharded ok), targets (B, S) -> scalar."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def build_train_step(model: Model, opt_cfg: OptimizerConfig,
+                     env: ShardingEnv, opts: StepOptions):
+    cfg = model.cfg
+
+    def loss_fn(params, tokens, cross_embeds):
+        logits, aux = forward_train(
+            cfg, params, tokens, cross_embeds=cross_embeds,
+            impl=opts.attn_impl, expert_mode=opts.expert_mode,
+            remat=opts.remat)
+        logits = shard(logits, "batch", "seq", "vocab")
+        ce = cross_entropy(logits[:, :-1], tokens[:, 1:])
+        loss = ce
+        if "moe_aux_loss" in aux:
+            loss = loss + opts.moe_aux_coef * aux["moe_aux_loss"]
+        return loss, (ce, aux)
+
+    def train_step(state, batch):
+        with axis_rules(env):
+            tokens = batch["tokens"]
+            cross = batch.get("cross_embeds")
+            params = state["params"]
+            if opts.microbatches > 1:
+                n = opts.microbatches
+                B = tokens.shape[0]
+                assert B % n == 0, (B, n)
+                tk = tokens.reshape(n, B // n, -1)
+                cr = (cross.reshape((n, B // n) + cross.shape[1:])
+                      if cross is not None else None)
+
+                def micro(acc, xs):
+                    t = xs[0]
+                    c = xs[1] if cr is not None else None
+                    (l, (ce, _)), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                        params, t, c)
+                    acc_g, acc_l, acc_ce = acc
+                    acc_g = jax.tree.map(jnp.add, acc_g, g)
+                    return (acc_g, acc_l + l, acc_ce + ce), None
+
+                zero_g = jax.tree.map(jnp.zeros_like, params)
+                (g_sum, l_sum, ce_sum), _ = jax.lax.scan(
+                    micro, (zero_g, 0.0, 0.0),
+                    (tk, cr) if cr is not None else (tk,))
+                grads = jax.tree.map(lambda g: g / n, g_sum)
+                loss, ce = l_sum / n, ce_sum / n
+            else:
+                (loss, (ce, _)), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, tokens, cross)
+
+            new_p, new_opt, om = apply_updates(
+                opt_cfg, params, grads, state["opt"], state["step"])
+            metrics = {"loss": loss, "ce": ce, **om}
+            return {"params": new_p, "opt": new_opt,
+                    "step": state["step"] + 1}, metrics
+
+    return train_step
+
+
+def abstract_train_state(model: Model, opt_cfg: OptimizerConfig,
+                         env: Optional[ShardingEnv]):
+    ap = model.abstract_params(env)
+    return {"params": ap,
+            "opt": abstract_opt_state(opt_cfg, ap),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def init_train_state(model: Model, opt_cfg: OptimizerConfig, key: jax.Array):
+    params = model.init(key)
+    return {"params": params,
+            "opt": init_opt_state(opt_cfg, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+def build_prefill_step(model: Model, env: Optional[ShardingEnv],
+                       opts: StepOptions, max_len: int):
+    cfg = model.cfg
+    is_vlm = cfg.frontend == "vision"
+
+    def prefill_step(params, tokens, cross_embeds=None):
+        with axis_rules(env):
+            B = tokens.shape[0]
+            cache = init_cache(cfg, B, max_len)
+            cache, logits, _ = forward_cached(
+                cfg, params, cache, tokens,
+                cross_embeds=cross_embeds if is_vlm else None,
+                compute_cross=is_vlm and cross_embeds is not None,
+                impl=opts.attn_impl, expert_mode=opts.expert_mode)
+            return cache, logits
+
+    return prefill_step
+
+
+def build_incr_prefill_step(model: Model, env: Optional[ShardingEnv],
+                            opts: StepOptions):
+    """Incremental prefill: extends an EXISTING cache with a new chunk."""
+    cfg = model.cfg
+
+    def incr_prefill_step(params, cache, tokens):
+        with axis_rules(env):
+            cache, logits, _ = forward_cached(
+                cfg, params, cache, tokens,
+                impl=opts.attn_impl, expert_mode=opts.expert_mode)
+            return cache, logits
+
+    return incr_prefill_step
+
+
+def build_decode_step(model: Model, env: Optional[ShardingEnv],
+                      opts: StepOptions):
+    cfg = model.cfg
+
+    def decode_step(params, cache, tokens):
+        with axis_rules(env):
+            cache, logits, _ = forward_cached(
+                cfg, params, cache, tokens,
+                impl=opts.attn_impl, expert_mode=opts.expert_mode)
+            return cache, logits
+
+    return decode_step
+
+
+def serve_out_shardings(model: Model, env: Optional[ShardingEnv],
+                        batch: int, max_len: int):
+    """(cache, logits) out shardings for prefill/decode jits."""
+    if env is None:
+        return None
+    cache_sh = cache_shardings(model.cfg, env, batch, max_len)
+    logits_sh = env.sharding(("batch", "vocab"),
+                             (batch, model.cfg.vocab_size))
+    return (cache_sh, logits_sh)

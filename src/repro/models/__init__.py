@@ -1,0 +1,84 @@
+"""Public model API: ``build_model("qwen2.5-14b")`` -> :class:`Model`."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig, ShapeConfig, get_config
+from repro.distributed.sharding import ShardingEnv
+from repro.models import transformer as tfm
+from repro.models.transformer import (  # noqa: F401
+    abstract_cache,
+    abstract_params,
+    cache_shardings,
+    forward_cached,
+    forward_train,
+    init_cache,
+    init_params,
+    model_template,
+)
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- params ---------------------------------------------------------
+    def init(self, key: jax.Array):
+        return tfm.init_params(self.cfg, key)
+
+    def abstract_params(self, env: Optional[ShardingEnv] = None):
+        return tfm.abstract_params(self.cfg, env)
+
+    # -- caches ---------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        return tfm.init_cache(self.cfg, batch, max_len)
+
+    def abstract_cache(self, batch: int, max_len: int,
+                       env: Optional[ShardingEnv] = None):
+        return tfm.abstract_cache(self.cfg, batch, max_len, env)
+
+    # -- forwards ---------------------------------------------------------
+    def forward_train(self, params, tokens, **kw):
+        return tfm.forward_train(self.cfg, params, tokens, **kw)
+
+    def forward_cached(self, params, cache, tokens, **kw):
+        return tfm.forward_cached(self.cfg, params, cache, tokens, **kw)
+
+    # -- abstract inputs for dry-runs -------------------------------------
+    def input_specs(self, shape: ShapeConfig,
+                    env: Optional[ShardingEnv] = None) -> Dict[str, Any]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+
+        def sds(shp, dtype, logical):
+            if env is None:
+                return jax.ShapeDtypeStruct(shp, dtype)
+            return jax.ShapeDtypeStruct(shp, dtype,
+                                        sharding=env.sharding(logical, shp))
+
+        if shape.kind == "train":
+            specs = {"tokens": sds((B, S), jnp.int32, ("batch", "seq"))}
+            if cfg.frontend == "vision":
+                specs["cross_embeds"] = sds((B, cfg.frontend_tokens, cfg.d_model),
+                                            jnp.dtype(cfg.dtype),
+                                            ("batch", "img_seq", "embed"))
+            return specs
+        if shape.kind == "prefill":
+            specs = {"tokens": sds((B, S), jnp.int32, ("batch", "seq"))}
+            if cfg.frontend == "vision":
+                specs["cross_embeds"] = sds((B, cfg.frontend_tokens, cfg.d_model),
+                                            jnp.dtype(cfg.dtype),
+                                            ("batch", "img_seq", "embed"))
+            return specs
+        if shape.kind == "decode":
+            return {"tokens": sds((B, 1), jnp.int32, ("batch", "seq"))}
+        raise ValueError(shape.kind)
+
+
+def build_model(arch: Union[str, ModelConfig]) -> Model:
+    cfg = get_config(arch) if isinstance(arch, str) else arch
+    return Model(cfg)

@@ -1,0 +1,218 @@
+"""Shared model building blocks: param templates, norms, activations, RoPE.
+
+Single-source-of-truth parameter system: each block defines a *template* —
+a pytree of :class:`ParamSpec` — from which we derive (a) randomly
+initialized concrete params, (b) abstract ``ShapeDtypeStruct`` trees with
+``NamedSharding`` attached (for the no-allocation dry-run), and (c) the
+logical-axis tree used for checkpointing layouts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import ShardingEnv, shard
+
+
+# ---------------------------------------------------------------------------
+# Param templates
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | embed | a_log | lru_a
+    fan_in_axes: Tuple[int, ...] = (-2,)   # axes whose product is fan-in
+    dtype: Optional[str] = None   # override model dtype (norms/SSM params -> fp32)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def spec(shape, logical, init="normal", fan_in_axes=(-2,), dtype=None) -> ParamSpec:
+    return ParamSpec(tuple(shape), tuple(logical), init, tuple(fan_in_axes), dtype)
+
+
+def _leaves_with_path(tree, prefix=()):
+    if isinstance(tree, ParamSpec):
+        yield prefix, tree
+    elif isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _leaves_with_path(tree[k], prefix + (k,))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _leaves_with_path(v, prefix + (str(i),))
+    else:
+        raise TypeError(f"bad template node {type(tree)} at {prefix}")
+
+
+def _map_template(tree, fn, prefix=()):
+    if isinstance(tree, ParamSpec):
+        return fn(prefix, tree)
+    if isinstance(tree, dict):
+        return {k: _map_template(v, fn, prefix + (k,)) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        t = [ _map_template(v, fn, prefix + (str(i),)) for i, v in enumerate(tree) ]
+        return type(tree)(t) if isinstance(tree, tuple) else t
+    raise TypeError(f"bad template node {type(tree)} at {prefix}")
+
+
+def _init_leaf(key: jax.Array, ps: ParamSpec, default_dtype: str) -> jax.Array:
+    dtype = jnp.dtype(ps.dtype or default_dtype)
+    shape = ps.shape
+    if ps.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if ps.init == "ones":
+        return jnp.ones(shape, dtype)
+    if ps.init == "a_log":   # Mamba A_log: log of Uniform[1, 16]
+        u = jax.random.uniform(key, shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dtype)
+    if ps.init == "lru_a":   # RG-LRU Lambda: a in [0.9, 0.999] via softplus-param
+        u = jax.random.uniform(key, shape, jnp.float32, 0.9, 0.999)
+        # a = sigmoid(p) ** (c)  parameterization handled in block; store logit
+        return jnp.log(u / (1 - u)).astype(dtype)
+    if ps.init == "embed":
+        return (jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+    fan_in = 1
+    for ax in ps.fan_in_axes:
+        fan_in *= shape[ax]
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def init_from_template(template, key: jax.Array, default_dtype: str):
+    leaves = list(_leaves_with_path(template))
+    keys = jax.random.split(key, max(len(leaves), 1))
+    key_by_path = {p: k for (p, _), k in zip(leaves, keys)}
+    return _map_template(template, lambda p, ps: _init_leaf(key_by_path[p], ps, default_dtype))
+
+
+def abstract_from_template(template, env: Optional[ShardingEnv], default_dtype: str):
+    def mk(_, ps: ParamSpec):
+        dt = jnp.dtype(ps.dtype or default_dtype)
+        if env is None:
+            return jax.ShapeDtypeStruct(ps.shape, dt)
+        return jax.ShapeDtypeStruct(ps.shape, dt,
+                                    sharding=env.sharding(ps.logical, ps.shape))
+    return _map_template(template, mk)
+
+
+def shardings_from_template(template, env: ShardingEnv):
+    return _map_template(template,
+                         lambda _, ps: env.sharding(ps.logical, ps.shape))
+
+
+def logical_axes_from_template(template):
+    return _map_template(template, lambda _, ps: ps.logical)
+
+
+def param_count_of_template(template) -> int:
+    return sum(int(np.prod(ps.shape)) for _, ps in _leaves_with_path(template))
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(cfg, p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    if cfg.norm == "ln":
+        return layer_norm(x, p["w"], p["b"], cfg.rms_eps)
+    return rms_norm(x, p["w"], cfg.rms_eps)
+
+
+def norm_template(cfg, d: int):
+    if cfg.norm == "ln":
+        return {"w": spec((d,), ("embed",), "ones", dtype="float32"),
+                "b": spec((d,), ("embed",), "zeros", dtype="float32")}
+    return {"w": spec((d,), ("embed",), "ones", dtype="float32")}
+
+
+def activate(kind: str, gate: jax.Array, up: Optional[jax.Array]) -> jax.Array:
+    if kind == "swiglu":
+        return jax.nn.silu(gate) * up
+    if kind == "geglu":
+        return jax.nn.gelu(gate, approximate=True) * up
+    if kind == "gelu":
+        return jax.nn.gelu(gate, approximate=True)
+    raise ValueError(kind)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # (head_dim//2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                                 # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                        # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+
+def mlp_template(cfg, stack: Tuple[int, ...] = ()):
+    d, ff = cfg.d_model, cfg.d_ff
+    s = tuple(stack)
+    sl = ("periods",) * len(s)
+    gated = cfg.activation in ("swiglu", "geglu")
+    t = {
+        "wi": spec(s + (d, ff), sl + ("embed", "ff")),
+        "wo": spec(s + (ff, d), sl + ("ff", "embed")),
+    }
+    if gated:
+        t["wg"] = spec(s + (d, ff), sl + ("embed", "ff"))
+    return t
+
+
+def mlp_apply(cfg, p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d)."""
+    up = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    if "wg" in p:
+        gate = jnp.einsum("bsd,df->bsf", x, p["wg"])
+        h = activate(cfg.activation, gate, up)
+    else:
+        h = activate(cfg.activation, up, None)
+    h = shard(h, "batch", "seq", "ff")
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])

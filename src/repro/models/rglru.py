@@ -1,0 +1,117 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma). [arXiv:2402.19427]
+
+Recurrence:  a_t = exp(c * r_t * log sigmoid(Lambda)),  c = 8
+             h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+with diagonal recurrence/input gates r_t, i_t (a TPU-friendly channel-local
+simplification of Griffin's block-diagonal gates; recorded in DESIGN.md §9).
+Prefill uses an associative scan over time; decode is an O(1) update.
+The carried state (h + conv tail) is the session state AMPD transfers.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import spec
+from repro.models.ssm import _causal_conv
+
+_C = 8.0  # Griffin's fixed gate temperature
+
+
+def rglru_template(cfg, stack: Tuple[int, ...] = ()):
+    d, w, ck = cfg.d_model, cfg.rglru_width, cfg.conv_kernel
+    s = tuple(stack)
+    sl = ("periods",) * len(s)
+    return {
+        "w_x": spec(s + (d, w), sl + ("embed", "lru")),
+        "w_gate": spec(s + (d, w), sl + ("embed", "lru")),
+        "conv_w": spec(s + (ck, w), sl + ("conv_k", "lru")),
+        "conv_b": spec(s + (w,), sl + ("lru",), "zeros"),
+        "a_logit": spec(s + (w,), sl + ("lru",), "lru_a", dtype="float32"),
+        "ra_w": spec(s + (w,), sl + ("lru",), "ones", dtype="float32"),
+        "ra_b": spec(s + (w,), sl + ("lru",), "zeros", dtype="float32"),
+        "ix_w": spec(s + (w,), sl + ("lru",), "ones", dtype="float32"),
+        "ix_b": spec(s + (w,), sl + ("lru",), "zeros", dtype="float32"),
+        "w_out": spec(s + (w, d), sl + ("lru", "embed")),
+    }
+
+
+def init_rglru_state(cfg, batch: int) -> Dict[str, jax.Array]:
+    w, ck = cfg.rglru_width, cfg.conv_kernel
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, ck - 1, w), jnp.float32),
+    }
+
+
+def rglru_state_logical(cfg):
+    return {"h": ("batch", "lru"), "conv": ("batch", "conv_k", "lru")}
+
+
+def _gates(p, u: jax.Array):
+    """u: (..., w) fp32 -> (log_a, b_scale*input) terms."""
+    r = jax.nn.sigmoid(p["ra_w"] * u + p["ra_b"])
+    i = jax.nn.sigmoid(p["ix_w"] * u + p["ix_b"])
+    log_a_base = jax.nn.log_sigmoid(p["a_logit"])          # log sigma(Lambda) < 0
+    log_a = _C * r * log_a_base                            # (..., w)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * u)
+    return a, b
+
+
+def rglru_apply(
+    cfg,
+    p: Dict[str, jax.Array],
+    x_in: jax.Array,                       # (B, S, d)
+    state: Dict[str, jax.Array],
+    seq_mask: Optional[jax.Array] = None,  # (B, S)
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B, S, d = x_in.shape
+    u = x_in @ p["w_x"]                                    # (B,S,w)
+    g = x_in @ p["w_gate"]
+    n_valid = None
+    if seq_mask is not None:
+        n_valid = jnp.sum(seq_mask.astype(jnp.int32), axis=1)
+    u, conv = _causal_conv(u, p["conv_w"], state["conv"], n_valid)
+    u = u + p["conv_b"]
+
+    uf = u.astype(jnp.float32)
+    a, b = _gates(p, uf)                                   # (B,S,w)
+    if seq_mask is not None:
+        m = seq_mask[:, :, None].astype(jnp.float32)
+        a = a * m + (1.0 - m)                              # identity decay on pads
+        b = b * m
+
+    # h_t = a_t h_{t-1} + b_t  via associative scan, then fold in h_0
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b2 + a2 * b1
+
+    a_sc, b_sc = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h0 = state["h"][:, None, :]                            # (B,1,w)
+    h_all = b_sc + a_sc * h0                               # (B,S,w)
+    h_last = h_all[:, -1]
+
+    y = h_all.astype(x_in.dtype) * jax.nn.gelu(g, approximate=True)
+    out = y @ p["w_out"]
+    return out, {"h": h_last, "conv": conv.astype(jnp.float32)}
+
+
+def rglru_decode_step(
+    cfg,
+    p: Dict[str, jax.Array],
+    x_in: jax.Array,                       # (B, 1, d)
+    state: Dict[str, jax.Array],
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    u = x_in @ p["w_x"]
+    g = x_in @ p["w_gate"]
+    u, conv = _causal_conv(u, p["conv_w"], state["conv"])
+    u = (u + p["conv_b"])[:, 0].astype(jnp.float32)        # (B,w)
+    a, b = _gates(p, u)
+    h = a * state["h"] + b
+    y = h[:, None].astype(x_in.dtype) * jax.nn.gelu(g, approximate=True)
+    out = y @ p["w_out"]
+    return out, {"h": h, "conv": conv.astype(jnp.float32)}

@@ -1,0 +1,236 @@
+"""Mamba-2 SSD (state-space duality) block. [arXiv:2405.21060]
+
+Chunked prefill/train path (quadratic-within-chunk dual form + inter-chunk
+linear recurrence) and O(1) streaming decode step.  The per-session state
+(conv tail + SSD state) is what AMPD transfers between prefill and decode
+workers for this attention-free arch (DESIGN.md §Arch-applicability).
+
+Sharding: channels are laid out head-major ``(ssm_heads, head_dim)`` and all
+head-local einsums shard on ``ssm_heads`` (GSPMD pads 24 -> 32 on a 16-way
+model axis).  B/C features (ngroups=1) are replicated.
+
+Norm note: we use a *per-head* gated RMSNorm rather than Mamba-2's
+whole-d_inner group norm, so normalization never crosses head shards (a
+TPU-adaptation recorded in DESIGN.md §9).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.common import spec
+
+
+def ssd_template(cfg, stack: Tuple[int, ...] = ()):
+    d = cfg.d_model
+    nh, hd, ds, ck = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.conv_kernel
+    s = tuple(stack)
+    sl = ("periods",) * len(s)
+    return {
+        "w_x": spec(s + (d, nh, hd), sl + ("attn_in", "ssm_heads", "head_dim")),
+        "w_z": spec(s + (d, nh, hd), sl + ("attn_in", "ssm_heads", "head_dim")),
+        "w_B": spec(s + (d, ds), sl + ("embed", "state")),
+        "w_C": spec(s + (d, ds), sl + ("embed", "state")),
+        "w_dt": spec(s + (d, nh), sl + ("embed", "ssm_heads")),
+        "dt_bias": spec(s + (nh,), sl + ("ssm_heads",), "zeros", dtype="float32"),
+        "conv_x": spec(s + (ck, nh, hd), sl + ("conv_k", "ssm_heads", "head_dim")),
+        "conv_B": spec(s + (ck, ds), sl + ("conv_k", "state")),
+        "conv_C": spec(s + (ck, ds), sl + ("conv_k", "state")),
+        "A_log": spec(s + (nh,), sl + ("ssm_heads",), "a_log", dtype="float32"),
+        "D": spec(s + (nh,), sl + ("ssm_heads",), "ones", dtype="float32"),
+        "norm_w": spec(s + (nh, hd), sl + ("ssm_heads", "head_dim"), "ones",
+                       dtype="float32"),
+        "w_out": spec(s + (nh, hd, d), sl + ("ssm_heads", "o_hd", "embed"),
+                      fan_in_axes=(-3, -2)),
+    }
+
+
+def init_ssd_state(cfg, batch: int, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    nh, hd, ds, ck = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.conv_kernel
+    return {
+        "h": jnp.zeros((batch, nh, hd, ds), dtype),
+        "conv_x": jnp.zeros((batch, ck - 1, nh, hd), dtype),
+        "conv_B": jnp.zeros((batch, ck - 1, ds), dtype),
+        "conv_C": jnp.zeros((batch, ck - 1, ds), dtype),
+    }
+
+
+def ssd_state_logical(cfg):
+    return {
+        "h": ("batch", "ssm_heads", "head_dim", "state"),
+        "conv_x": ("batch", "conv_k", "ssm_heads", "head_dim"),
+        "conv_B": ("batch", "conv_k", "state"),
+        "conv_C": ("batch", "conv_k", "state"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: jax.Array,
+                 n_valid: jax.Array | None = None):
+    """Depthwise causal conv along axis 1.
+
+    x: (B, S, ...chan), w: (ck, ...chan), state: (B, ck-1, ...chan).
+    ``n_valid`` (B,): number of real (non-padded) rows per batch element; the
+    carried conv tail is taken from the last *valid* inputs so right-padded
+    prefill chunks stream correctly into the next round.
+    Returns (y (B, S, ...chan), new_state (B, ck-1, ...chan)).
+    """
+    ck = w.shape[0]
+    full = jnp.concatenate([state.astype(x.dtype), x], axis=1)   # (B, S+ck-1, ...)
+    S = x.shape[1]
+    y = jnp.zeros_like(x)
+    for i in range(ck):
+        y = y + full[:, i:i + S] * w[i]
+    if ck == 1:
+        return y, state
+    if n_valid is None:
+        new_state = full[:, -(ck - 1):]
+    else:
+        # tail ending at the last valid input: full[b, n_valid[b] : n_valid[b]+ck-1]
+        def row_tail(fb, nb):
+            return jax.lax.dynamic_slice_in_dim(fb, nb, ck - 1, axis=0)
+        new_state = jax.vmap(row_tail)(full, n_valid)
+    return y, new_state
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., Q) -> (..., Q, Q) with out[..., i, j] = sum_{j<t<=i} x_t (i>=j)."""
+    Q = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    diff = c[..., :, None] - c[..., None, :]          # (..., i, j) = sum_{j<t<=i}
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_apply(
+    cfg,
+    p: Dict[str, jax.Array],
+    x_in: jax.Array,                      # (B, S, d)
+    state: Dict[str, jax.Array],
+    seq_mask: Optional[jax.Array] = None,  # (B, S) True for real tokens
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunked SSD forward; S must be a multiple of cfg.ssm_chunk.
+
+    Masked (padded) positions contribute nothing to the state (dt forced 0).
+    """
+    B, S, d = x_in.shape
+    nh, hd, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    x = jnp.einsum("bsd,dhp->bshp", x_in, p["w_x"])
+    z = jnp.einsum("bsd,dhp->bshp", x_in, p["w_z"])
+    Bf = x_in @ p["w_B"]                                  # (B,S,ds)
+    Cf = x_in @ p["w_C"]
+    dt = x_in.astype(jnp.float32) @ p["w_dt"].astype(jnp.float32)  # (B,S,nh)
+
+    n_valid = None
+    if seq_mask is not None:
+        n_valid = jnp.sum(seq_mask.astype(jnp.int32), axis=1)
+    x, conv_x = _causal_conv(x, p["conv_x"], state["conv_x"], n_valid)
+    Bf, conv_B = _causal_conv(Bf, p["conv_B"], state["conv_B"], n_valid)
+    Cf, conv_C = _causal_conv(Cf, p["conv_C"], state["conv_C"], n_valid)
+    x = jax.nn.silu(x)
+    Bf = jax.nn.silu(Bf).astype(jnp.float32)
+    Cf = jax.nn.silu(Cf).astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt + p["dt_bias"])              # (B,S,nh) fp32
+    if seq_mask is not None:
+        dt = dt * seq_mask[:, :, None].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])                             # (nh,) negative
+    dA = dt * A                                          # (B,S,nh)
+
+    xf = x.astype(jnp.float32)
+    x_c = xf.reshape(B, nc, Q, nh, hd)
+    B_c = Bf.reshape(B, nc, Q, ds)
+    C_c = Cf.reshape(B, nc, Q, ds)
+    dt_c = dt.reshape(B, nc, Q, nh)
+    dA_c = dA.reshape(B, nc, Q, nh)
+
+    x = shard(x, "batch", "seq", "ssm_heads", "head_dim")
+
+    # ---- intra-chunk (dual / attention-like) term
+    L = jnp.exp(_segsum(jnp.moveaxis(dA_c, -1, -2)))     # (B,nc,nh,Q,Q)
+    G = jnp.einsum("bcqn,bckn->bcqk", C_c, B_c)          # (B,nc,Q,Q)
+    M = G[:, :, None] * L * jnp.moveaxis(dt_c, -1, -2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", M, x_c)
+
+    # ---- chunk summary states
+    cum = jnp.cumsum(dA_c, axis=2)                       # (B,nc,Q,nh)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)      # (B,nc,Q,nh)
+    states = jnp.einsum("bcqh,bcqn,bcqhp->bchpn", decay_to_end * dt_c, B_c, x_c)
+
+    # ---- inter-chunk recurrence (carried across calls via `state["h"]`)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])              # (B,nc,nh)
+
+    def step(h, inp):
+        dec, st = inp                                    # (B,nh), (B,nh,hd,ds)
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h
+
+    h_last, h_prevs = jax.lax.scan(
+        step, state["h"].astype(jnp.float32),
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                # (B,nc,nh,hd,ds) pre-chunk states
+
+    state_decay = jnp.exp(cum)                           # (B,nc,Q,nh)
+    y_inter = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", C_c, h_prevs, state_decay)
+
+    y = (y_intra + y_inter).reshape(B, S, nh, hd)
+    y = y + p["D"][None, None, :, None] * xf
+
+    # per-head gated RMSNorm
+    zf = z.astype(jnp.float32)
+    y = y * jax.nn.silu(zf)
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + cfg.rms_eps) * p["norm_w"]
+
+    out = jnp.einsum("bshp,hpd->bsd", y.astype(x_in.dtype), p["w_out"])
+    new_state = {"h": h_last, "conv_x": conv_x.astype(jnp.float32),
+                 "conv_B": conv_B.astype(jnp.float32),
+                 "conv_C": conv_C.astype(jnp.float32)}
+    return out, new_state
+
+
+def ssd_decode_step(
+    cfg,
+    p: Dict[str, jax.Array],
+    x_in: jax.Array,                      # (B, 1, d)
+    state: Dict[str, jax.Array],
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """O(1) streaming step."""
+    B = x_in.shape[0]
+    x = jnp.einsum("bsd,dhp->bshp", x_in, p["w_x"])       # (B,1,nh,hd)
+    z = jnp.einsum("bsd,dhp->bshp", x_in, p["w_z"])
+    Bf = x_in @ p["w_B"]
+    Cf = x_in @ p["w_C"]
+    dt = x_in.astype(jnp.float32) @ p["w_dt"].astype(jnp.float32)
+
+    x, conv_x = _causal_conv(x, p["conv_x"], state["conv_x"])
+    Bf, conv_B = _causal_conv(Bf, p["conv_B"], state["conv_B"])
+    Cf, conv_C = _causal_conv(Cf, p["conv_C"], state["conv_C"])
+    x = jax.nn.silu(x)[:, 0].astype(jnp.float32)          # (B,nh,hd)
+    Bv = jax.nn.silu(Bf)[:, 0].astype(jnp.float32)        # (B,ds)
+    Cv = jax.nn.silu(Cf)[:, 0].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt + p["dt_bias"])[:, 0]         # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * A)                                  # (B,nh)
+
+    h = state["h"].astype(jnp.float32)
+    h = h * da[:, :, None, None] + jnp.einsum("bh,bhp,bn->bhpn", dt, x, Bv)
+    y = jnp.einsum("bhpn,bn->bhp", h, Cv) + p["D"][None, :, None] * x
+
+    zf = z[:, 0].astype(jnp.float32)
+    y = y * jax.nn.silu(zf)
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + cfg.rms_eps) * p["norm_w"]
+
+    out = jnp.einsum("bhp,hpd->bd", y.astype(x_in.dtype), p["w_out"])[:, None]
+    new_state = {"h": h, "conv_x": conv_x.astype(jnp.float32),
+                 "conv_B": conv_B.astype(jnp.float32),
+                 "conv_C": conv_C.astype(jnp.float32)}
+    return out, new_state

@@ -1,0 +1,648 @@
+"""Backbone orchestration: templates, caches, train/prefill/decode forwards.
+
+Layer stacking: the config's ``layer_pattern`` (period P) is scanned over
+``num_layers // P`` periods with per-period stacked params (compile-time is
+O(P), not O(L)); the ``num_layers % P`` trailing blocks run unstacked.
+
+One cached forward (``forward_cached``) serves both *prefill* (a chunk of
+l_incr tokens appended after l_hist cached tokens — AMPD's incremental
+prefill operator) and *decode* (S=1).  Position bookkeeping lives at the
+cache root: ``length`` (B,), ``pos_full`` (B, M) and ``pos_ring`` (B, W)
+store the absolute position of every cache slot (INVALID_POS when unwritten)
+so padded prefill chunks can never leak garbage into attention.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, CROSS, LOCAL, RGLRU, SSD, ModelConfig
+from repro.distributed.sharding import ShardingEnv, current_env, shard
+from repro.models import attention as attn_mod
+from repro.models.attention import INVALID_POS, attention, cross_attention
+from repro.models.common import (
+    abstract_from_template,
+    apply_norm,
+    apply_rope,
+    init_from_template,
+    mlp_apply,
+    mlp_template,
+    norm_template,
+    softcap,
+    spec,
+)
+from repro.models.moe import moe_apply, moe_template
+from repro.models.rglru import (
+    init_rglru_state,
+    rglru_apply,
+    rglru_decode_step,
+    rglru_state_logical,
+    rglru_template,
+)
+from repro.models.ssm import (
+    init_ssd_state,
+    ssd_apply,
+    ssd_decode_step,
+    ssd_state_logical,
+    ssd_template,
+)
+
+Params = Dict[str, Any]
+Cache = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Templates
+# ---------------------------------------------------------------------------
+
+def _ffn_template(cfg: ModelConfig, stack):
+    if cfg.num_experts:
+        return {"moe": moe_template(cfg, stack)}
+    if cfg.d_ff:
+        return {"mlp": mlp_template(cfg, stack)}
+    return {}
+
+
+def _attn_template(cfg: ModelConfig, kind: str, stack):
+    d, H, G, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    s = tuple(stack)
+    sl = ("periods",) * len(s)
+    # "attn_in"/"o_hd" give non-divisible-head archs a row-parallel fallback
+    # (the priority engine prefers "heads" when it divides the model axis).
+    t: Dict[str, Any] = {
+        "norm": _stack_norm(cfg, stack),
+        "wq": spec(s + (d, H, hd), sl + ("attn_in", "heads", "head_dim")),
+        "wk": spec(s + (d, G, hd), sl + ("attn_in", "kv_heads", "head_dim")),
+        "wv": spec(s + (d, G, hd), sl + ("attn_in", "kv_heads", "head_dim")),
+        "wo": spec(s + (H, hd, d), sl + ("heads", "o_hd", "embed"),
+                   fan_in_axes=(-3, -2)),
+    }
+    if cfg.qkv_bias:
+        t["bq"] = spec(s + (H, hd), sl + ("heads", "head_dim"), "zeros")
+        t["bk"] = spec(s + (G, hd), sl + ("kv_heads", "head_dim"), "zeros")
+        t["bv"] = spec(s + (G, hd), sl + ("kv_heads", "head_dim"), "zeros")
+    if kind == CROSS:
+        t["gate_attn"] = spec(s + (), sl + (), "zeros", dtype="float32")
+        t["gate_ffn"] = spec(s + (), sl + (), "zeros", dtype="float32")
+    ffn = _ffn_template(cfg, stack)
+    if ffn:
+        t["ffn_norm"] = _stack_norm(cfg, stack)
+        t.update(ffn)
+    if cfg.post_block_norm:
+        t["post_attn_norm"] = _stack_norm(cfg, stack)
+        if ffn:
+            t["post_ffn_norm"] = _stack_norm(cfg, stack)
+    return t
+
+
+def _stack_norm(cfg, stack):
+    base = norm_template(cfg, cfg.d_model)
+    if not stack:
+        return base
+    s = tuple(stack)
+    sl = ("periods",) * len(s)
+    out = {}
+    for k, ps in base.items():
+        out[k] = spec(s + ps.shape, sl + ps.logical, ps.init, dtype=ps.dtype)
+    return out
+
+
+def _block_template(cfg: ModelConfig, kind: str, stack):
+    if kind == SSD:
+        return {"norm": _stack_norm(cfg, stack), "ssd": ssd_template(cfg, stack)}
+    if kind == RGLRU:
+        t = {"norm": _stack_norm(cfg, stack), "rglru": rglru_template(cfg, stack)}
+        ffn = _ffn_template(cfg, stack)
+        if ffn:
+            t["ffn_norm"] = _stack_norm(cfg, stack)
+            t.update(ffn)
+        return t
+    return _attn_template(cfg, kind, stack)
+
+
+def model_template(cfg: ModelConfig):
+    d, V = cfg.d_model, cfg.vocab_size
+    P = len(cfg.layer_pattern)
+    n_per, rest = divmod(cfg.num_layers, P)
+    t: Dict[str, Any] = {
+        "embed": spec((V, d), ("vocab", "embed"), "embed"),
+        "final_norm": norm_template(cfg, d),
+    }
+    if not cfg.tie_embeddings:
+        t["unembed"] = spec((d, V), ("embed", "vocab"))
+    if n_per:
+        t["stacked"] = {str(j): _block_template(cfg, cfg.layer_pattern[j], (n_per,))
+                        for j in range(P)}
+    if rest:
+        t["rest"] = {str(i): _block_template(cfg, cfg.layer_pattern[i], ())
+                     for i in range(rest)}
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def _block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    G, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    if kind == ATTN:
+        return {"k": jnp.zeros((batch, max_len, G, hd), dt),
+                "v": jnp.zeros((batch, max_len, G, hd), dt)}
+    if kind == LOCAL:
+        W = min(cfg.sliding_window, max_len)
+        return {"k": jnp.zeros((batch, W, G, hd), dt),
+                "v": jnp.zeros((batch, W, G, hd), dt)}
+    if kind == CROSS:
+        T = cfg.frontend_tokens
+        return {"k": jnp.zeros((batch, T, G, hd), dt),
+                "v": jnp.zeros((batch, T, G, hd), dt)}
+    if kind == SSD:
+        return init_ssd_state(cfg, batch)
+    if kind == RGLRU:
+        return init_rglru_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def _block_cache_logical(cfg: ModelConfig, kind: str):
+    if kind == ATTN:
+        kv = ("batch", "kv_seq", "kv_heads", "head_dim")
+        return {"k": kv, "v": kv}
+    if kind == LOCAL:
+        kv = ("batch", "window", "kv_heads", "head_dim")
+        return {"k": kv, "v": kv}
+    if kind == CROSS:
+        kv = ("batch", "img_seq", "kv_heads", "head_dim")
+        return {"k": kv, "v": kv}
+    if kind == SSD:
+        return ssd_state_logical(cfg)
+    if kind == RGLRU:
+        return rglru_state_logical(cfg)
+    raise ValueError(kind)
+
+
+def _stack_tree(tree, n: int):
+    return jax.tree.map(lambda x: jnp.zeros((n,) + x.shape, x.dtype), tree)
+
+
+def _stack_logical(tree):
+    return jax.tree.map(lambda ax: ("periods",) + ax, tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Cache:
+    P = len(cfg.layer_pattern)
+    n_per, rest = divmod(cfg.num_layers, P)
+    kinds = cfg.layer_pattern
+    cache: Cache = {"length": jnp.zeros((batch,), jnp.int32)}
+    if n_per:
+        cache["stacked"] = {str(j): _stack_tree(_block_cache(cfg, kinds[j], batch, max_len), n_per)
+                            for j in range(P)}
+    if rest:
+        cache["rest"] = {str(i): _block_cache(cfg, kinds[i], batch, max_len)
+                         for i in range(rest)}
+    expanded = cfg.pattern_for_depth()
+    if any(k == ATTN for k in expanded):
+        cache["pos_full"] = jnp.full((batch, max_len), INVALID_POS, jnp.int32)
+    if any(k == LOCAL for k in expanded):
+        W = min(cfg.sliding_window, max_len)
+        cache["pos_ring"] = jnp.full((batch, W), INVALID_POS, jnp.int32)
+    return cache
+
+
+def cache_logical(cfg: ModelConfig) -> Cache:
+    P = len(cfg.layer_pattern)
+    n_per, rest = divmod(cfg.num_layers, P)
+    kinds = cfg.layer_pattern
+    out: Cache = {"length": ("batch",)}
+    if n_per:
+        out["stacked"] = {str(j): _stack_logical(_block_cache_logical(cfg, kinds[j]))
+                          for j in range(P)}
+    if rest:
+        out["rest"] = {str(i): _block_cache_logical(cfg, kinds[i])
+                       for i in range(rest)}
+    expanded = cfg.pattern_for_depth()
+    if any(k == ATTN for k in expanded):
+        out["pos_full"] = ("batch", "kv_seq")
+    if any(k == LOCAL for k in expanded):
+        out["pos_ring"] = ("batch", "window")
+    return out
+
+
+def _is_logical_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def _zip_logical(concrete, logical, fn):
+    """Map fn(concrete_leaf, logical_axes) over parallel dict trees.
+
+    Logical leaves are tuples of axis names, which are pytree containers, so
+    plain tree.map cannot zip the two trees.
+    """
+    if _is_logical_leaf(logical):
+        return fn(concrete, logical)
+    assert isinstance(logical, dict), type(logical)
+    return {k: _zip_logical(concrete[k], logical[k], fn) for k in logical}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   env: Optional[ShardingEnv]):
+    concrete = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+    if env is None:
+        return concrete
+    return _zip_logical(
+        concrete, cache_logical(cfg),
+        lambda x, ax: jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                           sharding=env.sharding(ax, x.shape)))
+
+
+def cache_shardings(cfg: ModelConfig, env: ShardingEnv, batch: int,
+                    max_len: int):
+    concrete = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+    return _zip_logical(concrete, cache_logical(cfg),
+                        lambda x, ax: env.sharding(ax, x.shape))
+
+
+# ---------------------------------------------------------------------------
+# Cache writes
+# ---------------------------------------------------------------------------
+
+def _write_full(buf: jax.Array, new: jax.Array, offsets: jax.Array) -> jax.Array:
+    """buf (B,M,...), new (B,S,...), offsets (B,) -> buf with rows updated.
+
+    Decode (S=1) uses an iota-compare masked select instead of a dynamic
+    scatter: under (batch x kv_seq) double sharding, the per-row dynamic
+    offset scatter makes GSPMD transpose a cache slab per layer (an
+    all-to-all on the ICI); the elementwise select is collective-free.
+    (§Perf cell A, iteration 2.)
+    """
+    if new.shape[1] == 1:
+        t_iota = jax.lax.broadcasted_iota(jnp.int32, buf.shape[:2], 1)
+        hit = (t_iota == offsets[:, None]).reshape(
+            buf.shape[:2] + (1,) * (buf.ndim - 2))
+        return jnp.where(hit, new.astype(buf.dtype), buf)
+
+    def row(b, n, off):
+        start = (off,) + (0,) * (b.ndim - 1)
+        return jax.lax.dynamic_update_slice(b, n, start)
+    return jax.vmap(row)(buf, new, offsets)
+
+
+def _write_ring(buf: jax.Array, new: jax.Array,
+                masked_positions: jax.Array) -> jax.Array:
+    """buf (B,W,...), new (B,S,...), masked_positions (B,S).
+
+    Invalid (padded) entries carry INVALID_POS and are routed to a dump slot
+    so they can never clobber live window entries.  Segments of length W are
+    scattered sequentially so that, when S > W, newer tokens deterministically
+    overwrite older ones (within one segment valid positions are consecutive,
+    hence collision-free mod W).
+    """
+    B, W = buf.shape[0], buf.shape[1]
+    S = new.shape[1]
+    bidx = jnp.arange(B)[:, None]
+    dump = jnp.zeros((B, 1) + buf.shape[2:], buf.dtype)
+    out = buf
+    for s0 in range(0, S, W):
+        pos_seg = masked_positions[:, s0:s0 + W]
+        val_seg = new[:, s0:s0 + W]
+        valid = pos_seg > INVALID_POS // 2
+        slots = jnp.where(valid, pos_seg % W, W)
+        ext = jnp.concatenate([out, dump], axis=1)
+        ext = ext.at[bidx, slots].set(val_seg.astype(buf.dtype))
+        out = ext[:, :W]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _qkv(cfg, p, h, positions):
+    q = jnp.einsum("bsd,dhp->bshp", h, p["wq"])
+    k = jnp.einsum("bsd,dgp->bsgp", h, p["wk"])
+    v = jnp.einsum("bsd,dgp->bsgp", h, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    return q, k, v
+
+
+def _attn_scale(cfg) -> float:
+    return cfg.query_scale_override or cfg.resolved_head_dim ** -0.5
+
+
+def _residual(cfg, p, x, delta, which: str):
+    if cfg.post_block_norm:
+        delta = apply_norm(cfg, p[which], delta)
+    return x + delta
+
+
+def _ffn_part(cfg, p, x, aux, expert_mode):
+    if "moe" not in p and "mlp" not in p:
+        return x, aux
+    h = apply_norm(cfg, p["ffn_norm"], x)
+    if "moe" in p:
+        y, moe_aux = moe_apply(cfg, p["moe"], h, expert_mode)
+        for k2, v in moe_aux.items():
+            aux[k2] = aux.get(k2, 0.0) + v
+    else:
+        y = mlp_apply(cfg, p["mlp"], h)
+    if "gate_ffn" in p:
+        y = (jnp.tanh(p["gate_ffn"]) * y.astype(jnp.float32)).astype(y.dtype)
+    if cfg.post_block_norm:
+        y = apply_norm(cfg, p["post_ffn_norm"], y)
+    return x + y, aux
+
+
+def _self_attn_block(cfg, kind, p, x, cache, *, positions, cache_ctx, mode,
+                     impl, aux, expert_mode):
+    """kind in {ATTN, LOCAL}.  cache None in train mode."""
+    h = apply_norm(cfg, p["norm"], x)
+    q, k_new, v_new = _qkv(cfg, p, h, positions)
+    window = cfg.sliding_window if kind == LOCAL else None
+    scale = _attn_scale(cfg)
+
+    if mode == "train":
+        out = attention(q, k_new, v_new, q_positions=positions,
+                        kv_positions=positions, causal=True, window=window,
+                        attn_softcap=cfg.attn_logit_softcap, scale=scale,
+                        impl=impl)
+        new_cache = cache
+    else:
+        offsets, pos_full, pos_ring_pre = cache_ctx
+        if kind == ATTN:
+            ck = _write_full(cache["k"], k_new, offsets)
+            cv = _write_full(cache["v"], v_new, offsets)
+            env = current_env()
+            if (x.shape[1] == 1 and env is not None
+                    and env.rules.get("kv_seq") is not None
+                    and "model" in env.mesh.axis_names
+                    and ck.shape[1] % env.mesh.shape["model"] == 0):
+                # explicit flash-decoding over the seq-sharded cache,
+                # output projection folded into the shard_map epilogue
+                from repro.models.attention import context_parallel_decode
+                proj = context_parallel_decode(
+                    q, ck, cv, p["wo"], q_positions=positions,
+                    kv_positions=pos_full, window=window,
+                    attn_softcap=cfg.attn_logit_softcap, scale=scale)
+                x = _residual(cfg, p, x, proj.astype(x.dtype),
+                              "post_attn_norm")
+                x, aux = _ffn_part(cfg, p, x, aux, expert_mode)
+                return x, {"k": ck, "v": cv}, aux
+            att_k, att_v, att_pos = ck, cv, pos_full
+            if x.shape[1] > 1:
+                # Prefill chunks: gather the kv_seq-sharded cache ONCE per
+                # layer ("kv_gather" maps to no axis) so the chunked online-
+                # softmax scan iterates a replicated T instead of bouncing
+                # layouts per chunk (SPMD involuntary-remat trap).  Decode
+                # (S=1) keeps T sharded — context-parallel attention.
+                att_k = shard(ck, "batch", "kv_gather", "kv_heads", "head_dim")
+                att_v = shard(cv, "batch", "kv_gather", "kv_heads", "head_dim")
+                att_pos = shard(pos_full, "batch", "kv_gather")
+            out = attention(q, att_k, att_v, q_positions=positions,
+                            kv_positions=att_pos, causal=True, window=window,
+                            attn_softcap=cfg.attn_logit_softcap, scale=scale,
+                            impl=impl)
+        else:
+            # Exactness under ring eviction: attend over the PRE-write ring
+            # plus the new chunk (position-masked, so ordering is irrelevant),
+            # THEN commit the chunk to the ring.  Writing first would let new
+            # tokens evict window entries still needed by this chunk's oldest
+            # queries.
+            kv_k = jnp.concatenate(
+                [cache["k"], k_new.astype(cache["k"].dtype)], axis=1)
+            kv_v = jnp.concatenate(
+                [cache["v"], v_new.astype(cache["v"].dtype)], axis=1)
+            kv_pos = jnp.concatenate([pos_ring_pre, positions], axis=1)
+            out = attention(q, kv_k, kv_v, q_positions=positions,
+                            kv_positions=kv_pos, causal=True, window=window,
+                            attn_softcap=cfg.attn_logit_softcap, scale=scale,
+                            impl=impl)
+            ck = _write_ring(cache["k"], k_new, positions)
+            cv = _write_ring(cache["v"], v_new, positions)
+        new_cache = {"k": ck, "v": cv}
+
+    out = jnp.einsum("bshp,hpd->bsd", out, p["wo"])
+    x = _residual(cfg, p, x, out, "post_attn_norm")
+    x, aux = _ffn_part(cfg, p, x, aux, expert_mode)
+    return x, new_cache, aux
+
+
+def _cross_attn_block(cfg, p, x, cache, *, cross_embeds, compute_cross, mode,
+                      aux, expert_mode):
+    h = apply_norm(cfg, p["norm"], x)
+    q = jnp.einsum("bsd,dhp->bshp", h, p["wq"])   # no rope on cross queries
+    if mode == "train" or compute_cross:
+        ck = jnp.einsum("btd,dgp->btgp", cross_embeds, p["wk"])
+        cv = jnp.einsum("btd,dgp->btgp", cross_embeds, p["wv"])
+        new_cache = cache if mode == "train" else {"k": ck, "v": cv}
+    else:
+        ck, cv = cache["k"], cache["v"]
+        new_cache = cache
+    out = cross_attention(q, ck, cv, scale=_attn_scale(cfg),
+                          attn_softcap=cfg.attn_logit_softcap)
+    out = jnp.einsum("bshp,hpd->bsd", out, p["wo"])
+    out = (jnp.tanh(p["gate_attn"]) * out.astype(jnp.float32)).astype(out.dtype)
+    x = _residual(cfg, p, x, out, "post_attn_norm")
+    x, aux = _ffn_part(cfg, p, x, aux, expert_mode)
+    return x, new_cache, aux
+
+
+def _recurrent_block(cfg, kind, p, x, state, *, mode, seq_mask, aux, expert_mode):
+    h = apply_norm(cfg, p["norm"], x)
+    S = x.shape[1]
+    if kind == SSD:
+        if mode != "train" and S == 1:
+            y, new_state = ssd_decode_step(cfg, p["ssd"], h, state)
+        else:
+            st = state if state is not None else init_ssd_state(cfg, x.shape[0])
+            y, new_state = ssd_apply(cfg, p["ssd"], h, st, seq_mask)
+    else:
+        if mode != "train" and S == 1:
+            y, new_state = rglru_decode_step(cfg, p["rglru"], h, state)
+        else:
+            st = state if state is not None else init_rglru_state(cfg, x.shape[0])
+            y, new_state = rglru_apply(cfg, p["rglru"], h, st, seq_mask)
+    x = x + y
+    x, aux = _ffn_part(cfg, p, x, aux, expert_mode)
+    if mode == "train":
+        new_state = state
+    return x, new_state, aux
+
+
+def _run_block(cfg, kind, p, x, cache, *, positions, cache_ctx, mode,
+               cross_embeds, compute_cross, seq_mask, impl, aux, expert_mode):
+    if kind in (ATTN, LOCAL):
+        return _self_attn_block(cfg, kind, p, x, cache, positions=positions,
+                                cache_ctx=cache_ctx, mode=mode, impl=impl,
+                                aux=aux, expert_mode=expert_mode)
+    if kind == CROSS:
+        return _cross_attn_block(cfg, p, x, cache, cross_embeds=cross_embeds,
+                                 compute_cross=compute_cross, mode=mode,
+                                 aux=aux, expert_mode=expert_mode)
+    return _recurrent_block(cfg, kind, p, x, cache, mode=mode,
+                            seq_mask=seq_mask, aux=aux, expert_mode=expert_mode)
+
+
+# ---------------------------------------------------------------------------
+# Full forwards
+# ---------------------------------------------------------------------------
+
+def _embed(cfg, params, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return shard(x, "batch", "seq", "embed")
+
+
+def _unembed(cfg, params, h):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", h, params["embed"])
+    else:
+        logits = jnp.einsum("...d,dv->...v", h, params["unembed"])
+    return softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+
+
+def _run_stack(cfg, params, x, cache, *, positions, cache_ctx, mode,
+               cross_embeds, compute_cross, seq_mask, impl, expert_mode,
+               remat=False):
+    """Runs all layers.  cache is None in train mode."""
+    P = len(cfg.layer_pattern)
+    n_per, rest = divmod(cfg.num_layers, P)
+    aux: Dict[str, Any] = {}
+
+    if n_per:
+        def period_body(x_c, xs):
+            p_period, c_period = xs
+            a: Dict[str, Any] = {}
+            new_c = {}
+            for j in range(P):
+                kind = cfg.layer_pattern[j]
+                blk_cache = c_period[str(j)] if c_period is not None else None
+                x_c, nc, a = _run_block(
+                    cfg, kind, p_period[str(j)], x_c, blk_cache,
+                    positions=positions, cache_ctx=cache_ctx, mode=mode,
+                    cross_embeds=cross_embeds, compute_cross=compute_cross,
+                    seq_mask=seq_mask, impl=impl, aux=a,
+                    expert_mode=expert_mode)
+                new_c[str(j)] = nc
+            a = {k: jnp.asarray(v, jnp.float32) for k, v in a.items()}
+            return x_c, (new_c if c_period is not None else None, a)
+
+        body = period_body
+        if remat:
+            body = jax.checkpoint(
+                period_body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+        cache_stacked = cache.get("stacked") if cache is not None else None
+        x, (new_stacked, aux_stacked) = jax.lax.scan(
+            body, x, (params["stacked"], cache_stacked))
+        if cache is not None and new_stacked is not None:
+            cache = dict(cache)
+            cache["stacked"] = new_stacked
+        for k, v in aux_stacked.items():
+            aux[k] = jnp.sum(v) if v.ndim else v
+
+    if rest:
+        new_rest = {}
+        for i in range(rest):
+            kind = cfg.layer_pattern[i]
+            blk_cache = cache["rest"][str(i)] if cache is not None else None
+            x, nc, aux = _run_block(
+                cfg, kind, params["rest"][str(i)], x, blk_cache,
+                positions=positions, cache_ctx=cache_ctx, mode=mode,
+                cross_embeds=cross_embeds, compute_cross=compute_cross,
+                seq_mask=seq_mask, impl=impl, aux=aux, expert_mode=expert_mode)
+            new_rest[str(i)] = nc
+        if cache is not None:
+            cache = dict(cache)
+            cache["rest"] = new_rest
+
+    return x, cache, aux
+
+
+def forward_train(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                  cross_embeds: Optional[jax.Array] = None,
+                  impl: str = "auto", expert_mode: str = "tp",
+                  remat: bool = False):
+    """tokens (B, S) -> logits (B, S, V) fp32, aux."""
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = _embed(cfg, params, tokens)
+    x, _, aux = _run_stack(cfg, params, x, None, positions=positions,
+                           cache_ctx=None, mode="train",
+                           cross_embeds=cross_embeds, compute_cross=False,
+                           seq_mask=None, impl=impl, expert_mode=expert_mode,
+                           remat=remat)
+    h = apply_norm(cfg, params["final_norm"], x)
+    h = shard(h, "batch", "seq", "embed")
+    return _unembed(cfg, params, h), aux
+
+
+def forward_cached(cfg: ModelConfig, params: Params, cache: Cache,
+                   tokens: jax.Array, *,
+                   lengths: Optional[jax.Array] = None,
+                   cross_embeds: Optional[jax.Array] = None,
+                   compute_cross: bool = False,
+                   impl: str = "auto", expert_mode: str = "tp"):
+    """Prefill a chunk (or decode one token: S=1).
+
+    tokens: (B, S) int32, right-padded with -1 for rows whose chunk is
+      shorter than S (mixed incremental-prefill batches).
+    Returns (new_cache, last_logits (B, V) fp32, aux).
+    """
+    B, S = tokens.shape
+    offsets = cache["length"]                                  # (B,)
+    valid = tokens >= 0                                        # (B, S)
+    n_valid = jnp.sum(valid.astype(jnp.int32), axis=1)         # (B,)
+    positions = offsets[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    masked_positions = jnp.where(valid, positions, INVALID_POS)
+
+    # root position book-keeping (shared by all attention blocks)
+    pos_full = cache.get("pos_full")
+    if pos_full is not None:
+        pos_full = _write_full(pos_full, masked_positions, offsets)
+    pos_ring_pre = cache.get("pos_ring")
+    pos_ring = None
+    if pos_ring_pre is not None:
+        pos_ring = _write_ring(pos_ring_pre, masked_positions, masked_positions)
+
+    x = _embed(cfg, params, jnp.maximum(tokens, 0))
+    cache_ctx = (offsets, pos_full, pos_ring_pre)
+    x, cache, aux = _run_stack(cfg, params, x, cache,
+                               positions=masked_positions, cache_ctx=cache_ctx,
+                               mode="serve", cross_embeds=cross_embeds,
+                               compute_cross=compute_cross, seq_mask=valid,
+                               impl=impl, expert_mode=expert_mode)
+
+    # logits at each row's last valid token
+    last_idx = jnp.maximum(n_valid - 1, 0)                     # (B,)
+    h_last = jnp.take_along_axis(x, last_idx[:, None, None], axis=1)[:, 0]
+    h_last = apply_norm(cfg, params["final_norm"], h_last)
+    logits = _unembed(cfg, params, h_last)                     # (B, V)
+
+    cache = dict(cache)
+    cache["length"] = offsets + n_valid
+    if pos_full is not None:
+        cache["pos_full"] = pos_full
+    if pos_ring is not None:
+        cache["pos_ring"] = pos_ring
+    return cache, logits, aux
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    return init_from_template(model_template(cfg), key, cfg.dtype)
+
+
+def abstract_params(cfg: ModelConfig, env: Optional[ShardingEnv]):
+    return abstract_from_template(model_template(cfg), env, cfg.dtype)

@@ -1,0 +1,4 @@
+from repro.serving.cluster import LiveCluster, LiveResult, make_live_sessions  # noqa: F401
+from repro.serving.coordinator import Coordinator  # noqa: F401
+from repro.serving.engine import Engine, profile_engine  # noqa: F401
+from repro.serving.workers import LiveDecodeWorker, LivePrefillWorker, LiveSession  # noqa: F401

@@ -1,0 +1,174 @@
+"""Live JAX execution engine: one model replica behind jitted step fns.
+
+An ``Engine`` owns params plus three jitted entry points (fresh-cache
+prefill, incremental prefill into an existing cache, single-token decode) —
+the same builders the dry-run lowers at production scale, here executed for
+real (CPU tests/examples run reduced configs on a 1x1 mesh; a TPU deployment
+would hand each worker its mesh slice).
+
+``profile_engine`` measures the engine across a small grid of shapes and
+fits the AMPD perf-model coefficients (§3 offline profiler): the scheduler
+is then driven by *measured* numbers, not analytic constants.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.perf_model import PerfModel
+from repro.launch.steps import StepOptions
+from repro.models import Model, build_model
+from repro.models.transformer import forward_cached, init_cache
+
+
+def _pad_mult(cfg: ModelConfig) -> int:
+    m = 8
+    if cfg.ssm_state:
+        m = max(m, cfg.ssm_chunk)
+    return m
+
+
+def chunk_limit(cfg: ModelConfig, max_len: int) -> int:
+    """Largest legal prefill chunk (ring-exactness needs chunk <= window)."""
+    lim = max_len
+    if cfg.sliding_window:
+        lim = min(lim, cfg.sliding_window)
+    return lim
+
+
+class Engine:
+    def __init__(self, model_or_cfg, *, max_len: int, key: Optional[jax.Array] = None,
+                 params: Optional[Any] = None, opts: Optional[StepOptions] = None,
+                 impl: str = "auto"):
+        self.model: Model = (model_or_cfg if isinstance(model_or_cfg, Model)
+                             else build_model(model_or_cfg))
+        self.cfg = self.model.cfg
+        self.max_len = max_len
+        self.opts = opts or StepOptions(attn_impl=impl, fsdp=False, remat=False)
+        self.pad_mult = _pad_mult(self.cfg)
+        self.params = params if params is not None else self.model.init(
+            key if key is not None else jax.random.PRNGKey(0))
+
+        cfg = self.cfg
+        o = self.opts
+
+        def _step(params, cache, tokens, cross_embeds=None, compute_cross=False):
+            return forward_cached(cfg, params, cache, tokens,
+                                  cross_embeds=cross_embeds,
+                                  compute_cross=compute_cross,
+                                  impl=o.attn_impl, expert_mode=o.expert_mode)
+
+        self._step = jax.jit(_step, static_argnames=("compute_cross",),
+                             donate_argnums=(1,))
+
+    # ------------------------------------------------------------------
+    def new_cache(self, batch: int):
+        return init_cache(self.cfg, batch, self.max_len)
+
+    def pad_chunk(self, tokens: np.ndarray, batch: int = 1) -> jnp.ndarray:
+        """Right-pad a token chunk to the engine's padding multiple."""
+        n = len(tokens)
+        m = self.pad_mult
+        padded = -np.ones((batch, ((n + m - 1) // m) * m), np.int32)
+        padded[0, :n] = tokens
+        return jnp.asarray(padded)
+
+    def run_chunk(self, cache, tokens: jnp.ndarray,
+                  cross_embeds=None, compute_cross: bool = False):
+        """Execute one (possibly padded) chunk; returns (cache, logits, aux)."""
+        return self._step(self.params, cache, tokens, cross_embeds,
+                          compute_cross=compute_cross)
+
+    def prefill(self, token_ids: np.ndarray, *, cross_embeds=None):
+        """Fresh single-request prefill; chunks per window constraints.
+
+        Returns (cache(batch=1), last_logits (V,)).
+        """
+        cache = self.new_cache(1)
+        lim = chunk_limit(self.cfg, self.max_len)
+        logits = None
+        first = True
+        for lo in range(0, len(token_ids), lim):
+            chunk = self.pad_chunk(token_ids[lo:lo + lim])
+            cache, logits, _ = self.run_chunk(
+                cache, chunk,
+                cross_embeds=cross_embeds if first else None,
+                compute_cross=first and cross_embeds is not None)
+            first = False
+        return cache, logits[0]
+
+    def decode_step(self, cache, tokens: jnp.ndarray):
+        """tokens (B, 1) with -1 marking empty slots; returns (cache, logits)."""
+        cache, logits, _ = self.run_chunk(cache, tokens)
+        return cache, logits
+
+
+# ---------------------------------------------------------------------------
+# Offline profiler (§3): fit PerfModel coefficients from this engine
+# ---------------------------------------------------------------------------
+
+def _time_call(fn, *args, repeats: int = 2, **kw) -> Tuple[float, Any]:
+    out = fn(*args, **kw)   # compile + warm
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    ts = []
+    result = out
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        result = fn(*args, **kw)
+        jax.block_until_ready(jax.tree.leaves(result)[0])
+        ts.append(time.perf_counter() - t0)
+    return min(ts), result
+
+
+def profile_engine(engine: Engine, perf: PerfModel, tp: int,
+                   *, prefill_lens: Tuple[int, ...] = (32, 64, 128),
+                   hist_lens: Tuple[int, ...] = (0, 64),
+                   batches: Tuple[int, ...] = (1, 4, 8),
+                   seed: int = 0) -> PerfModel:
+    """Measure the live engine and overwrite perf coefficients for `tp`."""
+    rng = np.random.default_rng(seed)
+    cfg = engine.cfg
+    V = cfg.vocab_size
+
+    pre_samples = []
+    for hist in hist_lens:
+        for n in prefill_lens:
+            if hist + n + 8 > engine.max_len:
+                continue
+            cache = engine.new_cache(1)
+            if hist:
+                htok = rng.integers(0, V, hist)
+                cache, _, _ = engine.run_chunk(cache, engine.pad_chunk(htok))
+            chunk = engine.pad_chunk(rng.integers(0, V, n))
+
+            def call(c=cache, t=chunk):
+                # donation invalidates the cache; rebuild via closure copy
+                c2 = jax.tree.map(jnp.copy, c)
+                return engine.run_chunk(c2, t)
+
+            dt, _ = _time_call(call)
+            pre_samples.append((hist, n, dt))
+    perf.fit_prefill(tp, pre_samples)
+
+    dec_samples = []
+    for b in batches:
+        ctx = 64
+        cache = engine.new_cache(b)
+        tok = jnp.asarray(rng.integers(0, V, (b, ctx)), jnp.int32)
+        cache, _, _ = engine.run_chunk(cache, tok)
+        step_tok = jnp.asarray(rng.integers(0, V, (b, 1)), jnp.int32)
+
+        def call(c=cache, t=step_tok):
+            c2 = jax.tree.map(jnp.copy, c)
+            return engine.run_chunk(c2, t)
+
+        dt, _ = _time_call(call)
+        dec_samples.append((b, float(ctx), dt))
+    perf.fit_decode(tp, dec_samples)
+    return perf

@@ -1,0 +1,116 @@
+"""Session-state (KV / SSM / LRU) transfer between workers.
+
+The TPU adaptation of NIXL point-to-point RDMA (paper §6): cache slices move
+between worker mesh slices as explicit array reshards (``jax.device_put`` to
+the destination sharding — on one CPU device this degenerates to copies, but
+the byte accounting and the lazy-read/incremental-write protocol are real):
+
+  * ``extract_range``    pull a [lo, hi) token range of one batch row —
+    seq-dim slices for full-attention K/V + positions, whole-state copies
+    for recurrent/ring/cross state.  Used for both the *incremental KV*
+    (prefill -> decode; only the increment moves, §6 footnote 4) and the
+    *lazy history read* (decode -> prefill).
+  * ``insert_range``     merge an extract into a batched decode-cache slot
+    (the decode worker's local prefix-cache merge).
+  * ``transfer_bytes``   exact payload size, fed to windowed stats and
+    compared against the perf model's T_kv.
+
+Cache layout note: leaves under ``stacked`` carry a leading layer-period dim
+(n_per, B, ...); root/``rest`` leaves are batch-leading.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+Cache = Dict[str, Any]
+
+_SEQ_LEAVES = ("k", "v", "pos_full")
+
+
+def _map_cache(cache, fn, path=()):
+    if isinstance(cache, dict):
+        return {k: _map_cache(v, fn, path + (k,)) for k, v in cache.items()}
+    return fn(path, cache)
+
+
+def _axes(path: Tuple[str, ...]) -> int:
+    """Batch axis of a cache leaf (stacked leaves have a leading period dim)."""
+    return 1 if path and path[0] == "stacked" else 0
+
+
+def _is_seq_leaf(path, x, max_len: int, b_ax: int) -> bool:
+    return (path[-1] in _SEQ_LEAVES and x.ndim > b_ax + 1
+            and x.shape[b_ax + 1] == max_len)
+
+
+def extract_range(cache: Cache, cfg: ModelConfig, max_len: int,
+                  lo: int, hi: int, row: int = 0) -> Cache:
+    """Token range [lo, hi) of one batch row (keeps a singleton batch dim)."""
+    n = hi - lo
+
+    def leaf(path, x):
+        b_ax = _axes(path)
+        xr = jax.lax.slice_in_dim(x, row, row + 1, axis=b_ax)
+        if _is_seq_leaf(path, x, max_len, b_ax):
+            return jax.lax.dynamic_slice_in_dim(xr, lo, n, axis=b_ax + 1)
+        return xr  # ring / recurrent state / cross KV / length: full copy
+
+    return _map_cache(cache, leaf)
+
+
+def insert_range(dst: Cache, src: Cache, cfg: ModelConfig, max_len: int,
+                 lo: int, slot: int, *, replace_state: bool) -> Cache:
+    """Write ``src`` (a 1-row extract) into batch row ``slot`` of ``dst``.
+
+    Seq-sliced leaves land at token offset ``lo``; everything else replaces
+    the slot's value when ``replace_state`` (an increment's final recurrent
+    state subsumes the old one)."""
+    def leaf_pair(path, d):
+        s = _get(src, path)
+        b_ax = _axes(path)
+        if (_is_seq_leaf(path, d, max_len, b_ax)
+                and s.shape[b_ax + 1] != d.shape[b_ax + 1]):
+            if b_ax == 0:
+                row = jax.lax.dynamic_update_slice_in_dim(
+                    d[slot], s[0], lo, axis=0)
+                return d.at[slot].set(row)
+            row = jax.lax.dynamic_update_slice_in_dim(
+                d[:, slot], s[:, 0], lo, axis=1)
+            return d.at[:, slot].set(row)
+        if not replace_state and path[-1] not in ("length",) + _SEQ_LEAVES:
+            return d
+        if b_ax == 0:
+            return d.at[slot].set(s[0])
+        return d.at[:, slot].set(s[:, 0])
+
+    return _map_cache(dst, leaf_pair)
+
+
+def _get(tree, path):
+    for p in path:
+        tree = tree[p]
+    return tree
+
+
+def transfer_bytes(tree: Cache) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(tree))
+
+
+def reshard(tree: Cache, target_shardings=None) -> Cache:
+    """Move a cache tree to another worker's device layout.
+
+    With real multi-host meshes this is the ICI point-to-point transfer; on
+    the single-device CPU runtime it is a device_put to the same device (the
+    protocol and byte accounting stay identical).
+    """
+    if target_shardings is None:
+        return jax.device_put(tree)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree,
+                        target_shardings)

@@ -1,0 +1,218 @@
+"""Live serving workers: real JAX execution behind the AMPD scheduler.
+
+Each worker owns an :class:`Engine` (its mesh slice's jitted step fns).  The
+cluster driver runs workers *logically in parallel*: every real engine call
+is wall-clock timed and the measured duration advances that worker's logical
+busy-time — so queueing, interference and SLOs behave exactly as on a real
+deployment, just with CPU-scale models (reduced configs).
+
+DecodeWorker implements TPU-style continuous batching with fixed slots: one
+batched cache; empty slots decode a masked ``-1`` token (XLA static shapes).
+A *local* prefill executes in-batch (one valid row, others masked), pausing
+decoding for the measured duration — real PD interference, faithfully.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.simulator import WindowStat
+from repro.core.types import PrefillTask, RoundSpec
+from repro.serving.engine import Engine, chunk_limit
+from repro.serving.kv_transfer import (
+    extract_range,
+    insert_range,
+    reshard,
+    transfer_bytes,
+)
+
+
+@dataclass
+class LiveSession:
+    session_id: int
+    arrival_time: float
+    rounds: List[RoundSpec]
+    prompt_tokens: List[np.ndarray]          # per-round incremental tokens
+    current_round: int = 0
+    context_len: int = 0
+    decode_worker: Optional[int] = None
+    slot: Optional[int] = None
+    tokens_this_round: int = 0
+    last_token: int = 0
+    last_token_time: float = 0.0
+    generated: List[int] = field(default_factory=list)
+    transcript: List[int] = field(default_factory=list)   # for failure replay
+    ttfts: List[float] = field(default_factory=list)
+    itls: List[float] = field(default_factory=list)
+    finish_time: Optional[float] = None
+
+    @property
+    def num_rounds(self) -> int:
+        return len(self.rounds)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    return time.perf_counter() - t0, out
+
+
+class LivePrefillWorker:
+    kind = "prefill"
+
+    def __init__(self, idx: int, engine: Engine, tp: int = 1,
+                 window_s: float = 10.0):
+        self.idx = idx
+        self.engine = engine
+        self.tp = tp
+        self.speed = 1.0
+        self.alive = True
+        self.prefill_queue: List[PrefillTask] = []
+        self.ttft_stat = WindowStat(window_s)
+        self.itl_stat = WindowStat(window_s)
+        self.windowed_ttft = 0.0
+        self.windowed_itl = 0.0
+        self.busy_until = 0.0
+        self.kv_bytes_moved = 0
+
+    def execute(self, task: PrefillTask, session: LiveSession,
+                history_extract: Optional[Dict] = None,
+                cross_embeds=None) -> Dict[str, Any]:
+        """Run one prefill task for real; returns the increment extract."""
+        eng = self.engine
+        tokens = session.prompt_tokens[task.round_idx]
+        if history_extract is not None and task.l_hist > 0:
+            cache = eng.new_cache(1)
+            cache = insert_range(cache, reshard(history_extract), eng.cfg,
+                                 eng.max_len, 0, 0, replace_state=True)
+            self.kv_bytes_moved += transfer_bytes(history_extract)
+            lim = chunk_limit(eng.cfg, eng.max_len)
+            logits = None
+            for lo in range(0, len(tokens), lim):
+                chunk = eng.pad_chunk(tokens[lo:lo + lim])
+                cache, logits, _ = eng.run_chunk(cache, chunk)
+        else:
+            cache, logits = eng.prefill(tokens, cross_embeds=cross_embeds)
+        incr = extract_range(cache, eng.cfg, eng.max_len,
+                             task.l_hist, task.l_hist + task.l_incr)
+        self.kv_bytes_moved += transfer_bytes(incr)
+        return {"increment": incr, "logits": np.asarray(logits)}
+
+
+class LiveDecodeWorker:
+    kind = "decode"
+
+    def __init__(self, idx: int, engine: Engine, max_slots: int, tp: int = 1,
+                 window_s: float = 10.0):
+        self.idx = idx
+        self.engine = engine
+        self.tp = tp
+        self.speed = 1.0
+        self.alive = True
+        self.max_slots = max_slots
+        self.cache = engine.new_cache(max_slots)
+        self.slots: List[Optional[LiveSession]] = [None] * max_slots
+        self.prefill_queue: List[PrefillTask] = []
+        self.ttft_stat = WindowStat(window_s)
+        self.itl_stat = WindowStat(window_s)
+        self.windowed_ttft = 0.0
+        self.windowed_itl = 0.0
+        self.busy_until = 0.0
+        self.mem_tokens = 0
+
+    # -- slot management -------------------------------------------------
+    def free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def occupancy(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
+    def reset_slot(self, slot: int) -> None:
+        """Wipe a slot's cache row (lengths, positions, state) before reuse —
+        stale positions from a previous occupant must never look valid."""
+        fresh = self.engine.new_cache(1)
+        self.cache = insert_range(self.cache, fresh, self.engine.cfg,
+                                  self.engine.max_len, 0, slot,
+                                  replace_state=True)
+
+    def allocate(self, session: LiveSession) -> int:
+        slot = self.free_slot()
+        assert slot is not None, "no free decode slots"
+        session.slot = slot
+        self.slots[slot] = session
+        self.reset_slot(slot)
+        return slot
+
+    def attach(self, session: LiveSession, increment: Dict, lo: int,
+               first_token: int, n_tokens: int) -> None:
+        if session.slot is None:
+            self.allocate(session)
+        self.cache = insert_range(self.cache, reshard(increment),
+                                  self.engine.cfg, self.engine.max_len,
+                                  lo, session.slot, replace_state=True)
+        session.last_token = first_token
+        self.mem_tokens += n_tokens
+
+    def detach(self, session: LiveSession) -> None:
+        if session.slot is not None:
+            self.slots[session.slot] = None
+            session.slot = None
+        self.mem_tokens -= session.context_len
+        # zero the slot length so the row decodes as empty
+        # (cache rows are overwritten on next attach)
+
+    def history_extract(self, session: LiveSession) -> Dict:
+        return extract_range(self.cache, self.engine.cfg, self.engine.max_len,
+                             0, session.context_len, row=session.slot)
+
+    # -- execution ---------------------------------------------------------
+    def decode_once(self):
+        """One continuous-batching step over all occupied slots.
+
+        Returns (duration_s, {slot: next_token}) — empty dict if idle.
+        """
+        occupied = [i for i, s in enumerate(self.slots) if s is not None]
+        if not occupied:
+            return 0.0, {}
+        tokens = np.full((self.max_slots, 1), -1, np.int32)
+        for i in occupied:
+            tokens[i, 0] = self.slots[i].last_token
+
+        def call():
+            cache, logits = self.engine.decode_step(self.cache, jnp.asarray(tokens))
+            return cache, logits
+
+        dt, (self.cache, logits) = timed(call)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        return dt, {i: int(nxt[i]) for i in occupied}
+
+    def local_prefill(self, task: PrefillTask, session: LiveSession):
+        """Execute a prefill in-batch on this decode worker (pauses decode)."""
+        eng = self.engine
+        tokens = session.prompt_tokens[task.round_idx]
+        lim = chunk_limit(eng.cfg, eng.max_len)
+        total_dt = 0.0
+        logits = None
+        for lo in range(0, len(tokens), lim):
+            sub = tokens[lo:lo + lim]
+            m = eng.pad_mult
+            width = ((len(sub) + m - 1) // m) * m
+            chunk = np.full((self.max_slots, width), -1, np.int32)
+            chunk[session.slot, :len(sub)] = sub
+
+            def call(c=jnp.asarray(chunk)):
+                return eng.run_chunk(self.cache, c)
+
+            dt, (self.cache, logits, _) = timed(call)
+            total_dt += dt
+        return total_dt, int(np.asarray(jnp.argmax(logits[session.slot])))

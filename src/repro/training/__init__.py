@@ -1,0 +1,8 @@
+from repro.training.loop import Trainer, TrainerConfig  # noqa: F401
+from repro.training.optimizer import (  # noqa: F401
+    OptimizerConfig,
+    abstract_opt_state,
+    apply_updates,
+    init_opt_state,
+    select_optimizer,
+)

@@ -1,0 +1,102 @@
+"""Training loop with checkpoint/restart (the train_4k substrate + example b).
+
+Wraps the jitted train step from ``launch.steps`` with: data pipeline,
+periodic checkpointing (atomic, exact-resume including the data cursor),
+metric logging, and optional auto-resume from the latest checkpoint.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataPipeline
+from repro.models import build_model
+from repro.training.optimizer import OptimizerConfig, select_optimizer
+
+
+@dataclass
+class TrainerConfig:
+    batch_size: int = 8
+    seq_len: int = 128
+    steps: int = 50
+    log_every: int = 10
+    ckpt_every: int = 25
+    ckpt_dir: Optional[str] = None
+    seed: int = 0
+    lr: float = 3.0e-4
+    opts: Optional[object] = None   # launch.steps.StepOptions (lazy import)
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tc: TrainerConfig,
+                 env=None):
+        # lazy import avoids the launch.steps <-> training cycle
+        from repro.launch.steps import StepOptions, build_train_step, \
+            init_train_state as _init_state
+        self._init_state = _init_state
+        if tc.opts is None:
+            tc.opts = StepOptions(fsdp=False, remat=False)
+        self.cfg = cfg
+        self.tc = tc
+        self.model = build_model(cfg)
+        self.opt_cfg = select_optimizer(cfg.param_count(), lr=tc.lr)
+        self.step_fn = jax.jit(
+            build_train_step(self.model, self.opt_cfg, env, tc.opts),
+            donate_argnums=(0,))
+        self.pipeline = DataPipeline(cfg.vocab_size, tc.batch_size,
+                                     tc.seq_len, seed=tc.seed)
+        self.state = self._init_state(self.model, self.opt_cfg,
+                                      jax.random.PRNGKey(tc.seed))
+        self.history: List[Dict[str, float]] = []
+
+    # ------------------------------------------------------------------
+    def maybe_resume(self) -> Optional[int]:
+        if not self.tc.ckpt_dir:
+            return None
+        step = latest_step(self.tc.ckpt_dir)
+        if step is None:
+            return None
+        template = jax.tree.map(lambda x: np.asarray(x), self.state)
+        self.state, step, extra = restore_checkpoint(
+            self.tc.ckpt_dir, template, step)
+        self.pipeline.restore(extra["data"])
+        return step
+
+    def save(self) -> None:
+        if not self.tc.ckpt_dir:
+            return
+        step = int(self.state["step"])
+        save_checkpoint(self.tc.ckpt_dir, step, self.state,
+                        extra={"data": self.pipeline.state()})
+
+    # ------------------------------------------------------------------
+    def run(self, log: Callable[[str], None] = print) -> List[Dict[str, float]]:
+        start = int(self.state["step"])
+        t0 = time.perf_counter()
+        for i in range(start, self.tc.steps):
+            batch = {k: jnp.asarray(v) for k, v in
+                     self.pipeline.next_batch().items()}
+            if self.cfg.frontend == "vision":
+                B = self.tc.batch_size
+                batch["cross_embeds"] = jnp.zeros(
+                    (B, self.cfg.frontend_tokens, self.cfg.d_model),
+                    jnp.dtype(self.cfg.dtype))
+            self.state, metrics = self.step_fn(self.state, batch)
+            if (i + 1) % self.tc.log_every == 0 or i == start:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = i + 1
+                m["wall_s"] = time.perf_counter() - t0
+                self.history.append(m)
+                log(f"step {i+1:5d} loss={m['loss']:.4f} "
+                    f"ce={m['ce']:.4f} gnorm={m['grad_norm']:.3f} "
+                    f"({m['wall_s']:.1f}s)")
+            if self.tc.ckpt_dir and (i + 1) % self.tc.ckpt_every == 0:
+                self.save()
+        return self.history

@@ -1,0 +1,144 @@
+"""Optimizers (pure-JAX, sharding-aware): AdamW and Adafactor.
+
+Adafactor (factored second moments, no first moment by default) exists
+because kimi-k2-1t's AdamW fp32 moments cannot fit a single v5e pod
+(DESIGN.md §10); it is selected automatically for >200B-param configs by the
+dry-run/train launchers.
+
+Abstract state builders mirror param shardings so the multi-pod dry-run can
+lower a full train step without allocating anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"              # adamw | adafactor
+    lr: float = 3.0e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1.0e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    # adafactor
+    decay_rate: float = 0.8
+    factored_min_dim: int = 128
+
+
+def select_optimizer(param_count: int, lr: float = 3.0e-4) -> OptimizerConfig:
+    if param_count > 2.0e11:
+        return OptimizerConfig(name="adafactor", lr=lr)
+    return OptimizerConfig(name="adamw", lr=lr)
+
+
+def _is_factored(cfg: OptimizerConfig, shape) -> bool:
+    return (len(shape) >= 2 and shape[-1] >= cfg.factored_min_dim
+            and shape[-2] >= cfg.factored_min_dim)
+
+
+# ---------------------------------------------------------------------------
+# State init
+# ---------------------------------------------------------------------------
+
+def init_opt_state(cfg: OptimizerConfig, params) -> Any:
+    def leaf(p):
+        if cfg.name == "adamw":
+            return {"m": jnp.zeros(p.shape, jnp.float32),
+                    "v": jnp.zeros(p.shape, jnp.float32)}
+        if _is_factored(cfg, p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return jax.tree.map(leaf, params)
+
+
+def abstract_opt_state(cfg: OptimizerConfig, abstract_params) -> Any:
+    """ShapeDtypeStructs with shardings derived from the params'."""
+    def leaf(p):
+        shd = getattr(p, "sharding", None)
+
+        def sub(shape, drop_axis: Optional[int]):
+            if shd is None or not isinstance(shd, NamedSharding):
+                return jax.ShapeDtypeStruct(shape, jnp.float32)
+            parts = list(shd.spec) + [None] * (len(p.shape) - len(shd.spec))
+            if drop_axis is not None:
+                parts = parts[:drop_axis] + parts[drop_axis + 1:]
+            s = NamedSharding(shd.mesh, P(*parts))
+            return jax.ShapeDtypeStruct(shape, jnp.float32, sharding=s)
+
+        if cfg.name == "adamw":
+            return {"m": sub(p.shape, None), "v": sub(p.shape, None)}
+        if _is_factored(cfg, p.shape):
+            return {"vr": sub(p.shape[:-1], len(p.shape) - 1),
+                    "vc": sub(p.shape[:-2] + p.shape[-1:], len(p.shape) - 2)}
+        return {"v": sub(p.shape, None)}
+    return jax.tree.map(leaf, abstract_params)
+
+
+# ---------------------------------------------------------------------------
+# Updates
+# ---------------------------------------------------------------------------
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def apply_updates(cfg: OptimizerConfig, params, grads, opt_state,
+                  step: jax.Array):
+    """Returns (new_params, new_opt_state, metrics)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    stepf = step.astype(jnp.float32) + 1.0
+
+    def adamw_leaf(p, g, s):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * s["m"] + (1 - cfg.b1) * g
+        v = cfg.b2 * s["v"] + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / (1 - cfg.b1 ** stepf)
+        vhat = v / (1 - cfg.b2 ** stepf)
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - cfg.lr * upd).astype(p.dtype), {"m": m, "v": v}
+
+    def adafactor_leaf(p, g, s):
+        g = g.astype(jnp.float32) * clip
+        beta2 = 1.0 - stepf ** (-cfg.decay_rate)
+        g2 = jnp.square(g) + 1e-30
+        if "vr" in s:
+            vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            r = vr / jnp.mean(vr, axis=-1, keepdims=True)
+            prec = 1.0 / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :])
+            new_s = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * s["v"] + (1 - beta2) * g2
+            prec = jax.lax.rsqrt(v)
+            new_s = {"v": v}
+        upd = g * prec
+        # update clipping (Adafactor RMS rule)
+        rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-30)
+        upd = upd / jnp.maximum(1.0, rms)
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - cfg.lr * upd).astype(p.dtype), new_s
+
+    leaf_fn = adamw_leaf if cfg.name == "adamw" else adafactor_leaf
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(opt_state)
+    new_p, new_s = [], []
+    for p, g, s in zip(flat_p, flat_g, flat_s):
+        np_, ns_ = leaf_fn(p, g, s)
+        new_p.append(np_)
+        new_s.append(ns_)
+    return (jax.tree.unflatten(treedef, new_p),
+            jax.tree.unflatten(treedef, new_s),
+            {"grad_norm": gnorm})

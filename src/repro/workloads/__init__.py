@@ -1,0 +1,1 @@
+from repro.workloads.traces import TRACES, TraceSpec, make_trace, trace_stats  # noqa: F401

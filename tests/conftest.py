@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Tests run on the real single CPU device (the dry-run sets its own
+# XLA_FLAGS in a separate process; never here).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")

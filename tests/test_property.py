@@ -1,0 +1,150 @@
+"""Hypothesis property tests on system invariants (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.perf_model import PerfModel
+from repro.core.planner import solve_ilp
+from repro.core.reordering import predict_satisfied, reorder_queue
+from repro.core.types import PrefillTask
+from repro.configs import get_config
+
+SET = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Attention oracle properties
+# ---------------------------------------------------------------------------
+
+@given(
+    B=st.integers(1, 2), S=st.integers(1, 12), qpg=st.integers(1, 3),
+    G=st.integers(1, 3), hd=st.sampled_from([8, 16]),
+    extra=st.integers(0, 10), hist=st.integers(0, 12),
+    window=st.one_of(st.none(), st.integers(2, 16)),
+    chunk=st.integers(3, 17),
+)
+@settings(**SET)
+def test_chunked_equals_dense_attention(B, S, qpg, G, hd, extra, hist, window, chunk):
+    from repro.models.attention import chunked_ref_attention, ref_attention
+    H = qpg * G
+    T = hist + S + extra
+    key = jax.random.PRNGKey(S * 7 + T)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, T, G, hd))
+    v = jax.random.normal(ks[2], (B, T, G, hd))
+    qpos = jnp.broadcast_to(hist + jnp.arange(S, dtype=jnp.int32), (B, S))
+    kpos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    kpos = jnp.where(kpos < hist + S, kpos, -(2 ** 30))
+    args = dict(q_positions=qpos, kv_positions=kpos, window=window,
+                scale=hd ** -0.5)
+    a = ref_attention(q, k, v, **args)
+    b = chunked_ref_attention(q, k, v, kv_chunk=chunk, **args)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Perf model properties
+# ---------------------------------------------------------------------------
+
+@given(l_hist=st.integers(0, 20000), l_incr=st.integers(1, 8000),
+       tp=st.sampled_from([1, 2, 4, 8, 16]))
+@settings(**SET)
+def test_perf_model_monotone(l_hist, l_incr, tp):
+    perf = PerfModel(get_config("qwen3-32b"))
+    t = perf.t_pre(l_hist, l_incr, tp)
+    assert t > 0
+    assert perf.t_pre(l_hist + 100, l_incr, tp) >= t          # more history
+    assert perf.t_pre(l_hist, l_incr + 100, tp) > t           # more tokens
+    assert perf.t_kv(l_hist + 1, tp, tp) >= perf.t_kv(l_hist, tp, tp)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(**SET)
+def test_prefill_fit_recovers_coefficients(seed):
+    rng = np.random.default_rng(seed)
+    perf = PerfModel(get_config("qwen3-32b"))
+    a, b, g = 0.002, rng.uniform(1e-6, 1e-4), rng.uniform(1e-10, 1e-8)
+    samples = []
+    for _ in range(30):
+        lh = int(rng.integers(0, 8000))
+        li = int(rng.integers(64, 4000))
+        t = a + b * li + g * li * (lh + li / 2)
+        samples.append((lh, li, t))
+    perf.fit_prefill(4, samples)
+    c = perf.pre[4]
+    assert np.isclose(c.beta, b, rtol=1e-3)
+    assert np.isclose(c.gamma, g, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Reordering (Alg. 2) properties
+# ---------------------------------------------------------------------------
+
+def _task(i, enq, l_incr, post=0):
+    return PrefillTask(session_id=i, round_idx=0, l_hist=0, l_incr=l_incr,
+                       enqueue_time=enq, arrival_time=enq, postponements=post)
+
+
+@given(
+    lens=st.lists(st.integers(10, 3000), min_size=2, max_size=5),
+    waits=st.lists(st.floats(0.0, 3.0), min_size=5, max_size=5),
+    thres=st.floats(0.5, 4.0),
+)
+@settings(**SET)
+def test_reordering_never_worse_than_fcfs(lens, waits, thres):
+    now = 10.0
+    est = lambda t: t.l_incr * 1e-3
+    queue = [_task(i, now - waits[i], n) for i, n in enumerate(lens)]
+    fcfs_sat = predict_satisfied(queue, now, thres, est)
+    reordered = reorder_queue(list(queue), now, thres, est, w=len(lens))
+    sat = predict_satisfied(reordered, now, thres, est)
+    assert sat >= fcfs_sat
+    assert sorted(t.session_id for t in reordered) == sorted(
+        t.session_id for t in queue)
+
+
+@given(lens=st.lists(st.integers(10, 3000), min_size=3, max_size=4),
+       rounds=st.integers(1, 12))
+@settings(**SET)
+def test_reordering_starvation_bound(lens, rounds):
+    """No task is postponed more than w times (Alg. 2 capacity)."""
+    w = len(lens)
+    est = lambda t: t.l_incr * 1e-3
+    queue = [_task(i, 0.0, n) for i, n in enumerate(lens)]
+    for r in range(rounds):
+        queue = reorder_queue(queue, float(r), 0.5, est, w=w)
+        queue.append(queue.pop(0))   # rotate: head runs, re-enters for stress
+    assert all(t.postponements <= w + 1 for t in queue)
+
+
+# ---------------------------------------------------------------------------
+# Planner (Eq. 5) properties
+# ---------------------------------------------------------------------------
+
+@given(
+    seed=st.integers(0, 10_000),
+    N=st.sampled_from([4, 8, 16, 24]),
+)
+@settings(max_examples=15, deadline=None)
+def test_ilp_optimal_vs_bruteforce(seed, N):
+    rng = np.random.default_rng(seed)
+    degrees = [1, 2, 4, 8]
+    tau_p = {n: float(rng.uniform(0.1, 2.0)) for n in degrees}
+    tau_d = {n: float(rng.uniform(0.1, 2.0)) for n in degrees}
+    sol = solve_ilp(tau_p, tau_d, N, degrees)
+    assert sol.status == "optimal"
+    # capacity respected
+    used = sum(n * c for n, c in sol.x.items()) + sum(
+        n * c for n, c in sol.y.items())
+    assert used <= N
+    assert sum(sol.x.values()) >= 1 and sum(sol.y.values()) >= 1
+    # Z equals the worst instantiated tau
+    worst = max([tau_p[n] for n, c in sol.x.items() if c]
+                + [tau_d[n] for n, c in sol.y.items() if c])
+    assert abs(sol.z - worst) < 1e-6
+    # brute-force optimum over single-degree-per-phase choices
+    best = min(max(tau_p[a], tau_d[b])
+               for a in degrees for b in degrees if a + b <= N)
+    assert sol.z <= best + 1e-6

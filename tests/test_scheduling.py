@@ -1,0 +1,175 @@
+"""Unit tests for Alg. 1 (adaptive routing) and the simulator's behaviour
+under the scheduling policies, plus fault-tolerance/straggler invariants."""
+import random
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    Deployment,
+    PerfModel,
+    RoutingConfig,
+    SimConfig,
+    Simulation,
+    SLOSpec,
+    WorkerGroup,
+    route_prefill,
+    simulate_deployment,
+)
+from repro.core.simulator import SimWorker, WindowStat
+from repro.core.types import PrefillTask
+from repro.workloads import make_trace
+
+
+def _perf():
+    return PerfModel(get_config("qwen3-32b"))
+
+
+def _task(l_hist=0, l_incr=512):
+    return PrefillTask(session_id=0, round_idx=0, l_hist=l_hist,
+                       l_incr=l_incr, enqueue_time=0.0, arrival_time=0.0)
+
+
+def _worker(kind, tp=4, ttft=0.0, itl=0.0, queue=()):
+    w = SimWorker(0, tp, kind)
+    w.windowed_ttft = ttft
+    w.windowed_itl = itl
+    w.prefill_queue = list(queue)
+    return w
+
+
+def test_routing_prefers_remote_with_ttft_slack():
+    cfg = RoutingConfig(alpha=0.9, beta=0.85, ttft_thres=2.0, itl_thres=0.1)
+    d = _worker("decode", itl=0.09)
+    p = _worker("prefill", ttft=0.5)     # well under alpha * thres
+    dec = route_prefill(_task(), d, [p], _perf(), cfg, random.Random(0))
+    assert dec.kind == "remote" and dec.reason == "ttft-slack"
+
+
+def test_routing_falls_back_to_local_on_itl_slack():
+    cfg = RoutingConfig(ttft_thres=2.0, itl_thres=0.1)
+    d = _worker("decode", itl=0.01)                    # decode nearly idle
+    p = _worker("prefill", ttft=1.95)                  # prefill saturated
+    dec = route_prefill(_task(), d, [p], _perf(), cfg, random.Random(0))
+    assert dec.kind == "local" and dec.reason == "itl-slack"
+
+
+def test_routing_cost_comparison_picks_cheaper():
+    cfg = RoutingConfig(ttft_thres=2.0, itl_thres=0.1)
+    perf = _perf()
+    d = _worker("decode", tp=4, itl=0.5)               # no slack anywhere
+    # a prefill worker with a massive queue should lose to local execution
+    busy_q = [_task(l_incr=8000) for _ in range(20)]
+    p = _worker("prefill", tp=4, ttft=5.0, queue=busy_q)
+    dec = route_prefill(_task(l_incr=256), d, [p], perf, cfg, random.Random(0))
+    assert dec.kind == "local" and dec.reason == "cost"
+    # and with an idle prefill worker + expensive history, remote wins
+    p2 = _worker("prefill", tp=4, ttft=5.0)
+    dec2 = route_prefill(_task(l_hist=64, l_incr=4096), d, [p2], perf, cfg,
+                         random.Random(0))
+    assert dec2.est_cost > 0
+
+
+def test_routing_skips_dead_workers():
+    cfg = RoutingConfig(ttft_thres=2.0, itl_thres=0.1)
+    d = _worker("decode", itl=0.09)
+    p = _worker("prefill", ttft=0.1)
+    p.alive = False
+    dec = route_prefill(_task(), d, [p], _perf(), cfg, random.Random(0))
+    assert dec.kind == "local"
+
+
+# ---------------------------------------------------------------------------
+# Simulator invariants
+# ---------------------------------------------------------------------------
+
+DEP = Deployment((WorkerGroup(4, 2),), (WorkerGroup(4, 2),))
+SLO = SLOSpec(ttft_thres=3.0, itl_thres=0.15)
+
+
+@pytest.mark.parametrize("scheduler", ["ampd", "dynamo", "vllm", "continuum",
+                                       "ampd-noreorder", "ampd-noroute"])
+def test_all_sessions_complete(scheduler):
+    sessions = make_trace("hotpotqa", num_sessions=60, arrival_rate=0.8, seed=2)
+    r = simulate_deployment(_perf(), DEP, sessions, SLO, scheduler=scheduler)
+    assert all(s.finish_time is not None for s in r.sessions)
+    # token conservation: every round produced one TTFT and decode_len ITLs
+    for s in r.sessions:
+        assert len(s.ttfts) == s.num_rounds
+        assert len(s.itls) == s.total_decode()
+
+
+def test_colocated_has_no_remote_and_dynamo_no_local():
+    ss = make_trace("toolbench", num_sessions=40, arrival_rate=1.0, seed=3)
+    r_v = simulate_deployment(_perf(), DEP, ss, SLO, scheduler="vllm")
+    assert r_v.local_fraction == 1.0
+    ss = make_trace("toolbench", num_sessions=40, arrival_rate=1.0, seed=3)
+    r_d = simulate_deployment(_perf(), DEP, ss, SLO, scheduler="dynamo")
+    assert r_d.local_fraction == 0.0
+
+
+def test_disaggregation_protects_itl():
+    """PD interference: co-located ITL >= disaggregated ITL under load."""
+    mk = lambda: make_trace("dureader", num_sessions=80, arrival_rate=1.5, seed=4)
+    r_d = simulate_deployment(_perf(), DEP, mk(), SLO, scheduler="dynamo")
+    r_v = simulate_deployment(_perf(), DEP, mk(), SLO, scheduler="vllm")
+    assert r_v.avg_itl > r_d.avg_itl
+
+
+def test_decode_failure_recovers_sessions():
+    ss = make_trace("hotpotqa", num_sessions=40, arrival_rate=0.8, seed=5)
+    perf = _perf()
+    sim = Simulation(perf, DEP, ss, SLO, SimConfig(scheduler="ampd"),
+                     failures=[(10.0, "decode", 0)])
+    r = sim.run()
+    assert r.recoveries > 0
+    assert all(s.finish_time is not None for s in r.sessions)
+
+
+def test_prefill_failure_reroutes_queue():
+    ss = make_trace("dureader", num_sessions=40, arrival_rate=2.0, seed=6)
+    sim = Simulation(_perf(), DEP, ss, SLO, SimConfig(scheduler="dynamo"),
+                     failures=[(5.0, "prefill", 0)])
+    r = sim.run()
+    assert all(s.finish_time is not None for s in r.sessions)
+
+
+def test_straggler_cost_routing_prefers_fast_worker():
+    """Alg. 1 lines 6-9: the cost model accounts for worker speed, so a
+    4x-slow straggler loses the argmin when no one has slack."""
+    cfg = RoutingConfig(ttft_thres=2.0, itl_thres=0.1)
+    perf = _perf()
+    # decode worker busy with queued local prefills -> local is expensive
+    d = _worker("decode", tp=4, itl=0.5,
+                queue=[_task(l_incr=4096) for _ in range(4)])
+    slow = _worker("prefill", tp=4, ttft=5.0)
+    slow.speed = 0.25
+    fast = _worker("prefill", tp=4, ttft=5.0)
+    dec = route_prefill(_task(l_incr=4096), d, [slow, fast], perf, cfg,
+                        random.Random(0))
+    assert dec.kind == "remote" and dec.worker_idx == 1
+
+
+def test_straggler_receives_fewer_tasks_under_load():
+    """Cluster-level: under prefill saturation the slow worker's completed-
+    task share drops (windowed stats + cost model route around it)."""
+    dep = Deployment((WorkerGroup(4, 2),), (WorkerGroup(4, 2),))
+    ss = make_trace("gaia", num_sessions=60, arrival_rate=1.0, seed=7)
+    slow = {("prefill", 0): 0.25}
+    sim = Simulation(_perf(), dep, ss, SLO, SimConfig(scheduler="ampd"),
+                     straggler=slow)
+    r = sim.run()
+    done = [w.tasks_done for w in sim.prefill_workers]
+    assert done[0] < done[1]
+
+
+def test_elastic_scale_up_reduces_pressure():
+    ss = make_trace("dureader", num_sessions=60, arrival_rate=2.5, seed=8)
+    perf = _perf()
+    small = Deployment((WorkerGroup(4, 1),), (WorkerGroup(4, 1),))
+    r1 = simulate_deployment(perf, small, ss, SLO, scheduler="ampd")
+    ss2 = make_trace("dureader", num_sessions=60, arrival_rate=2.5, seed=8)
+    big = Deployment((WorkerGroup(4, 3),), (WorkerGroup(4, 2),))
+    r2 = simulate_deployment(perf, big, ss2, SLO, scheduler="ampd")
+    assert r2.p95_ttft <= r1.p95_ttft
+    assert r2.slo_attainment >= r1.slo_attainment

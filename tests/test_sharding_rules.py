@@ -1,0 +1,82 @@
+"""Shape-aware priority sharding engine: the rules that make one config
+serve 64-head (Megatron) and 40/10-head (context/row-parallel) archs."""
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.distributed.sharding import ShardingEnv, make_rules  # noqa: E402
+from repro.launch.mesh import make_worker_mesh  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def env():
+    # 1x1 mesh can't test divisibility; build an abstract 16x16 mesh
+    from jax.sharding import AbstractMesh, AxisType
+    mesh = AbstractMesh((16, 16), ("data", "model"),
+                        axis_types=(AxisType.Auto,) * 2)
+    rules = make_rules(mode="prefill", data_axes=("data",))
+    return ShardingEnv(mesh=mesh, rules=rules)
+
+
+def test_divisible_heads_win(env):
+    # command-r: wq (8192, 64, 128) -> heads sharded, attn_in dropped
+    spec = env.spec(("attn_in", "heads", "head_dim"), (8192, 64, 128))
+    assert spec == P(None, "model", None)
+
+
+def test_non_divisible_heads_fall_back_to_row_parallel(env):
+    # qwen: 40 heads don't divide 16 -> attn_in takes the model axis
+    spec = env.spec(("attn_in", "heads", "head_dim"), (5120, 40, 128))
+    assert spec == P("model", None, None)
+
+
+def test_wo_fallback_uses_o_hd(env):
+    spec = env.spec(("heads", "o_hd", "embed"), (40, 128, 5120))
+    assert spec == P(None, "model", None)
+    spec64 = env.spec(("heads", "o_hd", "embed"), (64, 128, 8192))
+    assert spec64 == P("model", None, None)
+
+
+def test_kv_cache_seq_sharding(env):
+    # kv_heads=8 never divides 16; kv_seq takes the axis
+    spec = env.spec(("batch", "kv_seq", "kv_heads", "head_dim"),
+                    (32, 32768, 8, 128))
+    assert spec == P("data", "model", None, None)
+
+
+def test_vocab_padding_dropped(env):
+    # mamba2 vocab 50280 is not divisible by 16 -> replicated
+    spec = env.spec(("vocab", "embed"), (50280, 768))
+    assert spec == P(None, None)
+    spec2 = env.spec(("vocab", "embed"), (152064, 5120))
+    assert spec2 == P("model", None)
+
+
+def test_logits_prefer_vocab_over_seq(env):
+    spec = env.spec(("batch", "seq", "vocab"), (256, 4096, 152064))
+    assert spec == P("data", None, "model")
+
+
+def test_decode_rules_context_parallel():
+    from jax.sharding import AbstractMesh, AxisType
+    mesh = AbstractMesh((16, 16), ("data", "model"),
+                        axis_types=(AxisType.Auto,) * 2)
+    rules = make_rules(mode="decode", data_axes=("data",))
+    env = ShardingEnv(mesh=mesh, rules=rules)
+    # decode logits (B, H, 1, T): only kv_seq can take the model axis
+    spec = env.spec(("batch", "heads", "seq", "kv_seq"), (128, 40, 1, 32768))
+    assert spec == P("data", None, None, "model")
+
+
+def test_batch_unshardable_cells():
+    from jax.sharding import AbstractMesh, AxisType
+    mesh = AbstractMesh((16, 16), ("data", "model"),
+                        axis_types=(AxisType.Auto,) * 2)
+    rules = make_rules(mode="decode", data_axes=("data",),
+                       batch_shardable=False)
+    env = ShardingEnv(mesh=mesh, rules=rules)
+    spec = env.spec(("batch", "kv_seq", "kv_heads", "head_dim"),
+                    (1, 524288, 1, 256))
+    assert spec == P(None, "model", None, None)

@@ -1,0 +1,88 @@
+"""End-to-end behaviour: AMPD's scheduling wins where the paper says it
+should — interleaved multi-round workloads where baselines pin themselves to
+one side of the TTFT/ITL trade-off."""
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    Deployment,
+    PerfModel,
+    SLOSpec,
+    WorkerGroup,
+    simulate_deployment,
+)
+from repro.core.planner import plan, solve_ilp
+from repro.workloads import make_trace, trace_stats
+
+
+def test_trace_stats_match_table1():
+    expected = {
+        "toolbench": (3.96, 703.79, 50.39),
+        "gaia": (11.32, 6161.02, 528.76),
+        "hotpotqa": (3.0, 1569.8, 80.03),
+        "dureader": (4.0, 3081.23, 150.10),
+    }
+    for name, (rounds, pf, dc) in expected.items():
+        st = trace_stats(make_trace(name, num_sessions=600, seed=0))
+        assert abs(st["avg_rounds"] - rounds) / rounds < 0.10, name
+        assert abs(st["avg_prefill_len"] - pf) / pf < 0.12, name
+        assert abs(st["avg_decode_len"] - dc) / dc < 0.12, name
+
+
+def test_ampd_improves_slo_over_baselines():
+    """The paper's headline claim at reproduction scale — under the paper's
+    protocol (§7.1): every scheduler is tuned over candidate deployments and
+    reports its best (AMPD's pick coincides with the planner's).  ToolBench
+    at 2 req/s on 8 GPUs is a discriminating stressed regime (see
+    EXPERIMENTS.md for the full Fig. 4 grid, including regimes where
+    co-location remains competitive, as the paper also observes on GAIA)."""
+    perf = PerfModel(get_config("qwen3-32b"))
+    slo = SLOSpec(ttft_thres=1.5, itl_thres=2.2 * perf.dec[4].alpha)
+    candidates = [
+        Deployment((WorkerGroup(4, 1),), (WorkerGroup(4, 1),)),
+        Deployment((WorkerGroup(2, 2),), (WorkerGroup(4, 1),)),
+        Deployment((WorkerGroup(2, 1),), (WorkerGroup(2, 3),)),
+        Deployment((WorkerGroup(2, 3),), (WorkerGroup(2, 1),)),
+    ]
+
+    def best(scheduler):
+        out = -1.0
+        for dep in candidates:
+            accs = [simulate_deployment(
+                perf, dep,
+                make_trace("toolbench", num_sessions=150, arrival_rate=2.0,
+                           seed=s),
+                slo, scheduler=scheduler).slo_attainment for s in (11, 12)]
+            out = max(out, sum(accs) / 2)
+        return out
+
+    r_ampd = best("ampd")
+    assert r_ampd >= best("dynamo") + 0.02
+    assert r_ampd >= best("vllm") + 0.02
+
+
+def test_ablation_ordering():
+    """Fig. 5 direction: full AMPD >= pure disaggregation (averaged seeds)."""
+    perf = PerfModel(get_config("qwen3-32b"))
+    dep = Deployment((WorkerGroup(4, 2),), (WorkerGroup(4, 2),))
+    slo = SLOSpec(ttft_thres=2.5, itl_thres=0.12)
+    mk = lambda s: make_trace("dureader", num_sessions=120, arrival_rate=1.2,
+                              seed=s)
+    full = sum(simulate_deployment(perf, dep, mk(s), slo, "ampd")
+               .slo_attainment for s in (1, 2, 3)) / 3
+    none = sum(simulate_deployment(perf, dep, mk(s), slo, "dynamo")
+               .slo_attainment for s in (1, 2, 3)) / 3
+    assert full >= none
+
+
+def test_planner_end_to_end():
+    perf = PerfModel(get_config("qwen3-32b"))
+    slo = SLOSpec(ttft_thres=3.0, itl_thres=0.15)
+    res = plan(perf,
+               lambda: make_trace("hotpotqa", num_sessions=60,
+                                  arrival_rate=0.8, seed=5),
+               N=8, slo=slo, max_candidates=16, seed=5)
+    assert res.ilp.status == "optimal"
+    dep, att, _ = res.ranked[0]
+    assert dep.gpus() <= 8
+    assert att > 0.0
