@@ -75,6 +75,17 @@ def main() -> None:
     rows = fig8_latency.main()
     record("fig8_latency", t0, f"{len(rows)} traces")
 
+    _section("Fig. 9: chunked incremental prefill (beyond-paper)")
+    from benchmarks import fig9_chunked
+    t0 = time.time()
+    rows = fig9_chunked.main()
+    whole = next(r for r in rows if r["arm"] == "interference"
+                 and r["scheduler"] == "ampd")
+    chunk = next(r for r in rows if r["arm"] == "interference"
+                 and r["scheduler"] == "ampd-chunked")
+    record("fig9_chunked", t0,
+           f"itl_gain={(1 - chunk['avg_itl_ms'] / whole['avg_itl_ms']):+.1%}")
+
     _section("Fault tolerance / stragglers (beyond-paper)")
     from benchmarks import fault_tolerance
     t0 = time.time()

@@ -1,17 +1,23 @@
-"""Discrete-event serving simulator (paper App. A.1).
+"""Discrete-event serving simulator (paper App. A.1) — modeled-backend
+facade over the unified runtime.
 
-Simulates disaggregated (and co-located) serving of multi-round sessions:
-request dispatch/binding, continuous decode batching, prefill queues with
-pluggable ordering policies, KV transfers with lazy reads overlapped into
-queue wait, PD interference (a local prefill pauses the decode batch),
-worker failures/recovery, stragglers and elastic scaling.
-
+The full multi-round protocol (dispatch/binding, continuous decode batching,
+prefill queues with pluggable ordering, KV transfers with lazy reads
+overlapped into queue wait, PD interference, chunked incremental prefill,
+worker failures/recovery, stragglers and elastic scaling) lives in
+``repro.runtime.ServingRuntime``; this module instantiates it with a
+:class:`ModeledBackend` whose durations come from the fitted ``PerfModel``.
 It is both (a) the planner's P95 estimator (§5 / App. A.1) and (b) the
-full-scale experiment harness behind the Fig. 4-8 benchmarks — calibrated by
-the same ``PerfModel`` the live engines profile into.
+full-scale experiment harness behind the Fig. 4-9 benchmarks — the live
+cluster (``repro.serving.cluster``) is the SAME engine with measured
+durations.
 
 Schedulers:
   ampd            adaptive routing (Alg. 1) + prefill reordering (Alg. 2)
+  ampd-chunked    ampd with chunk-granular incremental prefill: each round's
+                  increment is split into ``chunk_tokens``-sized sub-chunks
+                  routed/reordered independently, bounding a local prefill's
+                  decode pause to one chunk (benchmarks/fig9_chunked.py)
   ampd-noreorder  adaptive routing only (Fig. 5 ablation)
   ampd-noroute    reordering only, prefills always remote (Fig. 5 ablation)
   dynamo          pure disaggregation: always remote, FCFS
@@ -22,41 +28,30 @@ Schedulers:
 """
 from __future__ import annotations
 
-import heapq
-import random
-from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.perf_model import PerfModel
 from repro.core.planner import Deployment
-from repro.core.reordering import reorder_queue
-from repro.core.routing import RouteDecision, RoutingConfig, always_remote, route_prefill
-from repro.core.types import PrefillTask, Session, SLOSpec
+from repro.core.routing import RoutingConfig
+from repro.core.types import Session, SLOSpec
+from repro.runtime import (
+    COLOCATED,
+    Coordinator,
+    ModeledBackend,
+    ServingRuntime,
+    WindowStat,
+    mean,
+    p95,
+)
+from repro.core.types import PrefillTask  # noqa: F401  (re-export, was public)
 
-COLOCATED = ("vllm", "continuum")
-
-
-class WindowStat:
-    """Sliding-window mean over the last ``window_s`` seconds (paper §3)."""
-
-    def __init__(self, window_s: float = 10.0):
-        self.window_s = window_s
-        self.buf: deque = deque()
-
-    def add(self, t: float, v: float) -> None:
-        self.buf.append((t, v))
-
-    def value(self, now: float) -> float:
-        while self.buf and self.buf[0][0] < now - self.window_s:
-            self.buf.popleft()
-        if not self.buf:
-            return 0.0
-        return sum(v for _, v in self.buf) / len(self.buf)
+_p95 = p95   # backward-compatible alias
 
 
 @dataclass
 class SimWorker:
+    """Modeled worker: pure scheduling state, no engine underneath."""
     idx: int
     tp: int
     kind: str                     # "prefill" | "decode"
@@ -64,8 +59,6 @@ class SimWorker:
     alive: bool = True
     colocated: bool = False
     prefill_queue: List[PrefillTask] = field(default_factory=list)
-    busy: bool = False            # running a prefill task
-    stepping: bool = False        # decode step in flight
     sessions: List[Session] = field(default_factory=list)
     mem_tokens: int = 0
     ttft_stat: WindowStat = field(default_factory=WindowStat)
@@ -74,6 +67,7 @@ class SimWorker:
     windowed_itl: float = 0.0
     util_busy_s: float = 0.0
     tasks_done: int = 0
+    _running: bool = False
 
     @property
     def name(self) -> str:
@@ -87,6 +81,7 @@ class SimConfig:
     reorder_w: int = 3
     window_s: float = 10.0
     kv_overlap: bool = True       # lazy-read overlap with queue wait (§6)
+    chunk_tokens: int = 0         # 0 -> whole-task prefill (512 for -chunked)
     seed: int = 0
     max_time: float = 1.0e7
 
@@ -108,14 +103,10 @@ class SimResult:
     worker_util: Dict[str, float]
 
 
-def _p95(vals: List[float]) -> float:
-    if not vals:
-        return 0.0
-    s = sorted(vals)
-    return s[min(len(s) - 1, int(0.95 * len(s)))]
-
-
 class Simulation:
+    """Facade preserving the original constructor/attribute surface while
+    the protocol itself runs in :class:`ServingRuntime`."""
+
     def __init__(self, perf: PerfModel, deployment: Deployment,
                  sessions: List[Session], slo: SLOSpec,
                  cfg: Optional[SimConfig] = None,
@@ -124,13 +115,7 @@ class Simulation:
         self.perf = perf
         self.slo = slo
         self.cfg = cfg or SimConfig()
-        self.rng = random.Random(self.cfg.seed)
-        self.now = 0.0
-        self._heap: List[Tuple[float, int, Callable]] = []
-        self._seq = 0
-        self.recoveries = 0
-        self.local_count = 0
-        self.total_routed = 0
+        self.sessions = sessions
 
         colocated = self.cfg.scheduler in COLOCATED
         self.prefill_workers: List[SimWorker] = []
@@ -140,274 +125,75 @@ class Simulation:
             i = 0
             for grp in list(deployment.prefill) + list(deployment.decode):
                 for _ in range(grp.count):
-                    self.decode_workers.append(SimWorker(
-                        i, grp.tp, "decode", colocated=True,
-                        ttft_stat=WindowStat(self.cfg.window_s),
-                        itl_stat=WindowStat(self.cfg.window_s)))
+                    self.decode_workers.append(self._new_worker(
+                        i, grp.tp, "decode", colocated=True))
                     i += 1
         else:
-            i = 0
-            for grp in deployment.prefill:
-                for _ in range(grp.count):
-                    self.prefill_workers.append(SimWorker(
-                        i, grp.tp, "prefill",
-                        ttft_stat=WindowStat(self.cfg.window_s),
-                        itl_stat=WindowStat(self.cfg.window_s)))
-                    i += 1
-            i = 0
-            for grp in deployment.decode:
-                for _ in range(grp.count):
-                    self.decode_workers.append(SimWorker(
-                        i, grp.tp, "decode",
-                        ttft_stat=WindowStat(self.cfg.window_s),
-                        itl_stat=WindowStat(self.cfg.window_s)))
-                    i += 1
+            for kind, groups, ws in (("prefill", deployment.prefill,
+                                      self.prefill_workers),
+                                     ("decode", deployment.decode,
+                                      self.decode_workers)):
+                i = 0
+                for grp in groups:
+                    for _ in range(grp.count):
+                        ws.append(self._new_worker(i, grp.tp, kind))
+                        i += 1
         if straggler:
             for (kind, idx), sp in straggler.items():
-                ws = self.prefill_workers if kind == "prefill" else self.decode_workers
+                ws = (self.prefill_workers if kind == "prefill"
+                      else self.decode_workers)
                 if idx < len(ws):
                     ws[idx].speed = sp
 
-        self.sessions = sessions
+        self.coordinator = Coordinator(
+            perf=perf, routing=self.cfg.routing,
+            scheduler=self.cfg.scheduler, reorder_w=self.cfg.reorder_w,
+            seed=self.cfg.seed)
+        self.runtime = ServingRuntime(
+            ModeledBackend(perf, kv_overlap=self.cfg.kv_overlap),
+            self.coordinator, self.prefill_workers, self.decode_workers,
+            chunk_tokens=self.cfg.chunk_tokens, max_time=self.cfg.max_time)
         for s in sessions:
-            self._at(s.arrival_time, lambda s=s: self._on_arrival(s))
+            self.runtime.submit(s)
         for (t, kind, idx) in failures or []:
-            self._at(t, lambda k=kind, i=idx: self._on_failure(k, i))
+            self.runtime.schedule_failure(kind, idx, t)
 
-    # -- event machinery -------------------------------------------------
-    def _at(self, t: float, fn: Callable) -> None:
-        self._seq += 1
-        heapq.heappush(self._heap, (t, self._seq, fn))
+    def _new_worker(self, idx: int, tp: int, kind: str,
+                    colocated: bool = False) -> SimWorker:
+        return SimWorker(idx, tp, kind, colocated=colocated,
+                         ttft_stat=WindowStat(self.cfg.window_s),
+                         itl_stat=WindowStat(self.cfg.window_s))
 
-    def run(self) -> SimResult:
-        while self._heap:
-            t, _, fn = heapq.heappop(self._heap)
-            if t > self.cfg.max_time:
-                break
-            self.now = t
-            fn()
-        return self._result()
+    # -- compatibility surface -------------------------------------------
+    @property
+    def now(self) -> float:
+        return self.runtime.now
 
-    # -- arrival & binding (§3 step 1) ------------------------------------
-    def _on_arrival(self, s: Session) -> None:
-        alive = [d for d in self.decode_workers if d.alive]
-        if not alive:
-            return
-        d = min(alive, key=lambda w: w.mem_tokens)
-        s.decode_worker = d.idx
-        task = PrefillTask(
-            session_id=s.session_id, round_idx=0, l_hist=0,
-            l_incr=s.rounds[0].prefill_len, enqueue_time=self.now,
-            arrival_time=self.now, is_initial=True)
-        self._route(s, task)
+    @property
+    def recoveries(self) -> int:
+        return self.coordinator.rebinds
 
-    # -- routing (§3 step 2 / §4.1) ---------------------------------------
-    def _route(self, s: Session, task: PrefillTask) -> None:
-        d = self.decode_workers[s.decode_worker]
-        if not d.alive:
-            self._rebind(s, task)
-            return
-        self.total_routed += 1
-        sched = self.cfg.scheduler
-        for w in self.prefill_workers + self.decode_workers:
-            # Slack signal = max(recent completions, current queue drain):
-            # queue metadata is globally shared (§3), and without the drain
-            # term a stale 10s window lets bursts pile onto one worker.
-            drain = sum(self.perf.t_pre(k.l_hist, k.l_incr, w.tp, w.speed)
-                        for k in w.prefill_queue)
-            w.windowed_ttft = max(w.ttft_stat.value(self.now), drain)
-            w.windowed_itl = w.itl_stat.value(self.now)
+    @property
+    def local_count(self) -> int:
+        return self.coordinator.local_count
 
-        if sched in COLOCATED or not self.prefill_workers:
-            dec = RouteDecision("local", reason="colocated")
-        elif sched in ("dynamo", "ampd-noroute"):
-            dec = always_remote(task, d, self.prefill_workers, self.perf,
-                                self.cfg.routing, self.rng)
-        else:  # ampd / ampd-noreorder
-            dec = route_prefill(task, d, self.prefill_workers, self.perf,
-                                self.cfg.routing, self.rng)
+    @property
+    def total_routed(self) -> int:
+        return self.coordinator.total_routed
 
-        task.enqueue_time = self.now
-        if dec.kind == "local":
-            self.local_count += 1
-            task.routed_to = "local"
-            d.prefill_queue.append(task)
-            self._schedule_worker(d)
-        else:
-            w = self.prefill_workers[dec.worker_idx]
-            task.routed_to = f"remote:{w.idx}"
-            w.prefill_queue.append(task)
-            self._schedule_worker(w)
-
-    def _rebind(self, s: Session, task: Optional[PrefillTask]) -> None:
-        """Decode worker died: re-bind and re-prefill the whole context."""
-        alive = [d for d in self.decode_workers if d.alive]
-        if not alive:
-            return
-        d = min(alive, key=lambda w: w.mem_tokens)
-        s.decode_worker = d.idx
-        self.recoveries += 1
-        l_incr = s.context_len + (task.l_incr if task else 0)
-        s.context_len = 0
-        rec = PrefillTask(
-            session_id=s.session_id,
-            round_idx=task.round_idx if task else s.current_round,
-            l_hist=0, l_incr=max(l_incr, 1), enqueue_time=self.now,
-            arrival_time=task.arrival_time if task else self.now,
-            is_initial=False)
-        self._route(s, rec)
-
-    # -- prefill execution (§3 step 3 / §4.2) ------------------------------
-    def _order_queue(self, w: SimWorker) -> None:
-        sched = self.cfg.scheduler
-        if sched in ("ampd", "ampd-noroute") and len(w.prefill_queue) > 1:
-            est = lambda t: self.perf.t_pre(t.l_hist, t.l_incr, w.tp, w.speed)
-            reorder_queue(w.prefill_queue, self.now,
-                          self.cfg.routing.ttft_thres, est, self.cfg.reorder_w)
-        elif sched == "continuum" and len(w.prefill_queue) > 1:
-            # session priority: tasks reusing cached KV first (stable)
-            w.prefill_queue.sort(key=lambda t: t.l_hist == 0)
-
-    def _schedule_worker(self, w: SimWorker) -> None:
-        """Advance a worker: prefill first (priority), else decode step."""
-        if not w.alive or w.busy or w.stepping:
-            return
-        if w.prefill_queue:
-            self._order_queue(w)
-            task = w.prefill_queue.pop(0)
-            s = self._session(task.session_id)
-            d = self.decode_workers[s.decode_worker]
-            dur = self.perf.t_pre(task.l_hist, task.l_incr, w.tp, w.speed)
-            extra = 0.0
-            if w.kind == "prefill" and task.l_hist > 0:
-                t_read = self.perf.t_kv(task.l_hist, d.tp, w.tp)
-                if self.cfg.kv_overlap:
-                    waited = self.now - task.enqueue_time
-                    extra = max(0.0, t_read - waited)   # lazy read overlap (§6)
-                else:
-                    extra = t_read
-            w.busy = True
-            w.util_busy_s += dur + extra
-            self._at(self.now + extra + dur,
-                     lambda w=w, task=task: self._on_prefill_done(w, task))
-            return
-        if w.kind == "decode" and w.sessions:
-            self._start_decode_step(w)
-
-    def _on_prefill_done(self, w: SimWorker, task: PrefillTask) -> None:
-        w.busy = False
-        w.tasks_done += 1
-        s = self._session(task.session_id)
-        d = self.decode_workers[s.decode_worker]
-        if not d.alive:
-            self._rebind(s, None)
-            self._schedule_worker(w)
-            return
-        # incremental KV write-back for remote execution (§3 step 3.ii)
-        delay = 0.0
-        if w.kind == "prefill":
-            delay = self.perf.t_kv(task.l_incr, w.tp, d.tp)
-        join_t = self.now + delay
-        ttft = join_t - task.arrival_time
-        s.ttfts.append(ttft)
-        w.ttft_stat.add(join_t, ttft)
-        self._at(join_t, lambda s=s, task=task: self._on_session_join(s, task))
-        self._schedule_worker(w)
-
-    def _on_session_join(self, s: Session, task: PrefillTask) -> None:
-        d = self.decode_workers[s.decode_worker]
-        if not d.alive:
-            self._rebind(s, None)
-            return
-        s.context_len = task.l_hist + task.l_incr
-        d.mem_tokens += task.l_incr
-        s.tokens_this_round = 0                      # type: ignore[attr-defined]
-        s.last_token_time = self.now                 # type: ignore[attr-defined]
-        d.sessions.append(s)
-        self._schedule_worker(d)
-
-    # -- decode (§3 step 4) -------------------------------------------------
-    def _start_decode_step(self, d: SimWorker) -> None:
-        batch = list(d.sessions)
-        if not batch:
-            return
-        avg_ctx = sum(s.context_len for s in batch) / len(batch)
-        dt = self.perf.t_dec(len(batch), d.tp, avg_ctx, d.speed)
-        d.stepping = True
-        d.util_busy_s += dt
-        self._at(self.now + dt, lambda d=d, b=batch: self._on_step_end(d, b))
-
-    def _on_step_end(self, d: SimWorker, batch: List[Session]) -> None:
-        d.stepping = False
-        if not d.alive:
-            return
-        finished_round = []
-        for s in batch:
-            if s not in d.sessions:
-                continue
-            itl = self.now - s.last_token_time       # type: ignore[attr-defined]
-            s.itls.append(itl)
-            d.itl_stat.add(self.now, itl)
-            s.last_token_time = self.now             # type: ignore[attr-defined]
-            s.tokens_this_round += 1                 # type: ignore[attr-defined]
-            s.context_len += 1
-            d.mem_tokens += 1
-            if s.tokens_this_round >= s.rounds[s.current_round].decode_len:
-                finished_round.append(s)
-        for s in finished_round:
-            d.sessions.remove(s)
-            self._on_round_complete(s)
-        self._schedule_worker(d)
-
-    def _on_round_complete(self, s: Session) -> None:
-        r = s.rounds[s.current_round]
-        s.current_round += 1
-        if s.current_round >= s.num_rounds:
-            s.finish_time = self.now
-            d = self.decode_workers[s.decode_worker]
-            d.mem_tokens -= s.context_len
-            return
-        nxt = s.rounds[s.current_round]
-        self._at(self.now + r.env_delay, lambda s=s, nxt=nxt: self._on_env_done(s, nxt))
-
-    def _on_env_done(self, s: Session, nxt) -> None:
-        task = PrefillTask(
-            session_id=s.session_id, round_idx=s.current_round,
-            l_hist=s.context_len, l_incr=nxt.prefill_len,
-            enqueue_time=self.now, arrival_time=self.now)
-        self._route(s, task)
-
-    # -- failures / elasticity ---------------------------------------------
-    def _on_failure(self, kind: str, idx: int) -> None:
-        ws = self.prefill_workers if kind == "prefill" else self.decode_workers
-        if idx >= len(ws):
-            return
-        w = ws[idx]
-        w.alive = False
-        orphans = list(w.prefill_queue)
-        w.prefill_queue.clear()
-        if kind == "decode":
-            for s in list(w.sessions):
-                w.sessions.remove(s)
-                self._rebind(s, None)
-        for task in orphans:
-            s = self._session(task.session_id)
-            if kind == "decode":
-                self._rebind(s, task)
-            else:
-                self._route(s, task)
+    def _session(self, sid: int) -> Session:
+        return self.runtime.sessions[sid]   # id-keyed, not list-indexed
 
     def add_worker(self, kind: str, tp: int) -> SimWorker:
         ws = self.prefill_workers if kind == "prefill" else self.decode_workers
-        w = SimWorker(len(ws), tp, kind,
-                      ttft_stat=WindowStat(self.cfg.window_s),
-                      itl_stat=WindowStat(self.cfg.window_s))
-        ws.append(w)
+        w = self._new_worker(len(ws), tp, kind)
+        self.runtime.register_worker(w, kind)
         return w
 
-    # -- bookkeeping ----------------------------------------------------
-    def _session(self, sid: int) -> Session:
-        return self.sessions[sid]
+    # -- run & results ----------------------------------------------------
+    def run(self) -> SimResult:
+        self.runtime.run()
+        return self._result()
 
     def _result(self) -> SimResult:
         ss = self.sessions
@@ -424,15 +210,15 @@ class Simulation:
         return SimResult(
             sessions=ss,
             slo_attainment=att,
-            p95_ttft=_p95(ttfts),
-            p95_itl=_p95(itls),
-            p95_e2e=_p95(e2e),
-            avg_ttft_initial=sum(init) / len(init) if init else 0.0,
-            avg_ttft_incremental=sum(incr) / len(incr) if incr else 0.0,
-            avg_itl=sum(itls) / len(itls) if itls else 0.0,
-            avg_e2e=sum(e2e) / len(e2e) if e2e else 0.0,
-            local_fraction=self.local_count / max(self.total_routed, 1),
-            recoveries=self.recoveries,
+            p95_ttft=p95(ttfts),
+            p95_itl=p95(itls),
+            p95_e2e=p95(e2e),
+            avg_ttft_initial=mean(init),
+            avg_ttft_incremental=mean(incr),
+            avg_itl=mean(itls),
+            avg_e2e=mean(e2e),
+            local_fraction=self.coordinator.local_fraction,
+            recoveries=self.coordinator.rebinds,
             sim_time=self.now,
             worker_util=util,
         )

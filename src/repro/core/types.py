@@ -23,6 +23,15 @@ class PrefillTask:
     is_initial: bool = False
     postponements: int = 0             # Alg. 2 starvation counter
     routed_to: Optional[str] = None    # "local" | "remote:<i>"
+    # -- chunked incremental prefill (DESIGN.md §7) ---------------------
+    # A round's increment may be split into sub-chunks that are routed,
+    # reordered and executed independently; l_hist then includes earlier
+    # chunks of the same round and incr_offset locates this chunk inside
+    # the round's increment.  Whole-task scheduling is the degenerate
+    # single-chunk case (defaults).
+    incr_offset: int = 0               # offset into the round's increment
+    is_final_chunk: bool = True        # TTFT/decode trigger on the last chunk
+    gen: int = 0                       # session rebind generation at creation
 
     @property
     def total_ctx(self) -> int:

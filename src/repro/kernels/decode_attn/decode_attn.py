@@ -21,6 +21,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 exposes TPU compiler options as TPUCompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 INVALID_POS = -(2 ** 30)
 DEFAULT_BLOCK_KV = 512
@@ -120,7 +124,7 @@ def decode_attn_bgrd(
             pltpu.VMEM((rows, 1), jnp.float32),
             pltpu.VMEM((rows, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q_positions, kv_positions, q, k, v)

@@ -1,0 +1,28 @@
+"""Unified multi-round serving runtime (DESIGN.md).
+
+One protocol engine — arrival, binding, routing (Alg. 1), queue reordering
+(Alg. 2), chunked incremental prefill, KV lazy-read/write-back timing,
+continuous decode batching, env delays, failures/rebind, stragglers and
+elastic scaling — behind two execution backends:
+
+  * :class:`ModeledBackend` — durations from the fitted PerfModel; this is
+    the planner's P95 estimator and the Fig. 4-9 experiment harness
+    (``repro.core.simulator`` is a thin facade over it).
+  * :class:`LiveBackend` — durations measured from real JAX engine calls
+    (``repro.serving.cluster`` is a thin facade over it).
+"""
+from repro.runtime.backend import (  # noqa: F401
+    ExecutionBackend,
+    LiveBackend,
+    ModeledBackend,
+)
+from repro.runtime.coordinator import (  # noqa: F401
+    ADAPTIVE,
+    COLOCATED,
+    REORDERING,
+    SCHEDULERS,
+    Coordinator,
+)
+from repro.runtime.events import EventLoop  # noqa: F401
+from repro.runtime.metrics import WindowStat, mean, p95, quantile  # noqa: F401
+from repro.runtime.protocol import DEFAULT_CHUNK_TOKENS, ServingRuntime  # noqa: F401

@@ -1,0 +1,294 @@
+"""Execution backends: how the unified runtime obtains durations & tokens
+(DESIGN.md §2).
+
+The :class:`ServingRuntime` owns the multi-round protocol state machine; an
+:class:`ExecutionBackend` answers the only questions that differ between the
+planner's estimator and a real deployment:
+
+  * how long does this prefill / decode step / KV transfer take?
+  * what tokens did it produce, and what KV needs to move?
+
+``ModeledBackend`` answers from the fitted :class:`PerfModel` (discrete-event
+simulation — paper App. A.1); ``LiveBackend`` answers by *running* the JAX
+engines and timing them (the CPU-scale twin of a TPU deployment).  Everything
+else — binding, routing, queue ordering, chunking, failures, rebinding,
+SLO accounting — is shared code in the protocol engine.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.perf_model import PerfModel
+from repro.core.types import PrefillTask
+
+#: payload of a completed prefill: (placement, kv_increment, first_token)
+PrefillPayload = Tuple[str, Optional[Dict], Optional[int]]
+
+
+class ExecutionBackend:
+    """Duck-typed interface; both implementations below are the spec."""
+
+    # -- sessions ----------------------------------------------------------
+    def incr_len(self, session, round_idx: int) -> int:
+        raise NotImplementedError
+
+    # -- admission ---------------------------------------------------------
+    def admit_local(self, decode_worker, session) -> bool:
+        """Reserve local execution resources (a batch slot, for live
+        continuous batching).  False -> the runtime retries shortly
+        (admission backpressure)."""
+        return True
+
+    # -- prefill -----------------------------------------------------------
+    def history_read_extra(self, worker, task: PrefillTask, decode_worker,
+                           waited: float, hist_len: int) -> float:
+        """Residual lazy-read stall before a remote prefill can start:
+        the history KV pull not already hidden under queue wait (§6)."""
+        return 0.0
+
+    def run_prefill(self, worker, task: PrefillTask, session,
+                    decode_worker) -> Tuple[float, Optional[PrefillPayload]]:
+        """Execute (or predict) one prefill chunk; returns (seconds, payload)."""
+        raise NotImplementedError
+
+    def writeback_delay(self, worker, task: PrefillTask,
+                        decode_worker) -> float:
+        """Incremental KV write-back latency between prefill completion and
+        the session joining its decode batch (§3 step 3.ii)."""
+        return 0.0
+
+    def can_join(self, decode_worker, session) -> bool:
+        """Admission gate for a remotely-prefilled session landing on the
+        decode worker (a batch slot must exist).  False -> the runtime
+        retries the join shortly; the KV increment is already in hand."""
+        return True
+
+    def on_join(self, decode_worker, session, task: PrefillTask,
+                payload: Optional[PrefillPayload]) -> None:
+        """Apply side effects of a chunk landing on the decode worker
+        (cache insertion, transcript bookkeeping, batch membership)."""
+
+    # -- decode ------------------------------------------------------------
+    def attached(self, decode_worker) -> List:
+        """Sessions whose KV is resident on this decode worker."""
+        raise NotImplementedError
+
+    def run_decode(self, decode_worker,
+                   batch: List) -> Tuple[float, Dict[int, Optional[int]]]:
+        """One continuous-batching step over ``batch``; returns
+        (seconds, {session_id: next_token_or_None})."""
+        raise NotImplementedError
+
+    def run_fused_prefill(self, decode_worker, task: PrefillTask, session,
+                          batch: List):
+        """Chunked-mode local prefill piggybacking the decode batch: one
+        step that prefills the chunk AND advances every decoding session by
+        one token (weight reads amortize — the chunk bounds the marginal
+        decode delay).  Returns (seconds, payload, {session_id: token})."""
+        raise NotImplementedError
+
+    def on_token(self, decode_worker, session, token: Optional[int]) -> None:
+        """Per-token side effects beyond the runtime's generic accounting."""
+
+    def detach(self, decode_worker, session) -> None:
+        """Release the session's residency (slot / membership)."""
+        raise NotImplementedError
+
+    def on_decode_failure(self, decode_worker) -> None:
+        """Tear down all residency on a failed decode worker."""
+        for s in list(self.attached(decode_worker)):
+            self.detach(decode_worker, s)
+
+    # -- fault tolerance ---------------------------------------------------
+    def make_recovery_task(self, session, task: Optional[PrefillTask],
+                           now: float, pending) -> PrefillTask:
+        """Reset the session after its decode worker died and build the
+        re-prefill task that reconstructs its context PLUS the un-joined
+        suffix of the current round's increment.  ``pending`` is
+        (round_idx, offset_into_increment, token_count) as computed by the
+        runtime — covering a mid-prefill task with its queued sibling
+        chunks, or a never-dispatched round during an env delay."""
+        raise NotImplementedError
+
+
+class ModeledBackend(ExecutionBackend):
+    """Durations predicted by the alpha-beta :class:`PerfModel` (§3)."""
+
+    def __init__(self, perf: PerfModel, *, kv_overlap: bool = True):
+        self.perf = perf
+        self.kv_overlap = kv_overlap
+
+    def incr_len(self, session, round_idx: int) -> int:
+        return session.rounds[round_idx].prefill_len
+
+    def history_read_extra(self, worker, task, decode_worker, waited,
+                           hist_len) -> float:
+        if hist_len <= 0:
+            return 0.0
+        t_read = self.perf.t_kv(hist_len, decode_worker.tp, worker.tp)
+        if self.kv_overlap:
+            return max(0.0, t_read - waited)   # lazy read overlap (§6)
+        return t_read
+
+    def run_prefill(self, worker, task, session, decode_worker):
+        dur = self.perf.t_pre(task.l_hist, task.l_incr, worker.tp,
+                              worker.speed)
+        return dur, None
+
+    def writeback_delay(self, worker, task, decode_worker) -> float:
+        if worker.kind == "prefill":
+            return self.perf.t_kv(task.l_incr, worker.tp, decode_worker.tp)
+        return 0.0
+
+    def on_join(self, decode_worker, session, task, payload) -> None:
+        if session not in decode_worker.sessions:
+            decode_worker.sessions.append(session)
+
+    def attached(self, decode_worker) -> List:
+        return decode_worker.sessions
+
+    def run_decode(self, decode_worker, batch):
+        avg_ctx = sum(s.context_len for s in batch) / len(batch)
+        dt = self.perf.t_dec(len(batch), decode_worker.tp, avg_ctx,
+                             decode_worker.speed)
+        return dt, {s.session_id: None for s in batch}
+
+    def run_fused_prefill(self, decode_worker, task, session, batch):
+        tp, speed = decode_worker.tp, decode_worker.speed
+        avg_ctx = sum(s.context_len for s in batch) / len(batch)
+        # marginal decode cost: per-sequence KV/state reads only — the
+        # weight-read + dispatch floor rides along with the chunk
+        marginal = (self.perf.t_dec(len(batch), tp, avg_ctx, speed)
+                    - self.perf.t_dec(0, tp, avg_ctx, speed))
+        dur = self.perf.t_pre(task.l_hist, task.l_incr, tp, speed) + marginal
+        return dur, None, {s.session_id: None for s in batch}
+
+    def detach(self, decode_worker, session) -> None:
+        if session in decode_worker.sessions:
+            decode_worker.sessions.remove(session)
+
+    def make_recovery_task(self, session, task, now: float,
+                           pending) -> PrefillTask:
+        """Re-prefill the whole context (the KV died with the worker)."""
+        round_idx, _, pend = pending
+        l_incr = session.context_len + pend
+        session.context_len = 0
+        return PrefillTask(
+            session_id=session.session_id, round_idx=round_idx,
+            l_hist=0, l_incr=max(l_incr, 1), enqueue_time=now,
+            arrival_time=task.arrival_time if task else now,
+            is_initial=False)
+
+
+class LiveBackend(ExecutionBackend):
+    """Durations measured from real JAX engine calls (repro.serving)."""
+
+    def __init__(self, perf: PerfModel, *, model_kv_time: bool = False):
+        self.perf = perf
+        self.model_kv_time = model_kv_time
+
+    def incr_len(self, session, round_idx: int) -> int:
+        return len(session.prompt_tokens[round_idx])
+
+    def admit_local(self, decode_worker, session) -> bool:
+        if session.slot is None:
+            if decode_worker.free_slot() is None:
+                return False
+            decode_worker.allocate(session)
+        return True
+
+    def can_join(self, decode_worker, session) -> bool:
+        return (session.slot is not None
+                or decode_worker.free_slot() is not None)
+
+    def run_prefill(self, worker, task, session, decode_worker):
+        import numpy as np
+        from repro.serving.workers import timed
+        if worker.kind == "prefill":
+            hist = None
+            if task.l_hist > 0 and session.slot is not None:
+                hist = decode_worker.history_extract(session)
+            dt, out = timed(worker.execute, task, session,
+                            history_extract=hist)
+            dt /= worker.speed
+            if self.model_kv_time:
+                dt += (self.perf.t_kv(task.l_hist, decode_worker.tp, worker.tp)
+                       + self.perf.t_kv(task.l_incr, worker.tp,
+                                        decode_worker.tp))
+            payload = ("remote", out["increment"],
+                       int(np.argmax(out["logits"])))
+        else:
+            dt, first = worker.local_prefill(task, session)
+            dt /= worker.speed
+            payload = ("local", None, first)
+        return dt, payload
+
+    def on_join(self, decode_worker, session, task, payload) -> None:
+        placement, increment, first = payload
+        if placement == "remote":
+            decode_worker.attach(session, increment, task.l_hist, first,
+                                 task.l_incr)
+        else:
+            session.last_token = first
+        toks = session.prompt_tokens[task.round_idx][
+            task.incr_offset:task.incr_offset + task.l_incr]
+        session.transcript.extend(int(t) for t in toks)
+
+    def attached(self, decode_worker) -> List:
+        return [s for s in decode_worker.slots if s is not None]
+
+    def run_decode(self, decode_worker, batch):
+        # mask slots whose session is not actively decoding (env wait,
+        # prefill in flight) so the engine step skips them — XLA static
+        # shapes decode a -1 token for empty rows
+        keep = {s.session_id for s in batch}
+        saved = {}
+        for i, s in enumerate(decode_worker.slots):
+            if s is not None and s.session_id not in keep:
+                saved[i] = s
+                decode_worker.slots[i] = None
+        dt, toks = decode_worker.decode_once()
+        for i, s in saved.items():
+            decode_worker.slots[i] = s
+        dt /= decode_worker.speed
+        out = {}
+        for slot, tok in toks.items():
+            s = decode_worker.slots[slot]
+            if s is not None:
+                out[s.session_id] = tok
+        return dt, out
+
+    def run_fused_prefill(self, decode_worker, task, session, batch):
+        dt, first, toks = decode_worker.fused_step(task, session, batch)
+        return dt / decode_worker.speed, ("local", None, first), toks
+
+    def on_token(self, decode_worker, session, token) -> None:
+        session.last_token = token
+        session.generated.append(token)
+        session.transcript.append(token)
+
+    def detach(self, decode_worker, session) -> None:
+        decode_worker.detach(session)
+
+    def make_recovery_task(self, session, task, now: float,
+                           pending) -> PrefillTask:
+        """Replay the transcript as a fresh prefill (the KV is gone), then
+        the un-prefilled remainder of the current round's increment — the
+        transcript only holds tokens whose chunks had already joined."""
+        import numpy as np
+        session.slot = None
+        r, off, pend = pending
+        tail = session.prompt_tokens[r][off:off + pend]
+        replay = np.concatenate([
+            np.asarray(session.transcript, np.int32),
+            np.asarray(tail, np.int32)])
+        if len(replay) == 0:
+            replay = session.prompt_tokens[0]
+        session.prompt_tokens = list(session.prompt_tokens)
+        session.prompt_tokens[r] = replay
+        session.context_len = 0
+        session.transcript = []
+        return PrefillTask(
+            session_id=session.session_id, round_idx=r, l_hist=0,
+            l_incr=len(replay), enqueue_time=now, arrival_time=now,
+            is_initial=False)

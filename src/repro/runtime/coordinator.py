@@ -1,0 +1,121 @@
+"""Coordinator: binding, routing and queue ordering for BOTH runtimes
+(paper §3 online stage; DESIGN.md §3).
+
+This is the single authority over the paper's algorithms — ``route_prefill``
+(Alg. 1) and ``reorder_queue`` (Alg. 2) have no other call site in the
+serving paths.  Workers are duck-typed views exposing ``tp``, ``speed``,
+``alive``, ``prefill_queue``, ``ttft_stat`` / ``itl_stat`` and
+``windowed_ttft`` / ``windowed_itl``; the modeled simulator and the live
+cluster both hand their workers straight in.
+
+Slack signal (drain-aware, everywhere): a worker's windowed TTFT is the max
+of its recent-completion window mean and its current queue-drain estimate
+sum(T_pre over queued tasks).  Queue metadata is globally shared (§3) — the
+single-controller adaptation of the paper's Redis layer — and without the
+drain term a stale 10s window lets bursts pile onto one worker.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from repro.core.perf_model import PerfModel
+from repro.core.reordering import reorder_queue
+from repro.core.routing import (
+    RouteDecision,
+    RoutingConfig,
+    always_remote,
+    route_prefill,
+)
+from repro.core.types import PrefillTask
+
+COLOCATED = ("vllm", "continuum")
+#: schedulers that run Alg. 2 reordering on every queue
+REORDERING = ("ampd", "ampd-noroute", "ampd-chunked")
+#: schedulers that run Alg. 1 adaptive routing
+ADAPTIVE = ("ampd", "ampd-noreorder", "ampd-chunked")
+SCHEDULERS = ("ampd", "ampd-noreorder", "ampd-noroute", "ampd-chunked",
+              "dynamo", "vllm", "continuum")
+
+
+@dataclass
+class Coordinator:
+    perf: PerfModel
+    routing: RoutingConfig
+    scheduler: str = "ampd"
+    reorder_w: int = 3
+    seed: int = 0
+    record_decisions: bool = False
+    rng: random.Random = field(init=False)
+
+    def __post_init__(self):
+        if self.scheduler not in SCHEDULERS:
+            raise ValueError(f"unknown scheduler {self.scheduler!r}; "
+                             f"expected one of {SCHEDULERS}")
+        self.rng = random.Random(self.seed)
+        self.local_count = 0
+        self.total_routed = 0
+        self.rebinds = 0
+        #: (session_id, round_idx, incr_offset, kind, worker_idx) per route —
+        #: the backend-parity contract surface (tests/test_runtime_unified).
+        self.decision_log: List[Tuple[int, int, int, str, Optional[int]]] = []
+
+    # -- binding (§3 step 1) ----------------------------------------------
+    def bind(self, session, decode_workers: List):
+        """Least-loaded alive decode worker; prefers one with a free slot
+        when workers expose slot admission (live continuous batching)."""
+        alive = [d for d in decode_workers if d.alive]
+        with_slot = [d for d in alive
+                     if getattr(d, "free_slot", None) is None
+                     or d.free_slot() is not None]
+        d = min(with_slot or alive, key=lambda w: w.mem_tokens)
+        session.decode_worker = d.idx
+        return d
+
+    # -- routing (§3 step 2 / §4.1) ---------------------------------------
+    def refresh_stats(self, now: float, decode_worker, prefill_workers) -> None:
+        """Drain-aware windowed stats, recomputed before every decision."""
+        for w in list(prefill_workers) + [decode_worker]:
+            drain = sum(self.perf.t_pre(k.l_hist, k.l_incr, w.tp, w.speed)
+                        for k in w.prefill_queue)
+            w.windowed_ttft = max(w.ttft_stat.value(now), drain)
+            w.windowed_itl = w.itl_stat.value(now)
+
+    def route(self, task: PrefillTask, now: float, decode_worker,
+              prefill_workers: List) -> RouteDecision:
+        self.total_routed += 1
+        self.refresh_stats(now, decode_worker, prefill_workers)
+
+        if self.scheduler in COLOCATED or not prefill_workers:
+            dec = RouteDecision("local", reason="colocated")
+        elif self.scheduler in ("dynamo", "ampd-noroute"):
+            dec = always_remote(task, decode_worker, prefill_workers,
+                                self.perf, self.routing, self.rng)
+        else:  # ADAPTIVE: ampd / ampd-noreorder / ampd-chunked
+            dec = route_prefill(task, decode_worker, prefill_workers,
+                                self.perf, self.routing, self.rng)
+        if dec.kind == "local":
+            self.local_count += 1
+        if self.record_decisions:
+            self.decision_log.append((task.session_id, task.round_idx,
+                                      task.incr_offset, dec.kind,
+                                      dec.worker_idx))
+        return dec
+
+    # -- queue ordering (§4.2) ---------------------------------------------
+    def order_queue(self, worker, now: float) -> None:
+        q = worker.prefill_queue
+        if len(q) <= 1:
+            return
+        if self.scheduler in REORDERING:
+            est = lambda t: self.perf.t_pre(t.l_hist, t.l_incr, worker.tp,
+                                            worker.speed)
+            reorder_queue(q, now, self.routing.ttft_thres, est, self.reorder_w)
+        elif self.scheduler == "continuum":
+            # session priority: tasks reusing cached KV first (stable)
+            q.sort(key=lambda t: t.l_hist == 0)
+
+    @property
+    def local_fraction(self) -> float:
+        return self.local_count / max(self.total_routed, 1)

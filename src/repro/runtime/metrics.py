@@ -1,0 +1,48 @@
+"""Shared metric primitives for both runtime backends (DESIGN.md §4).
+
+One percentile definition and one sliding-window estimator, so the modeled
+simulator and the live cluster report *the same* statistics — previously
+each path carried its own (diverging) copy of the percentile math.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import List, Sequence
+
+
+def p95(vals: Sequence[float]) -> float:
+    """Upper empirical 95th percentile (nearest-rank, clamped)."""
+    return quantile(vals, 0.95)
+
+
+def quantile(vals: Sequence[float], q: float) -> float:
+    if not vals:
+        return 0.0
+    s = sorted(vals)
+    return s[min(len(s) - 1, int(q * len(s)))]
+
+
+def mean(vals: Sequence[float]) -> float:
+    return sum(vals) / len(vals) if vals else 0.0
+
+
+class WindowStat:
+    """Sliding-window mean over the last ``window_s`` seconds (paper §3).
+
+    Drives the routing slack signals: every worker keeps one for TTFT and
+    one for ITL, refreshed by the Coordinator before each routing decision.
+    """
+
+    def __init__(self, window_s: float = 10.0):
+        self.window_s = window_s
+        self.buf: deque = deque()
+
+    def add(self, t: float, v: float) -> None:
+        self.buf.append((t, v))
+
+    def value(self, now: float) -> float:
+        while self.buf and self.buf[0][0] < now - self.window_s:
+            self.buf.popleft()
+        if not self.buf:
+            return 0.0
+        return sum(v for _, v in self.buf) / len(self.buf)

@@ -1,0 +1,411 @@
+"""ServingRuntime: the multi-round serving protocol as ONE state machine
+(DESIGN.md §2).
+
+arrival -> bind -> [chunk split] -> route -> prefill queue -> (lazy history
+read | execute | KV write-back) -> join decode batch -> continuous decode ->
+round complete -> env delay -> next-round increment -> ... -> finish; plus
+worker failure -> rebind -> context re-prefill, stragglers and elastic
+scale-up.  The paper's Alg. 1 / Alg. 2 run inside the :class:`Coordinator`;
+durations and tokens come from the pluggable :class:`ExecutionBackend` —
+the discrete-event simulator and the live JAX cluster are the SAME engine
+with different backends.
+
+Chunked incremental prefill (DESIGN.md §7): with ``chunk_tokens`` set
+(implied by the ``ampd-chunked`` scheduler), each round's increment is split
+into sub-chunks that are routed and reordered independently; decode steps
+interleave at chunk boundaries so a local prefill pauses the decode batch
+for at most one chunk, and a remote chunk's KV is written back eagerly so
+the next chunk may run anywhere (history stays lazily readable).
+
+Session objects are duck-typed (core ``Session`` or serving ``LiveSession``)
+and gain runtime-managed fields: ``state`` ∈ arriving | prefill_wait |
+decoding | env | done | dropped, a rebind generation counter (stale events
+from before a failure are dropped), and per-round token counters.  The
+runtime owns ALL memory accounting: ``mem_tokens`` += l_incr on join, += 1
+per decoded token, -= context_len on detach — so a decode worker's counter
+provably returns to 0 once its sessions leave.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+from repro.core.types import PrefillTask
+from repro.runtime.backend import ExecutionBackend
+from repro.runtime.coordinator import Coordinator
+from repro.runtime.events import EventLoop
+
+#: default sub-chunk size when the ampd-chunked scheduler is selected
+#: without an explicit chunk_tokens (≈ one decode-step-bounded pause)
+DEFAULT_CHUNK_TOKENS = 512
+
+
+class ServingRuntime:
+    def __init__(self, backend: ExecutionBackend, coordinator: Coordinator,
+                 prefill_workers: List, decode_workers: List, *,
+                 chunk_tokens: int = 0, max_time: float = float("inf"),
+                 admission_retry_s: float = 0.05, trace_events: bool = False):
+        self.backend = backend
+        self.coordinator = coordinator
+        self.prefill_workers = prefill_workers
+        self.decode_workers = decode_workers
+        self.events = EventLoop(max_time, trace=trace_events)
+        self.sessions: Dict[int, object] = {}   # id -> session (never index)
+        self.admission_retry_s = admission_retry_s
+        self.chunk_tokens = chunk_tokens or (
+            DEFAULT_CHUNK_TOKENS if coordinator.scheduler == "ampd-chunked"
+            else 0)
+        for w in list(prefill_workers) + list(decode_workers):
+            self._init_worker(w)
+
+    # -- wiring ------------------------------------------------------------
+    @property
+    def now(self) -> float:
+        return self.events.now
+
+    def _init_worker(self, w) -> None:
+        w._running = False
+        if not hasattr(w, "util_busy_s"):
+            w.util_busy_s = 0.0
+        if not hasattr(w, "tasks_done"):
+            w.tasks_done = 0
+
+    def register_worker(self, w, kind: str):
+        """Elastic scale-up: add a worker mid-run; it starts pulling work on
+        the next routing decision."""
+        ws = self.prefill_workers if kind == "prefill" else self.decode_workers
+        ws.append(w)
+        self._init_worker(w)
+        return w
+
+    def submit(self, session) -> None:
+        self.sessions[session.session_id] = session
+        session.state = "arriving"
+        session.tokens_this_round = 0
+        session.last_token_time = 0.0
+        session._rt_gen = 0
+        session._rt_chunks = None
+        session._rt_chain_worker = None
+        self.events.at(session.arrival_time,
+                       lambda s=session: self._on_arrival(s), "arrival")
+
+    def schedule_failure(self, kind: str, idx: int, at: float) -> None:
+        self.events.at(at, lambda: self._on_failure(kind, idx), "failure")
+
+    def run(self) -> float:
+        return self.events.run()
+
+    # -- arrival & binding (§3 step 1) -------------------------------------
+    def _on_arrival(self, s) -> None:
+        if not any(d.alive for d in self.decode_workers):
+            s.state = "dropped"
+            return
+        self.coordinator.bind(s, self.decode_workers)
+        task = PrefillTask(
+            session_id=s.session_id, round_idx=0, l_hist=0,
+            l_incr=self.backend.incr_len(s, 0), enqueue_time=self.now,
+            arrival_time=self.now, is_initial=True, gen=s._rt_gen)
+        self._dispatch(s, task)
+
+    # -- dispatch: chunk split + routing (§3 step 2 / §4.1) -----------------
+    def _dispatch(self, s, task: PrefillTask) -> None:
+        if s.state == "dropped":
+            return
+        c = self.chunk_tokens
+        if c and task.l_incr > c:
+            total = task.l_incr
+            s._rt_chunks = deque(
+                PrefillTask(
+                    session_id=task.session_id, round_idx=task.round_idx,
+                    l_hist=task.l_hist + off,
+                    l_incr=min(c, total - off),
+                    enqueue_time=task.enqueue_time,
+                    arrival_time=task.arrival_time,
+                    is_initial=task.is_initial,
+                    incr_offset=task.incr_offset + off,
+                    is_final_chunk=(off + c >= total),
+                    gen=s._rt_gen)
+                for off in range(0, total, c))
+            task = s._rt_chunks.popleft()
+        self._route_one(s, task)
+
+    def _route_one(self, s, task: PrefillTask) -> None:
+        d = self.decode_workers[s.decode_worker]
+        if not d.alive:
+            self._rebind(s, task)
+            return
+        # full list: Alg. 1 skips dead workers itself, and worker_idx must
+        # index the canonical list
+        dec = self.coordinator.route(task, self.now, d, self.prefill_workers)
+        task.enqueue_time = self.now
+        s.state = "prefill_wait"
+        if dec.kind == "local":
+            if not self.backend.admit_local(d, s):
+                # admission backpressure: retry shortly (a slot frees when a
+                # resident session finishes)
+                self.events.after(
+                    self.admission_retry_s,
+                    lambda: (task.gen == s._rt_gen
+                             and self._route_one(s, task)),
+                    "admission-retry")
+                return
+            task.routed_to = "local"
+            d.prefill_queue.append(task)
+            self._kick(d)
+        else:
+            w = self.prefill_workers[dec.worker_idx]
+            task.routed_to = f"remote:{w.idx}"
+            w.prefill_queue.append(task)
+            self._kick(w)
+
+    # -- worker advance: prefill first (priority), else decode --------------
+    def _kick(self, w) -> None:
+        if not w.alive or w._running:
+            return
+        while w.prefill_queue:
+            self.coordinator.order_queue(w, self.now)
+            task = w.prefill_queue.pop(0)
+            s = self.sessions[task.session_id]
+            if task.gen != s._rt_gen:       # superseded by a rebind
+                continue
+            d = self.decode_workers[s.decode_worker]
+            if w.kind == "decode" and self.chunk_tokens:
+                # chunked mode: piggyback the decode batch on the chunk —
+                # one fused step advances both (bounded interference)
+                batch = [b for b in self.backend.attached(w)
+                         if getattr(b, "state", "") == "decoding"]
+                if batch:
+                    dur, payload, toks = self.backend.run_fused_prefill(
+                        w, task, s, batch)
+                    w._running = True
+                    w.util_busy_s += dur
+                    s._rt_chain_worker = (w.kind, w.idx)
+                    self.events.after(
+                        dur,
+                        lambda w=w, task=task, payload=payload, batch=batch,
+                               toks=toks:
+                            self._on_fused_done(w, task, payload, batch,
+                                                toks),
+                        "fused-step")
+                    return
+            extra = 0.0
+            if w.kind == "prefill":
+                waited = self.now - task.enqueue_time
+                extra = self.backend.history_read_extra(
+                    w, task, d, waited, self._hist_to_read(w, task, s))
+            dur, payload = self.backend.run_prefill(w, task, s, d)
+            w._running = True
+            w.util_busy_s += dur + extra
+            s._rt_chain_worker = (w.kind, w.idx)
+            self.events.after(
+                extra + dur,
+                lambda w=w, task=task, payload=payload:
+                    self._on_prefill_done(w, task, payload),
+                "prefill-done")
+            return
+        if w.kind == "decode":
+            self._run_decode(w)
+
+    def _hist_to_read(self, w, task: PrefillTask, s) -> int:
+        """History KV the worker must lazily pull before this chunk: none if
+        the previous chunk of the same round just ran here (KV resident in
+        the worker's working cache), else the full session history."""
+        if task.incr_offset > 0 and s._rt_chain_worker == (w.kind, w.idx):
+            return 0
+        return task.l_hist
+
+    # -- prefill completion, write-back, decode join (§3 step 3) ------------
+    def _on_prefill_done(self, w, task: PrefillTask, payload) -> None:
+        w._running = False
+        w.tasks_done += 1
+        s = self.sessions[task.session_id]
+        if task.gen != s._rt_gen:
+            self._kick(w)
+            return
+        d = self.decode_workers[s.decode_worker]
+        if not d.alive:
+            self._rebind(s, task)
+            self._kick(w)
+            return
+        delay = self.backend.writeback_delay(w, task, d)
+        self.events.after(
+            delay, lambda: self._on_join(s, task, payload, w), "join")
+        self._kick(w)
+
+    def _on_join(self, s, task: PrefillTask, payload, stat_worker) -> None:
+        if task.gen != s._rt_gen:
+            return
+        d = self.decode_workers[s.decode_worker]
+        if not d.alive:
+            self._rebind(s, task)
+            return
+        if not self.backend.can_join(d, s):
+            # join backpressure: all decode slots busy (e.g. after a failure
+            # halves capacity) — the KV increment is in hand, wait for a
+            # resident session to finish
+            self.events.after(
+                self.admission_retry_s,
+                lambda: self._on_join(s, task, payload, stat_worker),
+                "join-retry")
+            return
+        s.context_len = task.l_hist + task.l_incr
+        d.mem_tokens += task.l_incr
+        self.backend.on_join(d, s, task, payload)
+        if not task.is_final_chunk:
+            nxt = s._rt_chunks.popleft()
+            self._route_one(s, nxt)
+            self._kick(d)       # decode interleaves while the chunk queues
+            return
+        ttft = self.now - task.arrival_time
+        s.ttfts.append(ttft)
+        stat_worker.ttft_stat.add(self.now, ttft)
+        s.tokens_this_round = 0
+        s.last_token_time = self.now
+        s.state = "decoding"
+        self._kick(d)
+
+    # -- decode (§3 step 4) --------------------------------------------------
+    def _run_decode(self, d) -> None:
+        batch = [s for s in self.backend.attached(d)
+                 if getattr(s, "state", "") == "decoding"]
+        if not batch:
+            return
+        d._running = True
+        dur, toks = self.backend.run_decode(d, batch)
+        d.util_busy_s += dur
+        self.events.after(
+            dur, lambda: self._on_step_end(d, batch, toks), "decode-step")
+
+    def _on_step_end(self, d, batch: List, toks: Dict) -> None:
+        d._running = False
+        if not d.alive:
+            return
+        for s in self._apply_decode_outcome(d, batch, toks):
+            self._on_round_complete(s, d)
+        self._kick(d)
+
+    def _apply_decode_outcome(self, d, batch: List, toks: Dict) -> List:
+        """Per-token accounting for one (possibly fused) decode step;
+        returns sessions whose round just finished."""
+        finished = []
+        for s in batch:
+            if s.state != "decoding" or s.decode_worker != d.idx:
+                continue                     # detached / rebound mid-step
+            itl = self.now - s.last_token_time
+            s.itls.append(itl)
+            d.itl_stat.add(self.now, itl)
+            s.last_token_time = self.now
+            s.tokens_this_round += 1
+            s.context_len += 1
+            d.mem_tokens += 1
+            self.backend.on_token(d, s, toks.get(s.session_id))
+            if s.tokens_this_round >= s.rounds[s.current_round].decode_len:
+                finished.append(s)
+        return finished
+
+    def _on_fused_done(self, d, task: PrefillTask, payload, batch: List,
+                       toks: Dict) -> None:
+        """A fused chunk+decode step ended: settle the decode tokens, then
+        land the chunk (local write-back is free)."""
+        d._running = False
+        d.tasks_done += 1
+        s = self.sessions[task.session_id]
+        if not d.alive:
+            if task.gen == s._rt_gen:
+                self._rebind(s, task)
+            return
+        for b in self._apply_decode_outcome(d, batch, toks):
+            self._on_round_complete(b, d)
+        if task.gen == s._rt_gen and d.idx == s.decode_worker:
+            self._on_join(s, task, payload, d)   # continues via _kick(d)
+        else:
+            self._kick(d)
+
+    def _on_round_complete(self, s, d) -> None:
+        r = s.rounds[s.current_round]
+        s.current_round += 1
+        if s.current_round >= s.num_rounds:
+            s.finish_time = self.now
+            s.state = "done"
+            d.mem_tokens -= s.context_len
+            self.backend.detach(d, s)
+            return
+        s.state = "env"
+        gen = s._rt_gen
+        self.events.after(
+            r.env_delay,
+            lambda: gen == s._rt_gen and self._on_env_done(s), "env-done")
+
+    def _on_env_done(self, s) -> None:
+        task = PrefillTask(
+            session_id=s.session_id, round_idx=s.current_round,
+            l_hist=s.context_len,
+            l_incr=self.backend.incr_len(s, s.current_round),
+            enqueue_time=self.now, arrival_time=self.now, gen=s._rt_gen)
+        self._dispatch(s, task)
+
+    # -- failures / recovery (§6) -------------------------------------------
+    def _on_failure(self, kind: str, idx: int) -> None:
+        ws = self.prefill_workers if kind == "prefill" else self.decode_workers
+        if idx >= len(ws):
+            return
+        w = ws[idx]
+        w.alive = False
+        orphans = list(w.prefill_queue)
+        w.prefill_queue.clear()
+        if kind == "decode":
+            victims = list(self.backend.attached(w))
+            self.backend.on_decode_failure(w)
+            w.mem_tokens = 0
+            handled = set()
+            for task in orphans:             # queued local prefills: the
+                s = self.sessions[task.session_id]   # increment is re-prefilled
+                if task.gen != s._rt_gen:
+                    continue
+                self._rebind(s, task)
+                handled.add(s.session_id)
+            for s in victims:
+                if (s.session_id in handled
+                        or s.state in ("done", "dropped")):
+                    continue
+                self._rebind(s, None)
+        else:
+            for task in orphans:             # re-route to surviving workers
+                s = self.sessions[task.session_id]
+                if task.gen != s._rt_gen:
+                    continue
+                self._dispatch(s, task)
+
+    def _rebind(self, s, task: Optional[PrefillTask]) -> None:
+        """Decode worker died: drop stale in-flight work, re-bind, and
+        re-prefill the whole context (modeled) / replay the transcript
+        (live)."""
+        if s.state in ("done", "dropped"):
+            return
+        if not any(d.alive for d in self.decode_workers):
+            s.state = "dropped"
+            return
+        self.coordinator.rebinds += 1
+        s._rt_gen += 1
+        pending = self._pending_increment(s, task)
+        s._rt_chunks = None
+        s._rt_chain_worker = None
+        rtask = self.backend.make_recovery_task(s, task, self.now, pending)
+        rtask.gen = s._rt_gen
+        self.coordinator.bind(s, self.decode_workers)
+        self._dispatch(s, rtask)
+
+    def _pending_increment(self, s, task: Optional[PrefillTask]):
+        """The un-joined suffix of the current round's increment, which the
+        recovery prefill must cover on top of the (lost) context:
+        (round_idx, offset_into_increment, token_count).  A failed task plus
+        its queued sibling chunks; or, for a session waiting out an env
+        delay, the whole upcoming increment (its round was never
+        dispatched)."""
+        if task is not None:
+            pend = task.l_incr + sum(c.l_incr for c in (s._rt_chunks or ()))
+            return (task.round_idx, task.incr_offset, pend)
+        r = min(s.current_round, s.num_rounds - 1)
+        if s.state == "env":
+            return (r, 0, self.backend.incr_len(s, r))
+        return (r, 0, 0)                 # round fully joined (decoding)

@@ -1,33 +1,32 @@
-"""Live cluster driver: logically-parallel workers executing real JAX.
+"""Live cluster driver: logically-parallel workers executing real JAX —
+live-backend facade over the unified runtime.
 
-Same event structure as the discrete-event simulator, but every duration is
-*measured* from the actual engine call rather than predicted — the CPU-scale
-twin of a TPU deployment.  Supports the full multi-round protocol (binding,
-adaptive routing, lazy history reads, incremental KV write-back, local
-prefill interference), worker failure + session recovery by transcript
-replay, stragglers (synthetic slow-down factors) and elastic scaling.
+The multi-round protocol (binding, adaptive routing, lazy history reads,
+incremental KV write-back, local prefill interference, chunked incremental
+prefill, worker failure + session recovery by transcript replay, stragglers
+and elastic scaling) runs in ``repro.runtime.ServingRuntime`` — the same
+engine as the discrete-event simulator — with a :class:`LiveBackend` whose
+every duration is *measured* from the actual engine call rather than
+predicted: the CPU-scale twin of a TPU deployment.
 """
 from __future__ import annotations
 
-import heapq
-import random
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import List, Optional
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.perf_model import PerfModel
 from repro.core.routing import RoutingConfig
-from repro.core.types import PrefillTask, RoundSpec, SLOSpec
-from repro.serving.coordinator import Coordinator
+from repro.core.types import RoundSpec, SLOSpec
+from repro.runtime import Coordinator, LiveBackend, ServingRuntime, mean, p95
 from repro.serving.engine import Engine, profile_engine
 from repro.serving.workers import (
     LiveDecodeWorker,
     LivePrefillWorker,
     LiveSession,
-    timed,
 )
 
 
@@ -38,6 +37,7 @@ class LiveResult:
     avg_ttft: float
     avg_itl: float
     p95_ttft: float
+    p95_itl: float
     local_fraction: float
     rebinds: int
     kv_bytes_moved: int
@@ -50,10 +50,9 @@ class LiveCluster:
                  n_decode: int = 1, max_slots: int = 4, max_len: int = 256,
                  scheduler: str = "ampd", slo: Optional[SLOSpec] = None,
                  seed: int = 0, model_kv_time: bool = False,
-                 profile: bool = True):
+                 profile: bool = True, chunk_tokens: int = 0):
         self.cfg = cfg
         self.slo = slo or SLOSpec(ttft_thres=2.0, itl_thres=0.2)
-        self.model_kv_time = model_kv_time
         key = __import__("jax").random.PRNGKey(seed)
         shared_engine_params = None
 
@@ -83,22 +82,21 @@ class LiveCluster:
             routing=RoutingConfig(ttft_thres=self.slo.ttft_thres,
                                   itl_thres=self.slo.itl_thres),
             scheduler=scheduler, seed=seed)
-
-        self.now = 0.0
-        self._heap: List[Tuple[float, int, Callable]] = []
-        self._seq = 0
-
-    # -- event machinery ---------------------------------------------------
-    def _at(self, t: float, fn: Callable) -> None:
-        self._seq += 1
-        heapq.heappush(self._heap, (t, self._seq, fn))
+        self.runtime = ServingRuntime(
+            LiveBackend(self.perf, model_kv_time=model_kv_time),
+            self.coordinator, self.prefill_workers, self.decode_workers,
+            chunk_tokens=chunk_tokens)
 
     # -- public API -------------------------------------------------------
+    @property
+    def now(self) -> float:
+        return self.runtime.now
+
     def submit(self, session: LiveSession) -> None:
-        self._at(session.arrival_time, lambda: self._on_arrival(session))
+        self.runtime.submit(session)
 
     def fail_worker(self, kind: str, idx: int, at: float) -> None:
-        self._at(at, lambda: self._on_failure(kind, idx))
+        self.runtime.schedule_failure(kind, idx, at)
 
     def set_straggler(self, kind: str, idx: int, speed: float) -> None:
         ws = self.prefill_workers if kind == "prefill" else self.decode_workers
@@ -110,246 +108,33 @@ class LiveCluster:
         eng = Engine(self.cfg, max_len=ref.engine.max_len,
                      params=ref.engine.params)
         w = LivePrefillWorker(len(self.prefill_workers), eng)
-        self.prefill_workers.append(w)
+        self.runtime.register_worker(w, "prefill")
         return w
 
     def run(self, sessions: List[LiveSession]) -> LiveResult:
         t_wall = time.perf_counter()
         for s in sessions:
-            s.state = "arriving"                     # type: ignore[attr-defined]
-            self.submit(s)
-        while self._heap:
-            t, _, fn = heapq.heappop(self._heap)
-            self.now = max(self.now, t)
-            fn()
+            if s.session_id not in self.runtime.sessions:
+                self.submit(s)
+        self.runtime.run()
         wall = time.perf_counter() - t_wall
         return self._result(sessions, wall)
 
-    # -- protocol ----------------------------------------------------------
-    def _on_arrival(self, s: LiveSession) -> None:
-        d = self.coordinator.bind(s, self.decode_workers)
-        task = PrefillTask(session_id=s.session_id, round_idx=0, l_hist=0,
-                           l_incr=len(s.prompt_tokens[0]),
-                           enqueue_time=self.now, arrival_time=self.now,
-                           is_initial=True)
-        self._dispatch(s, task)
-
-    def _dispatch(self, s: LiveSession, task: PrefillTask) -> None:
-        d = self.decode_workers[s.decode_worker]
-        if not d.alive:
-            self._rebind(s)
-            return
-        dec = self.coordinator.route(task, self.now, d, [
-            w for w in self.prefill_workers if w.alive])
-        task.enqueue_time = self.now
-        s.state = "prefill_wait"                      # type: ignore[attr-defined]
-        if dec.kind == "local":
-            task.routed_to = "local"
-            if s.slot is None:
-                if d.free_slot() is None:
-                    # admission backpressure: retry shortly
-                    self._at(self.now + 0.05, lambda: self._dispatch(s, task))
-                    return
-                d.allocate(s)
-            d.prefill_queue.append(task)
-            self._kick(d)
-        else:
-            w = self.prefill_workers[dec.worker_idx]
-            task.routed_to = f"remote:{w.idx}"
-            w.prefill_queue.append(task)
-            self._kick(w)
-
-    def _kick(self, w) -> None:
-        if not w.alive or getattr(w, "_running", False):
-            return
-        if w.prefill_queue:
-            self.coordinator.order_queue(w, self.now)
-            task = w.prefill_queue.pop(0)
-            s = self._session_of(task)
-            w._running = True
-            if w.kind == "prefill":
-                self._run_remote_prefill(w, task, s)
-            else:
-                self._run_local_prefill(w, task, s)
-            return
-        if w.kind == "decode":
-            self._run_decode(w)
-
-    def _session_of(self, task: PrefillTask) -> LiveSession:
-        return self._sessions[task.session_id]
-
-    def _run_remote_prefill(self, w: LivePrefillWorker, task: PrefillTask,
-                            s: LiveSession) -> None:
-        d = self.decode_workers[s.decode_worker]
-        hist = None
-        if task.l_hist > 0 and s.slot is not None:
-            hist = d.history_extract(s)
-        dt, out = timed(w.execute, task, s, history_extract=hist)
-        dt /= w.speed
-        if self.model_kv_time:
-            dt += self.perf.t_kv(task.l_hist, d.tp, w.tp) \
-                + self.perf.t_kv(task.l_incr, w.tp, d.tp)
-        done_t = self.now + dt
-
-        def finish():
-            w._running = False
-            first = int(np.argmax(out["logits"]))
-            self._on_prefill_complete(s, task, first, out["increment"],
-                                      stat_worker=w)
-            self._kick(w)
-
-        self._at(done_t, finish)
-
-    def _run_local_prefill(self, d: LiveDecodeWorker, task: PrefillTask,
-                           s: LiveSession) -> None:
-        dt, first = d.local_prefill(task, s)
-        dt /= d.speed
-        done_t = self.now + dt
-
-        def finish():
-            d._running = False
-            s.last_token = first
-            self._on_prefill_complete(s, task, first, None, stat_worker=d)
-            self._kick(d)
-
-        self._at(done_t, finish)
-
-    def _on_prefill_complete(self, s: LiveSession, task: PrefillTask,
-                             first_token: int, increment, *, stat_worker):
-        d = self.decode_workers[s.decode_worker]
-        if not d.alive:
-            self._rebind(s)
-            return
-        if increment is not None:
-            d.attach(s, increment, task.l_hist, first_token, task.l_incr)
-        ttft = self.now - task.arrival_time
-        s.ttfts.append(ttft)
-        stat_worker.ttft_stat.add(self.now, ttft)
-        s.context_len = task.l_hist + task.l_incr
-        s.tokens_this_round = 0
-        s.last_token_time = self.now
-        s.transcript.extend(int(t) for t in s.prompt_tokens[task.round_idx])
-        s.state = "decoding"                          # type: ignore[attr-defined]
-        self._kick(d)
-
-    def _run_decode(self, d: LiveDecodeWorker) -> None:
-        active = [s for s in d.slots
-                  if s is not None and getattr(s, "state", "") == "decoding"]
-        if not active:
-            return
-        d._running = True
-        # mask non-decoding slots
-        saved = {}
-        for i, s in enumerate(d.slots):
-            if s is not None and getattr(s, "state", "") != "decoding":
-                saved[i] = s
-                d.slots[i] = None
-        dt, toks = d.decode_once()
-        for i, s in saved.items():
-            d.slots[i] = s
-        dt /= d.speed
-        done_t = self.now + dt
-
-        def finish():
-            d._running = False
-            for slot, tok in toks.items():
-                s = d.slots[slot]
-                if s is None:
-                    continue
-                itl = self.now - s.last_token_time
-                s.itls.append(itl)
-                d.itl_stat.add(self.now, itl)
-                s.last_token_time = self.now
-                s.last_token = tok
-                s.generated.append(tok)
-                s.transcript.append(tok)
-                s.tokens_this_round += 1
-                s.context_len += 1
-                d.mem_tokens += 1
-                if s.tokens_this_round >= s.rounds[s.current_round].decode_len:
-                    self._on_round_complete(s, d)
-            self._kick(d)
-
-        self._at(done_t, finish)
-
-    def _on_round_complete(self, s: LiveSession, d: LiveDecodeWorker) -> None:
-        r = s.rounds[s.current_round]
-        s.current_round += 1
-        if s.current_round >= s.num_rounds:
-            s.finish_time = self.now
-            s.state = "done"                          # type: ignore[attr-defined]
-            d.detach(s)
-            return
-        s.state = "env"                               # type: ignore[attr-defined]
-        self._at(self.now + r.env_delay, lambda: self._on_env_done(s))
-
-    def _on_env_done(self, s: LiveSession) -> None:
-        task = PrefillTask(
-            session_id=s.session_id, round_idx=s.current_round,
-            l_hist=s.context_len, l_incr=len(s.prompt_tokens[s.current_round]),
-            enqueue_time=self.now, arrival_time=self.now)
-        self._dispatch(s, task)
-
-    # -- fault tolerance ----------------------------------------------------
-    def _on_failure(self, kind: str, idx: int) -> None:
-        ws = self.prefill_workers if kind == "prefill" else self.decode_workers
-        w = ws[idx]
-        w.alive = False
-        orphans = list(w.prefill_queue)
-        w.prefill_queue.clear()
-        if kind == "decode":
-            for s in list(w.slots):
-                if s is not None:
-                    w.detach(s)
-                    if getattr(s, "state", "") != "done":
-                        self._rebind(s)
-        for task in orphans:
-            s = self._session_of(task)
-            self._dispatch(s, task)
-
-    def _rebind(self, s: LiveSession) -> None:
-        """Recover a session whose decode worker died: re-bind, replay the
-        transcript as a fresh prefill (the KV is gone)."""
-        self.coordinator.rebinds += 1
-        alive = [d for d in self.decode_workers if d.alive]
-        if not alive:
-            s.state = "dropped"                       # type: ignore[attr-defined]
-            return
-        s.slot = None
-        replay = np.asarray(s.transcript, np.int32)
-        if len(replay) == 0:
-            replay = s.prompt_tokens[0]
-        r = min(s.current_round, s.num_rounds - 1)
-        s.prompt_tokens = list(s.prompt_tokens)
-        s.prompt_tokens[r] = replay
-        s.context_len = 0
-        s.transcript = []
-        d = self.coordinator.bind(s, self.decode_workers)
-        task = PrefillTask(session_id=s.session_id, round_idx=r, l_hist=0,
-                           l_incr=len(replay), enqueue_time=self.now,
-                           arrival_time=self.now, is_initial=False)
-        self._dispatch(s, task)
-
-    # -- results ------------------------------------------------------------
     def run_trace(self, sessions: List[LiveSession]) -> LiveResult:
-        self._sessions = {s.session_id: s for s in sessions}
         return self.run(sessions)
 
+    # -- results ------------------------------------------------------------
     def _result(self, sessions: List[LiveSession], wall: float) -> LiveResult:
         ttfts = [t for s in sessions for t in s.ttfts]
         itls = [t for s in sessions for t in s.itls]
-        ok = sum(1 for s in sessions
-                 if s.finish_time is not None
-                 and all(t <= self.slo.ttft_thres for t in s.ttfts)
-                 and (not s.itls or sum(s.itls) / len(s.itls) <= self.slo.itl_thres))
-        ttfts_sorted = sorted(ttfts)
+        ok = sum(1 for s in sessions if self.slo.satisfied(s))
         return LiveResult(
             sessions=sessions,
             slo_attainment=ok / max(len(sessions), 1),
-            avg_ttft=sum(ttfts) / len(ttfts) if ttfts else 0.0,
-            avg_itl=sum(itls) / len(itls) if itls else 0.0,
-            p95_ttft=(ttfts_sorted[int(0.95 * (len(ttfts_sorted) - 1))]
-                      if ttfts_sorted else 0.0),
+            avg_ttft=mean(ttfts),
+            avg_itl=mean(itls),
+            p95_ttft=p95(ttfts),
+            p95_itl=p95(itls),
             local_fraction=self.coordinator.local_fraction,
             rebinds=self.coordinator.rebinds,
             kv_bytes_moved=sum(w.kv_bytes_moved for w in self.prefill_workers),

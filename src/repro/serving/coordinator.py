@@ -1,86 +1,5 @@
-"""Coordinator: binding, routing and shared state for the live runtime
-(paper §3 online stage).
-
-Uses the SAME core algorithms as the simulator — ``route_prefill`` (Alg. 1)
-and ``reorder_queue`` (Alg. 2) — but driven by wall-clock-measured windowed
-TTFT/ITL stats and a perf model fitted by the offline profiler.  The shared
-queues/stats registry is the single-controller adaptation of the paper's
-Redis layer (DESIGN.md §3).
-"""
-from __future__ import annotations
-
-import random
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
-
-from repro.core.perf_model import PerfModel
-from repro.core.reordering import reorder_queue
-from repro.core.routing import RouteDecision, RoutingConfig, always_remote, route_prefill
-from repro.core.types import PrefillTask
-from repro.serving.workers import LiveDecodeWorker, LivePrefillWorker, LiveSession
-
-COLOCATED = ("vllm", "continuum")
-
-
-@dataclass
-class Coordinator:
-    perf: PerfModel
-    routing: RoutingConfig
-    scheduler: str = "ampd"
-    reorder_w: int = 3
-    seed: int = 0
-    rng: random.Random = field(init=False)
-
-    def __post_init__(self):
-        self.rng = random.Random(self.seed)
-        self.local_count = 0
-        self.total_routed = 0
-        self.rebinds = 0
-
-    # -- binding (§3 step 1) ----------------------------------------------
-    def bind(self, session: LiveSession,
-             decode_workers: List[LiveDecodeWorker]) -> LiveDecodeWorker:
-        alive = [d for d in decode_workers
-                 if d.alive and d.free_slot() is not None]
-        if not alive:
-            alive = [d for d in decode_workers if d.alive]
-        d = min(alive, key=lambda w: w.mem_tokens)
-        session.decode_worker = d.idx
-        return d
-
-    # -- routing (§3 step 2 / §4.1) ------------------------------------------
-    def route(self, task: PrefillTask, now: float,
-              decode_worker: LiveDecodeWorker,
-              prefill_workers: List[LivePrefillWorker]) -> RouteDecision:
-        self.total_routed += 1
-        for w in list(prefill_workers) + [decode_worker]:
-            w.windowed_ttft = w.ttft_stat.value(now)
-            w.windowed_itl = w.itl_stat.value(now)
-
-        if self.scheduler in COLOCATED or not prefill_workers:
-            dec = RouteDecision("local", reason="colocated")
-        elif self.scheduler in ("dynamo", "ampd-noroute"):
-            dec = always_remote(task, decode_worker, prefill_workers,
-                                self.perf, self.routing, self.rng)
-        else:
-            dec = route_prefill(task, decode_worker, prefill_workers,
-                                self.perf, self.routing, self.rng)
-        if dec.kind == "local":
-            self.local_count += 1
-        return dec
-
-    # -- queue ordering (§4.2) ---------------------------------------------
-    def order_queue(self, worker, now: float) -> None:
-        q = worker.prefill_queue
-        if len(q) <= 1:
-            return
-        if self.scheduler in ("ampd", "ampd-noroute"):
-            est = lambda t: self.perf.t_pre(t.l_hist, t.l_incr, worker.tp,
-                                            worker.speed)
-            reorder_queue(q, now, self.routing.ttft_thres, est, self.reorder_w)
-        elif self.scheduler == "continuum":
-            q.sort(key=lambda t: t.l_hist == 0)
-
-    @property
-    def local_fraction(self) -> float:
-        return self.local_count / max(self.total_routed, 1)
+"""Backward-compatible facade: the Coordinator now lives in
+``repro.runtime.coordinator`` where it is the single routing/ordering
+authority for BOTH the modeled simulator and the live cluster
+(paper §3 online stage; DESIGN.md §3)."""
+from repro.runtime.coordinator import COLOCATED, Coordinator  # noqa: F401

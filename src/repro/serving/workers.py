@@ -22,8 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.simulator import WindowStat
 from repro.core.types import PrefillTask, RoundSpec
+from repro.runtime.metrics import WindowStat
 from repro.serving.engine import Engine, chunk_limit
 from repro.serving.kv_transfer import (
     extract_range,
@@ -57,6 +57,15 @@ class LiveSession:
         return len(self.rounds)
 
 
+def chunk_tokens_of(task: PrefillTask, session: LiveSession) -> np.ndarray:
+    """The token slice a prefill task covers: the whole round increment for
+    whole-task scheduling, or this sub-chunk's window under chunked prefill."""
+    toks = session.prompt_tokens[task.round_idx]
+    if task.incr_offset == 0 and task.l_incr >= len(toks):
+        return toks
+    return toks[task.incr_offset:task.incr_offset + task.l_incr]
+
+
 def timed(fn, *args, **kw):
     t0 = time.perf_counter()
     out = fn(*args, **kw)
@@ -87,7 +96,7 @@ class LivePrefillWorker:
                 cross_embeds=None) -> Dict[str, Any]:
         """Run one prefill task for real; returns the increment extract."""
         eng = self.engine
-        tokens = session.prompt_tokens[task.round_idx]
+        tokens = chunk_tokens_of(task, session)
         if history_extract is not None and task.l_hist > 0:
             cache = eng.new_cache(1)
             cache = insert_range(cache, reshard(history_extract), eng.cfg,
@@ -155,21 +164,21 @@ class LiveDecodeWorker:
 
     def attach(self, session: LiveSession, increment: Dict, lo: int,
                first_token: int, n_tokens: int) -> None:
+        """Insert a prefilled KV increment into this worker's batched cache.
+        Memory accounting (``mem_tokens``) is owned by the ServingRuntime —
+        uniform across local and remote placement."""
         if session.slot is None:
             self.allocate(session)
         self.cache = insert_range(self.cache, reshard(increment),
                                   self.engine.cfg, self.engine.max_len,
                                   lo, session.slot, replace_state=True)
         session.last_token = first_token
-        self.mem_tokens += n_tokens
 
     def detach(self, session: LiveSession) -> None:
         if session.slot is not None:
             self.slots[session.slot] = None
             session.slot = None
-        self.mem_tokens -= session.context_len
-        # zero the slot length so the row decodes as empty
-        # (cache rows are overwritten on next attach)
+        # cache row is wiped (reset_slot) on next allocate
 
     def history_extract(self, session: LiveSession) -> Dict:
         return extract_range(self.cache, self.engine.cfg, self.engine.max_len,
@@ -197,22 +206,43 @@ class LiveDecodeWorker:
         return dt, {i: int(nxt[i]) for i in occupied}
 
     def local_prefill(self, task: PrefillTask, session: LiveSession):
-        """Execute a prefill in-batch on this decode worker (pauses decode)."""
+        """Execute a prefill in-batch on this decode worker (pauses decode):
+        a fused step with nobody piggybacking."""
+        dt, first, _ = self.fused_step(task, session, [])
+        return dt, first
+
+    def fused_step(self, task: PrefillTask, session: LiveSession,
+                   batch: List[LiveSession]):
+        """Sarathi-style piggybacked step: prefill the chunk into the
+        session's row while every decoding session's row carries its last
+        token — one engine call advances both.  Per-row cache lengths make
+        a 1-valid-token row behave exactly like a decode step; ``-1`` pads.
+
+        Returns (duration_s, first_token_of_chunk, {session_id: next_token}).
+        """
         eng = self.engine
-        tokens = session.prompt_tokens[task.round_idx]
+        tokens = chunk_tokens_of(task, session)
         lim = chunk_limit(eng.cfg, eng.max_len)
         total_dt = 0.0
         logits = None
+        toks: Dict[int, int] = {}
         for lo in range(0, len(tokens), lim):
             sub = tokens[lo:lo + lim]
             m = eng.pad_mult
             width = ((len(sub) + m - 1) // m) * m
             chunk = np.full((self.max_slots, width), -1, np.int32)
             chunk[session.slot, :len(sub)] = sub
+            if lo == 0:          # decode rows advance once per fused step
+                for s in batch:
+                    chunk[s.slot, 0] = s.last_token
 
             def call(c=jnp.asarray(chunk)):
                 return eng.run_chunk(self.cache, c)
 
             dt, (self.cache, logits, _) = timed(call)
             total_dt += dt
-        return total_dt, int(np.asarray(jnp.argmax(logits[session.slot])))
+            if lo == 0:
+                nxt = np.asarray(jnp.argmax(logits, axis=-1))
+                toks = {s.session_id: int(nxt[s.slot]) for s in batch}
+        return (total_dt,
+                int(np.asarray(jnp.argmax(logits[session.slot]))), toks)

@@ -1,0 +1,229 @@
+"""Unified-runtime invariants: one protocol engine behind the modeled
+simulator and the live cluster (DESIGN.md §2).
+
+Covers (a) fault-tolerance accounting — after decode-worker failure +
+rebind every non-dropped session finishes, recoveries/rebinds are counted,
+and each decode worker's ``mem_tokens`` returns to 0 once its sessions
+detach; (b) modeled/live backend parity — identical routing decisions on a
+fixed trace and seed, since both paths now share one Coordinator; and
+(c) chunked incremental prefill in both backends."""
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    Deployment,
+    PerfModel,
+    SimConfig,
+    Simulation,
+    SLOSpec,
+    WorkerGroup,
+    simulate_deployment,
+)
+from repro.core.routing import RoutingConfig
+from repro.core.types import RoundSpec, Session
+from repro.workloads import make_trace
+
+DEP = Deployment((WorkerGroup(4, 2),), (WorkerGroup(4, 2),))
+SLO = SLOSpec(ttft_thres=3.0, itl_thres=0.15)
+
+
+def _perf():
+    return PerfModel(get_config("qwen3-32b"))
+
+
+# ---------------------------------------------------------------------------
+# (a) fault tolerance + memory accounting (modeled backend)
+# ---------------------------------------------------------------------------
+
+def test_modeled_decode_failure_accounting():
+    ss = make_trace("hotpotqa", num_sessions=40, arrival_rate=0.8, seed=5)
+    sim = Simulation(_perf(), DEP, ss, SLO, SimConfig(scheduler="ampd"),
+                     failures=[(10.0, "decode", 0)])
+    r = sim.run()
+    assert r.recoveries > 0
+    assert all(s.finish_time is not None for s in r.sessions)
+    # memory conservation: every attach (l_incr at join, +1 per token) is
+    # matched by the detach at session finish — dead workers are zeroed
+    for d in sim.decode_workers:
+        assert d.mem_tokens == 0, (d.name, d.mem_tokens)
+    for w in sim.prefill_workers:
+        assert not w.prefill_queue or not w.alive
+
+
+def test_modeled_prefill_failure_accounting():
+    ss = make_trace("dureader", num_sessions=30, arrival_rate=2.0, seed=6)
+    sim = Simulation(_perf(), DEP, ss, SLO, SimConfig(scheduler="ampd"),
+                     failures=[(5.0, "prefill", 0)])
+    r = sim.run()
+    assert all(s.finish_time is not None for s in r.sessions)
+    assert all(d.mem_tokens == 0 for d in sim.decode_workers)
+
+
+def test_sessions_keyed_by_id_not_index():
+    """Non-contiguous / shuffled session ids must not cross wires."""
+    rounds = [RoundSpec(prefill_len=64, decode_len=8, env_delay=0.0)]
+    ss = [Session(session_id=907, arrival_time=0.00, rounds=list(rounds)),
+          Session(session_id=3, arrival_time=0.01, rounds=list(rounds)),
+          Session(session_id=41, arrival_time=0.02, rounds=list(rounds))]
+    r = simulate_deployment(_perf(), DEP, ss, SLO, scheduler="ampd")
+    for s in r.sessions:
+        assert s.finish_time is not None, s.session_id
+        assert len(s.ttfts) == 1 and len(s.itls) == 8
+
+
+# ---------------------------------------------------------------------------
+# (b) chunked incremental prefill (modeled backend)
+# ---------------------------------------------------------------------------
+
+def test_chunked_conserves_protocol_invariants():
+    ss = make_trace("gaia", num_sessions=25, arrival_rate=0.5, seed=3)
+    r = simulate_deployment(_perf(), DEP, ss, SLO, scheduler="ampd-chunked")
+    assert all(s.finish_time is not None for s in r.sessions)
+    for s in r.sessions:
+        # one TTFT per round (chunks must not inflate it), full decode count
+        assert len(s.ttfts) == s.num_rounds
+        assert len(s.itls) == s.total_decode()
+
+
+def test_chunked_lowers_itl_under_local_interference():
+    """The fig9 claim: fused chunk+decode steps amortize the decode floor,
+    so chunked beats whole-task prefill on avg ITL when every prefill runs
+    locally (decode-only deployment)."""
+    perf = _perf()
+    slo = SLOSpec(ttft_thres=6.0, itl_thres=0.15)
+    dep = Deployment((), (WorkerGroup(4, 4),))
+    mk = lambda: make_trace("gaia", num_sessions=40, arrival_rate=0.5, seed=1)
+    r_whole = simulate_deployment(perf, dep, mk(), slo, scheduler="ampd")
+    r_chunk = simulate_deployment(perf, dep, mk(), slo,
+                                  scheduler="ampd-chunked")
+    assert r_chunk.avg_itl < r_whole.avg_itl
+
+
+def test_env_state_recovery_keeps_round_increment():
+    """Decode worker dies while a session waits out an env delay: the
+    recovery prefill must cover the upcoming round's increment, not just
+    the dead context — otherwise the round decodes without its input."""
+    rounds = [RoundSpec(prefill_len=100, decode_len=5, env_delay=50.0),
+              RoundSpec(prefill_len=70, decode_len=5, env_delay=0.0)]
+    ss = [Session(session_id=0, arrival_time=0.0, rounds=rounds)]
+    # fail mid-env (round 0 finishes in well under 10s; env lasts 50s)
+    dep = Deployment((WorkerGroup(4, 1),), (WorkerGroup(4, 1),))
+    sim = Simulation(_perf(), dep, ss, SLO, SimConfig(scheduler="ampd"),
+                     failures=[(10.0, "decode", 0)])
+    sim.add_worker("decode", 4)
+    r = sim.run()
+    s = r.sessions[0]
+    assert s.finish_time is not None and r.recoveries == 1
+    # context = recovered (100 + 5) + round-1 increment 70 + decode 5
+    assert s.context_len == 180, s.context_len
+
+
+def test_chunked_failure_recovery():
+    ss = make_trace("gaia", num_sessions=15, arrival_rate=0.5, seed=9)
+    sim = Simulation(_perf(), DEP, ss, SLO,
+                     SimConfig(scheduler="ampd-chunked"),
+                     failures=[(20.0, "decode", 1)])
+    r = sim.run()
+    assert all(s.finish_time is not None for s in r.sessions)
+    assert all(d.mem_tokens == 0 for d in sim.decode_workers)
+
+
+# ---------------------------------------------------------------------------
+# (c) live backend: accounting + parity (reduced real-JAX engines)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def live_cfg():
+    return get_config("qwen2.5-14b").reduced()
+
+
+def _live_cluster(live_cfg, **kw):
+    from repro.serving import LiveCluster
+    base = dict(n_prefill=1, n_decode=1, max_slots=4, max_len=128,
+                scheduler="ampd", slo=SLOSpec(10.0, 10.0), seed=0,
+                profile=False)
+    base.update(kw)
+    return LiveCluster(live_cfg, **base)
+
+
+def test_live_mem_tokens_return_to_zero(live_cfg):
+    from repro.serving import make_live_sessions
+    cl = _live_cluster(live_cfg)
+    sessions = make_live_sessions(live_cfg, num_sessions=3, rounds=2,
+                                  prefill_len=16, decode_len=4)
+    r = cl.run_trace(sessions)
+    assert all(s.finish_time is not None for s in sessions)
+    assert all(d.mem_tokens == 0 for d in cl.decode_workers)
+    assert r.p95_itl >= 0.0        # unified metric set on LiveResult
+
+
+def test_live_failure_rebind_accounting(live_cfg):
+    from repro.serving import make_live_sessions
+    cl = _live_cluster(live_cfg, n_decode=2)
+    sessions = make_live_sessions(live_cfg, num_sessions=3, rounds=2,
+                                  prefill_len=16, decode_len=4)
+    cl.fail_worker("decode", 0, at=0.5)
+    r = cl.run_trace(sessions)
+    finished = [s for s in sessions if s.finish_time is not None]
+    assert len(finished) == len(sessions)
+    assert r.rebinds > 0
+    for d in cl.decode_workers:
+        assert d.mem_tokens == 0, (d.idx, d.alive, d.mem_tokens)
+
+
+def test_live_slot_exhaustion_backpressure(live_cfg):
+    """A decode failure halves slot capacity: remotely-prefilled sessions
+    must wait for a slot (join backpressure), not crash on allocate."""
+    from repro.serving import make_live_sessions
+    cl = _live_cluster(live_cfg, scheduler="dynamo", n_decode=2, max_slots=2)
+    sessions = make_live_sessions(live_cfg, num_sessions=3, rounds=2,
+                                  prefill_len=16, decode_len=4)
+    cl.fail_worker("decode", 0, at=0.3)
+    cl.run_trace(sessions)
+    assert all(s.finish_time is not None for s in sessions)
+    assert all(d.mem_tokens == 0 for d in cl.decode_workers)
+
+
+def test_live_chunked_smoke(live_cfg):
+    from repro.serving import make_live_sessions
+    cl = _live_cluster(live_cfg, scheduler="ampd-chunked", chunk_tokens=8)
+    sessions = make_live_sessions(live_cfg, num_sessions=3, rounds=2,
+                                  prefill_len=16, decode_len=4)
+    cl.run_trace(sessions)
+    for s in sessions:
+        assert s.finish_time is not None
+        assert len(s.generated) == 8
+        assert len(s.ttfts) == 2 and len(s.itls) == 8
+    assert all(d.mem_tokens == 0 for d in cl.decode_workers)
+
+
+def test_backend_routing_parity(live_cfg):
+    """Modeled and live backends must produce IDENTICAL routing decisions
+    on a fixed trace and seed: one Coordinator, one rng stream, same
+    drain-aware slack logic — the planner's estimator and the deployment
+    agree on where every prefill runs."""
+    from repro.serving import make_live_sessions
+    rounds, pf, dc = 3, 16, 4
+
+    cl = _live_cluster(live_cfg, n_prefill=2)
+    cl.coordinator.record_decisions = True
+    live_sessions = make_live_sessions(live_cfg, num_sessions=1,
+                                       rounds=rounds, prefill_len=pf,
+                                       decode_len=dc)
+    cl.run_trace(live_sessions)
+
+    model_sessions = [Session(
+        session_id=0, arrival_time=0.0,
+        rounds=[RoundSpec(prefill_len=pf, decode_len=dc, env_delay=0.0)
+                for _ in range(rounds)])]
+    dep = Deployment((WorkerGroup(1, 2),), (WorkerGroup(1, 1),))
+    sim = Simulation(PerfModel(live_cfg), dep, model_sessions,
+                     SLOSpec(10.0, 10.0),
+                     SimConfig(scheduler="ampd", seed=0,
+                               routing=RoutingConfig(ttft_thres=10.0,
+                                                     itl_thres=10.0)))
+    sim.coordinator.record_decisions = True
+    sim.run()
+
+    assert len(cl.coordinator.decision_log) == rounds
+    assert sim.coordinator.decision_log == cl.coordinator.decision_log

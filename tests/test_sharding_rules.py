@@ -7,15 +7,13 @@ jax = pytest.importorskip("jax")
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.distributed.sharding import ShardingEnv, make_rules  # noqa: E402
-from repro.launch.mesh import make_worker_mesh  # noqa: E402
+from repro.launch.mesh import make_abstract_mesh, make_worker_mesh  # noqa: E402
 
 
 @pytest.fixture(scope="module")
 def env():
     # 1x1 mesh can't test divisibility; build an abstract 16x16 mesh
-    from jax.sharding import AbstractMesh, AxisType
-    mesh = AbstractMesh((16, 16), ("data", "model"),
-                        axis_types=(AxisType.Auto,) * 2)
+    mesh = make_abstract_mesh((16, 16), ("data", "model"))
     rules = make_rules(mode="prefill", data_axes=("data",))
     return ShardingEnv(mesh=mesh, rules=rules)
 
@@ -60,9 +58,7 @@ def test_logits_prefer_vocab_over_seq(env):
 
 
 def test_decode_rules_context_parallel():
-    from jax.sharding import AbstractMesh, AxisType
-    mesh = AbstractMesh((16, 16), ("data", "model"),
-                        axis_types=(AxisType.Auto,) * 2)
+    mesh = make_abstract_mesh((16, 16), ("data", "model"))
     rules = make_rules(mode="decode", data_axes=("data",))
     env = ShardingEnv(mesh=mesh, rules=rules)
     # decode logits (B, H, 1, T): only kv_seq can take the model axis
@@ -71,9 +67,7 @@ def test_decode_rules_context_parallel():
 
 
 def test_batch_unshardable_cells():
-    from jax.sharding import AbstractMesh, AxisType
-    mesh = AbstractMesh((16, 16), ("data", "model"),
-                        axis_types=(AxisType.Auto,) * 2)
+    mesh = make_abstract_mesh((16, 16), ("data", "model"))
     rules = make_rules(mode="decode", data_axes=("data",),
                        batch_shardable=False)
     env = ShardingEnv(mesh=mesh, rules=rules)
