@@ -29,6 +29,18 @@ PAPER_MODELS = ["qwen3-32b", "llama3.1-70b", "mixtral-8x7b"]
 TRACE_GPUS = {"toolbench": 8, "hotpotqa": 8, "dureader": 16, "gaia": 32}
 SCHEDULERS = ["ampd", "dynamo", "vllm", "continuum"]
 
+#: shared tiny-trace profile for CI's benchmark-smoke job and local quick
+#: checks (``benchmarks/run.py --smoke``): small enough that the whole
+#: smoke suite finishes in well under 2 minutes on one CPU core, big enough
+#: that planner/runtime regressions (crashes, degenerate deployments,
+#: inverted chunked-vs-whole ITL) still surface.
+SMOKE = {
+    "num_sessions": 16,
+    "seeds": (11,),
+    "max_candidates": 4,
+    "chunk_grid": (256, 512),
+}
+
 
 def perf_for(model: str) -> PerfModel:
     return PerfModel(get_config(model))

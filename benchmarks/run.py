@@ -1,12 +1,16 @@
 """Benchmark entrypoint: one function per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--full]``
+``PYTHONPATH=src python -m benchmarks.run [--full | --smoke] [--json PATH]``
 
 Prints one ``name,us_per_call,derived`` CSV line per benchmark (plus each
 benchmark's own table above it).  Default is the quick profile (~minutes on
-one CPU core); --full runs all three paper models over the full rate grid.
+one CPU core); --full runs all three paper models over the full rate grid;
+--smoke runs the shared tiny-trace profile (``benchmarks.common.SMOKE``,
+<2 min) that CI's benchmark-smoke job gates on.  --json writes the summary
+(and smoke rows) to PATH for artifact upload.
 """
 import argparse
+import json
 import sys
 import time
 
@@ -15,10 +19,105 @@ def _section(title):
     print(f"\n===== {title} " + "=" * max(0, 60 - len(title)))
 
 
+def _emit_summary(profile, summary, json_path, extra=None):
+    """Print the CSV summary and (optionally) write the artifact JSON —
+    one shape for both the smoke gate and the full profiles."""
+    _section("SUMMARY  name,us_per_call,derived")
+    for name, us, derived in summary:
+        print(f"{name},{us:.0f},{derived}")
+    if json_path:
+        doc = {"profile": profile,
+               "summary": [{"name": n, "us": round(us), "derived": d}
+                           for n, us, d in summary]}
+        doc.update(extra or {})
+        with open(json_path, "w") as fh:
+            json.dump(doc, fh, indent=2, default=str)
+        print(f"wrote {json_path}")
+
+
+def smoke(json_path=None) -> int:
+    """Tiny-trace planner/runtime regression gate (CI benchmark-smoke job).
+
+    Returns a process exit code: non-zero when a smoke invariant fails."""
+    from benchmarks.common import SMOKE
+    summary, tables, failures = [], {}, []
+    t_all = time.time()
+
+    def record(name, t0, rows, derived):
+        summary.append((name, (time.time() - t0) * 1e6, derived))
+        tables[name] = rows
+
+    _section("smoke: Table 1 trace statistics")
+    from benchmarks import table1_traces
+    t0 = time.time()
+    rows = table1_traces.main()
+    worst = max(abs(r["rounds"] - r["rounds_paper"]) / r["rounds_paper"]
+                for r in rows)
+    if worst > 0.25:
+        failures.append(f"table1 rounds diverge from paper ({worst:.3f})")
+    record("table1_traces", t0, rows, f"max_rel_err={worst:.3f}")
+
+    _section("smoke: Table 2 joint planner (one trace)")
+    from benchmarks import table2_planner
+    t0 = time.time()
+    rows = table2_planner.run(traces=("hotpotqa",),
+                              num_sessions=SMOKE["num_sessions"],
+                              chunk_grid=SMOKE["chunk_grid"])
+    if any("FAILED" in r["ilp_pick"] for r in rows):
+        failures.append("table2 planner produced a degenerate deployment")
+    if any(not r["chunks"] for r in rows):
+        failures.append("joint planner chose no chunk sizes")
+    record("table2_planner", t0, rows, rows[0]["ilp_pick"])
+
+    _section("smoke: Fig. 9 chunked vs whole prefill")
+    from benchmarks import fig9_chunked
+    t0 = time.time()
+    rows = fig9_chunked.run(num_sessions=SMOKE["num_sessions"],
+                            seeds=SMOKE["seeds"])
+    whole = next(r for r in rows if r["arm"] == "interference"
+                 and r["scheduler"] == "ampd")
+    chunk = next(r for r in rows if r["arm"] == "interference"
+                 and r["scheduler"] == "ampd-chunked")
+    gain = 1 - chunk["avg_itl_ms"] / whole["avg_itl_ms"]
+    if gain < -0.05:
+        failures.append(f"chunked ITL regressed vs whole-task ({gain:+.1%})")
+    record("fig9_chunked", t0, rows, f"itl_gain={gain:+.1%}")
+
+    _section("smoke: Fig. 10 joint vs two-stage planning")
+    from benchmarks import fig10_joint_plan
+    t0 = time.time()
+    rows = fig10_joint_plan.run(num_sessions=SMOKE["num_sessions"] - 4,
+                                max_candidates=SMOKE["max_candidates"],
+                                chunk_grid=SMOKE["chunk_grid"],
+                                degrees=(1, 2, 4))
+    two = next(r for r in rows if r["strategy"] == "two-stage")
+    joint = next(r for r in rows if r["strategy"] == "joint")
+    if joint["slo"] < two["slo"]:
+        failures.append(
+            f"joint planning lost to two-stage "
+            f"({joint['slo']:.3f} < {two['slo']:.3f})")
+    record("fig10_joint_plan", t0, rows,
+           f"joint={joint['slo']:.3f} two_stage={two['slo']:.3f}")
+
+    _emit_summary("smoke", summary, json_path,
+                  extra={"wall_seconds": round(time.time() - t_all, 2),
+                         "failures": failures, "tables": tables})
+    print(f"smoke wall time: {time.time() - t_all:.1f}s")
+    for f in failures:
+        print(f"SMOKE FAILURE: {f}")
+    return 1 if failures else 0
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-trace regression gate (<2 min; used by CI)")
+    ap.add_argument("--json", default=None,
+                    help="write the summary as JSON to this path")
     args = ap.parse_args(sys.argv[1:])
+    if args.smoke:
+        sys.exit(smoke(args.json))
 
     summary = []
 
@@ -111,9 +210,7 @@ def main() -> None:
     except Exception as e:  # noqa: BLE001
         record("roofline", t0, f"skipped ({e})")
 
-    _section("SUMMARY  name,us_per_call,derived")
-    for name, us, derived in summary:
-        print(f"{name},{us:.0f},{derived}")
+    _emit_summary("full" if args.full else "quick", summary, args.json)
 
 
 if __name__ == "__main__":

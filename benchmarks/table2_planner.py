@@ -1,13 +1,18 @@
 """Table 2: planner-deduced top-3 deployments vs full-simulation ranking
-(agreement = the planner finds the empirically best configuration)."""
+(agreement = the planner finds the empirically best configuration).
+
+With ``joint=True`` (default) the planner also runs the joint
+chunk/deployment search (DESIGN.md §11): the ILP pick then carries the
+per-degree ``chunk_tokens`` chosen by the chunked tau estimator, and the
+``chunks`` column reports the degree -> chunk map the search settled on."""
 from benchmarks.common import perf_for, slo_for, TRACE_GPUS
 
-from repro.core.planner import plan
+from repro.core.planner import PlanningError, plan
 from repro.workloads import make_trace
 
 
 def run(model="qwen3-32b", traces=("hotpotqa", "dureader", "toolbench"),
-        num_sessions=80):
+        num_sessions=80, joint=True, chunk_grid=(256, 512)):
     rows = []
     for trace in traces:
         perf = perf_for(model)
@@ -15,16 +20,23 @@ def run(model="qwen3-32b", traces=("hotpotqa", "dureader", "toolbench"),
         N = TRACE_GPUS[trace]
         rate = {"toolbench": 1.5, "hotpotqa": 1.0, "dureader": 0.8,
                 "gaia": 0.3}[trace]
+        kw = {}
+        if joint:
+            kw = dict(scheduler="ampd-chunked", chunk_grid=chunk_grid)
         res = plan(perf,
                    lambda: make_trace(trace, num_sessions=num_sessions,
                                       arrival_rate=rate, seed=3),
-                   N=N, slo=slo, max_candidates=40, seed=3)
+                   N=N, slo=slo, max_candidates=40, seed=3, **kw)
         sim_top = [d.label() for d, _, _ in res.ranked[:3]]
-        ilp_pick = res.ilp.deployment().label()
+        try:
+            ilp_pick = res.ilp.deployment(res.chunk_by_degree).label()
+        except PlanningError as e:
+            ilp_pick = f"PLANNING-FAILED({e})"
         rows.append({
             "trace": trace, "N": N,
             "ilp_z": round(res.ilp.z, 3),
             "ilp_pick": ilp_pick,
+            "chunks": dict(sorted(res.chunk_by_degree.items())),
             "sim_rank1": sim_top[0],
             "sim_rank2": sim_top[1] if len(sim_top) > 1 else "",
             "sim_rank3": sim_top[2] if len(sim_top) > 2 else "",
@@ -33,11 +45,11 @@ def run(model="qwen3-32b", traces=("hotpotqa", "dureader", "toolbench"),
     return rows
 
 
-def main():
-    rows = run()
+def main(**kw):
+    rows = run(**kw)
     for r in rows:
         print(f"{r['trace']} (N={r['N']}): ILP[{r['ilp_ms']}ms] Z={r['ilp_z']} "
-              f"-> {r['ilp_pick']}")
+              f"-> {r['ilp_pick']}  chunks={r['chunks']}")
         print(f"   sim top-3: 1){r['sim_rank1']}  2){r['sim_rank2']}  "
               f"3){r['sim_rank3']}")
     return rows

@@ -7,7 +7,9 @@ the benchmarks.
 """
 from repro.core.perf_model import Hardware, PerfModel  # noqa: F401
 from repro.core.planner import (  # noqa: F401
+    DEFAULT_CHUNK_GRID,
     Deployment,
+    PlanningError,
     PlanResult,
     WorkerGroup,
     plan,

@@ -13,6 +13,13 @@ worker's mesh slice):
   T_kv(l_ctx; theta_src, theta_dst) — Hockney alpha-beta session-state
       transfer across worker slices, with a resharding penalty when the
       source/destination layouts differ.
+  T_fused(chunk, b; theta)      — one Sarathi-style fused step: prefill a
+      chunk of l_incr tokens WHILE advancing a batch of b decoding sessions
+      by one token under a single dispatch (DESIGN.md §7/§11).  One alpha
+      (the weight read and dispatch floor amortize across both phases),
+      linear prefill terms, plus the *marginal* per-sequence decode terms.
+      This is the cost the joint planner and the ChunkTuner invert to bound
+      fused-step duration near the ITL SLO.
 
 Coefficients come from either (a) analytic TPU v5e constants + the
 ModelConfig (defaults — what the planner uses before any profiling), or
@@ -66,6 +73,16 @@ class KvCoeffs:
     inv_bw: float      # s / byte
 
 
+@dataclass
+class FusedCoeffs:
+    """One fused chunk+decode step (T_fused, DESIGN.md §11)."""
+    alpha: float       # single dispatch + weight-read floor
+    beta_pre: float    # s / chunk token
+    gamma_pre: float   # s / (chunk token * ctx-token)
+    beta_dec: float    # s / piggybacked sequence
+    gamma_dec: float   # s / (sequence * ctx-token)  (marginal KV reads)
+
+
 class PerfModel:
     def __init__(self, cfg: ModelConfig, hw: Hardware = Hardware(),
                  tp_degrees: Sequence[int] = (1, 2, 4, 8, 16)):
@@ -74,10 +91,13 @@ class PerfModel:
         self.tp_degrees = tuple(tp_degrees)
         self.pre: Dict[int, PrefillCoeffs] = {}
         self.dec: Dict[int, DecodeCoeffs] = {}
+        self.fused: Dict[int, FusedCoeffs] = {}
         self.kv: KvCoeffs = self._analytic_kv()
+        self._fused_fitted: set = set()
         for tp in self.tp_degrees:
             self.pre[tp] = self._analytic_prefill(tp)
             self.dec[tp] = self._analytic_decode(tp)
+            self.fused[tp] = self._analytic_fused(tp)
 
     # ------------------------------------------------------------------
     # Analytic defaults
@@ -115,6 +135,16 @@ class PerfModel:
         hw = self.hw
         return KvCoeffs(alpha=hw.kv_setup, inv_bw=1.0 / hw.ici_bw)
 
+    def _analytic_fused(self, tp: int) -> FusedCoeffs:
+        """Default fused cost = chunk prefill + marginal decode under one
+        dispatch: the chunk pays the alpha (weight read rides along), each
+        piggybacked sequence adds only its per-sequence state/KV reads."""
+        p, d = self.pre.get(tp), self.dec.get(tp)
+        if p is None or d is None:
+            p, d = self._analytic_prefill(tp), self._analytic_decode(tp)
+        return FusedCoeffs(alpha=p.alpha, beta_pre=p.beta, gamma_pre=p.gamma,
+                           beta_dec=d.beta, gamma_dec=d.gamma)
+
     # ------------------------------------------------------------------
     # Cost functions (paper §3)
     # ------------------------------------------------------------------
@@ -134,6 +164,19 @@ class PerfModel:
               speed: float = 1.0) -> float:
         c = self.dec[self._tp(tp)]
         return (c.alpha + c.beta * batch + c.gamma * batch * avg_ctx) / speed
+
+    def t_fused(self, l_hist: int, l_incr: int, batch: int, tp: int,
+                avg_ctx: float = 0.0, speed: float = 1.0) -> float:
+        """One fused chunk+decode step (DESIGN.md §11): prefill l_incr tokens
+        on l_hist of history while ``batch`` resident sessions (mean context
+        ``avg_ctx``) each decode one token under the same dispatch."""
+        c = self.fused[self._tp(tp)]
+        t = (c.alpha
+             + c.beta_pre * l_incr
+             + c.gamma_pre * l_incr * (l_hist + l_incr / 2.0)
+             + c.beta_dec * batch
+             + c.gamma_dec * batch * avg_ctx)
+        return t / speed
 
     def t_kv(self, l_ctx: int, tp_src: int, tp_dst: int) -> float:
         nbytes = self.cfg.session_state_bytes(l_ctx, self.hw.dtype_bytes)
@@ -156,6 +199,8 @@ class PerfModel:
         coef, *_ = np.linalg.lstsq(np.asarray(rows), np.asarray(ys), rcond=None)
         a, b, g = (max(float(v), 0.0) for v in coef)
         self.pre[tp] = PrefillCoeffs(alpha=a, beta=b, gamma=g)
+        if tp not in self._fused_fitted:
+            self.fused[tp] = self._analytic_fused(tp)
 
     def fit_decode(self, tp: int,
                    samples: Iterable[Tuple[int, float, float]]) -> None:
@@ -167,6 +212,24 @@ class PerfModel:
         coef, *_ = np.linalg.lstsq(np.asarray(rows), np.asarray(ys), rcond=None)
         a, b_, g = (max(float(v), 0.0) for v in coef)
         self.dec[tp] = DecodeCoeffs(alpha=a, beta=b_, gamma=g)
+        if tp not in self._fused_fitted:
+            self.fused[tp] = self._analytic_fused(tp)
+
+    def fit_fused(self, tp: int,
+                  samples: Iterable[Tuple[int, int, int, float, float]]) -> None:
+        """samples: (l_hist, l_incr, batch, avg_ctx, seconds) measured on
+        fused chunk+decode steps — same least-squares path as the other
+        coefficient families (§3 offline profiler)."""
+        rows, ys = [], []
+        for l_hist, l_incr, b, ctx, t in samples:
+            rows.append([1.0, l_incr, l_incr * (l_hist + l_incr / 2.0),
+                         b, b * ctx])
+            ys.append(t)
+        coef, *_ = np.linalg.lstsq(np.asarray(rows), np.asarray(ys), rcond=None)
+        a, bp, gp, bd, gd = (max(float(v), 0.0) for v in coef)
+        self.fused[tp] = FusedCoeffs(alpha=a, beta_pre=bp, gamma_pre=gp,
+                                     beta_dec=bd, gamma_dec=gd)
+        self._fused_fitted.add(tp)
 
     def fit_kv(self, samples: Iterable[Tuple[int, float]]) -> None:
         """samples: (l_ctx, seconds) at equal src/dst layouts."""

@@ -12,6 +12,20 @@ load-aware tau coefficients by simulating a single worker of each degree at
 its fair-share arrival rate, solves the ILP, and then *ranks* uniform
 (P:<TP,DP>, D:<TP,DP>) deployments by full-simulation SLO attainment —
 returning planner-predicted vs simulated top-k for the Table 2 comparison.
+
+Joint chunk/deployment planning (DESIGN.md §11): under the ``ampd-chunked``
+scheduler the serving-time schedule has a second knob — ``chunk_tokens`` —
+that shifts the prefill/decode latency trade *per degree* (small chunks
+amortize more decode steps into fused chunk+decode dispatches; big chunks
+pay fewer dispatch floors).  A deployment split that is optimal for
+whole-task prefill can therefore be sub-optimal once chunks piggyback
+decode batches (DistServe's goodput argument, arXiv:2401.09670).  With
+``scheduler="ampd-chunked"`` (or an explicit ``chunk_grid``), the per-degree
+tau estimator simulates each candidate degree under the chunked schedule at
+EVERY grid chunk size and feeds the best (tau, chunk) pair into the ILP, so
+the (x, y) vectors and the chunk sizes are searched jointly; the returned
+:class:`Deployment` carries the chosen ``chunk_tokens`` on each decode
+worker group, which the simulator/live cluster apply per worker.
 """
 from __future__ import annotations
 
@@ -26,10 +40,18 @@ from scipy.optimize import Bounds, LinearConstraint, milp
 from repro.core.perf_model import PerfModel
 
 
+class PlanningError(RuntimeError):
+    """The planner cannot produce a usable deployment (degenerate ILP
+    solution, or a GPU budget too small for one worker of each phase)."""
+
+
 @dataclass(frozen=True)
 class WorkerGroup:
     tp: int
     count: int
+    #: planner-chosen sub-chunk size for this group's decode workers under
+    #: chunked incremental prefill; 0 = runtime default / whole-task
+    chunk_tokens: int = 0
 
 
 @dataclass
@@ -41,9 +63,25 @@ class Deployment:
         return (sum(g.tp * g.count for g in self.prefill)
                 + sum(g.tp * g.count for g in self.decode))
 
+    def with_chunk(self, chunk_tokens: int) -> "Deployment":
+        """Same split, with every decode group carrying ``chunk_tokens``."""
+        return Deployment(
+            prefill=self.prefill,
+            decode=tuple(WorkerGroup(g.tp, g.count, chunk_tokens)
+                         for g in self.decode))
+
+    def decode_chunks(self) -> Tuple[int, ...]:
+        """Per-worker ``chunk_tokens``, DP-expanded in decode-worker order —
+        the form ``LiveCluster(decode_chunk_tokens=...)`` consumes."""
+        return tuple(g.chunk_tokens for g in self.decode
+                     for _ in range(g.count))
+
     def label(self) -> str:
-        p = "+".join(f"<TP={g.tp},DP={g.count}>" for g in self.prefill)
-        d = "+".join(f"<TP={g.tp},DP={g.count}>" for g in self.decode)
+        def grp(g: WorkerGroup) -> str:
+            c = f",C={g.chunk_tokens}" if g.chunk_tokens else ""
+            return f"<TP={g.tp},DP={g.count}{c}>"
+        p = "+".join(grp(g) for g in self.prefill)
+        d = "+".join(grp(g) for g in self.decode)
         return f"P:{p}, D:{d}"
 
 
@@ -55,13 +93,22 @@ class ILPSolution:
     status: str
     solve_seconds: float
 
-    def deployment(self) -> Deployment:
-        return Deployment(
+    def deployment(self,
+                   chunk_by_degree: Optional[Dict[int, int]] = None,
+                   ) -> Deployment:
+        dep = Deployment(
             prefill=tuple(WorkerGroup(n, c) for n, c in sorted(self.x.items())
                           if c > 0),
-            decode=tuple(WorkerGroup(n, c) for n, c in sorted(self.y.items())
-                         if c > 0),
+            decode=tuple(
+                WorkerGroup(n, c, (chunk_by_degree or {}).get(n, 0))
+                for n, c in sorted(self.y.items()) if c > 0),
         )
+        if not dep.prefill or not dep.decode:
+            raise PlanningError(
+                f"degenerate ILP deployment (status={self.status!r}): "
+                f"x={self.x}, y={self.y} — every serving plan needs at "
+                f"least one prefill and one decode worker")
+        return dep
 
 
 def solve_ilp(
@@ -166,9 +213,15 @@ class PlanResult:
     ranked: List[Tuple[Deployment, float, float]]  # (dep, slo_attainment, p95_e2e)
     tau_pre: Dict[int, float]
     tau_dec: Dict[int, float]
+    #: joint planning only: per-degree chunk size chosen by the tau search
+    chunk_by_degree: Dict[int, int] = field(default_factory=dict)
 
     def top(self, k: int = 3) -> List[Deployment]:
         return [d for d, _, _ in self.ranked[:k]]
+
+
+#: chunk grid for joint chunk/deployment search (DESIGN.md §11)
+DEFAULT_CHUNK_GRID = (128, 256, 512, 1024)
 
 
 def plan(
@@ -182,28 +235,64 @@ def plan(
     tau_rate_scale: float = 1.0,
     max_candidates: int = 64,
     seed: int = 0,
+    scheduler: str = "ampd",
+    chunk_grid: Optional[Sequence[int]] = None,
+    rank_full_grid: bool = False,
 ) -> PlanResult:
-    """Full offline planning: tau coefficients -> ILP -> ranked candidates."""
+    """Full offline planning: tau coefficients -> ILP -> ranked candidates.
+
+    With ``scheduler="ampd-chunked"`` (or an explicit ``chunk_grid``) the tau
+    estimator simulates each degree under the chunked schedule at every grid
+    chunk size and searches ``chunk_tokens`` jointly with the deployment
+    split; ranked deployments then carry the chosen per-group chunk size.
+    ``rank_full_grid`` re-searches the grid per ranked candidate (more sims)
+    instead of reusing the per-degree tau winner.
+    """
     from repro.core.simulator import simulate_deployment  # lazy (cycle)
     simulate = simulate or simulate_deployment
 
-    # tau(n): P95 latency of a single worker at its fair GPU share of traffic.
+    T = [n for n in degrees if n <= N]
+    if not T or 2 * min(T) > N:
+        raise PlanningError(
+            f"N={N} GPUs cannot host one prefill AND one decode worker at "
+            f"any degree in {tuple(degrees)}")
+
+    joint = scheduler == "ampd-chunked" or chunk_grid is not None
+    if joint:
+        scheduler = "ampd-chunked"
+        grid: Tuple[int, ...] = tuple(chunk_grid or DEFAULT_CHUNK_GRID)
+    else:
+        grid = (0,)
+
+    def sim(dep: Deployment, sessions, chunk: int):
+        return simulate(perf, dep, sessions, slo, scheduler=scheduler,
+                        seed=seed, chunk_tokens=chunk)
+
+    # tau(n): P95 latency of a single worker at its fair GPU share of
+    # traffic; under joint planning, minimized over the chunk grid.
     tau_pre: Dict[int, float] = {}
     tau_dec: Dict[int, float] = {}
-    for n in degrees:
-        if n > N:
-            continue
+    chunk_by_degree: Dict[int, int] = {}
+    for n in T:
         share = n / N * tau_rate_scale
-        sessions = make_trace()
         # thin the trace to the worker's share
-        keep = max(1, int(len(sessions) * share))
-        sub = sessions[:keep]
-        dep = Deployment((WorkerGroup(n, 1),), (WorkerGroup(n, 1),))
-        r = simulate(perf, dep, sub, slo, seed=seed)
+        best = None
+        for c in grid:
+            sessions = make_trace()
+            keep = max(1, int(len(sessions) * share))
+            sub = sessions[:keep]
+            dep = Deployment((WorkerGroup(n, 1),), (WorkerGroup(n, 1, c),))
+            r = sim(dep, sub, c)
+            score = (-r.slo_attainment, r.p95_ttft + 50 * r.p95_itl)
+            if best is None or score < best[0]:
+                best = (score, c, r)
+        _, c_star, r = best
         tau_pre[n] = r.p95_ttft if r.p95_ttft > 0 else 1e-3
         tau_dec[n] = r.p95_itl * 50 if r.p95_itl > 0 else 1e-3  # per-50-token unit
+        if joint:
+            chunk_by_degree[n] = c_star
 
-    ilp = solve_ilp(tau_pre, tau_dec, N, [n for n in degrees if n <= N])
+    ilp = solve_ilp(tau_pre, tau_dec, N, T)
 
     cands = uniform_candidates(N, degrees)
     if len(cands) > max_candidates:
@@ -211,8 +300,13 @@ def plan(
         cands = [cands[int(i * stride)] for i in range(max_candidates)]
     ranked = []
     for dep in cands:
-        sessions = make_trace()
-        r = simulate(perf, dep, sessions, slo, seed=seed)
-        ranked.append((dep, r.slo_attainment, r.p95_e2e))
+        cand_grid = (grid if (joint and rank_full_grid)
+                     else (chunk_by_degree.get(dep.decode[0].tp, 0),))
+        for c in cand_grid:
+            sessions = make_trace()
+            r = sim(dep.with_chunk(c) if c else dep, sessions, c)
+            ranked.append((dep.with_chunk(c) if c else dep,
+                           r.slo_attainment, r.p95_e2e))
     ranked.sort(key=lambda t: (-t[1], t[2]))
-    return PlanResult(ilp=ilp, ranked=ranked, tau_pre=tau_pre, tau_dec=tau_dec)
+    return PlanResult(ilp=ilp, ranked=ranked, tau_pre=tau_pre,
+                      tau_dec=tau_dec, chunk_by_degree=chunk_by_degree)

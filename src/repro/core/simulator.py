@@ -37,6 +37,7 @@ from repro.core.routing import RoutingConfig
 from repro.core.types import Session, SLOSpec
 from repro.runtime import (
     COLOCATED,
+    ChunkTuner,
     Coordinator,
     ModeledBackend,
     ServingRuntime,
@@ -58,6 +59,7 @@ class SimWorker:
     speed: float = 1.0
     alive: bool = True
     colocated: bool = False
+    chunk_tokens: int = 0         # planner-chosen per-worker chunk (§11)
     prefill_queue: List[PrefillTask] = field(default_factory=list)
     sessions: List[Session] = field(default_factory=list)
     mem_tokens: int = 0
@@ -82,6 +84,8 @@ class SimConfig:
     window_s: float = 10.0
     kv_overlap: bool = True       # lazy-read overlap with queue wait (§6)
     chunk_tokens: int = 0         # 0 -> whole-task prefill (512 for -chunked)
+    adaptive_chunk: bool = False  # ChunkTuner re-derives chunk sizes online
+    chunk_headroom: float = 0.85  # fused-step budget fraction of the ITL SLO
     seed: int = 0
     max_time: float = 1.0e7
 
@@ -136,7 +140,10 @@ class Simulation:
                 i = 0
                 for grp in groups:
                     for _ in range(grp.count):
-                        ws.append(self._new_worker(i, grp.tp, kind))
+                        w = self._new_worker(i, grp.tp, kind)
+                        if kind == "decode":
+                            w.chunk_tokens = grp.chunk_tokens
+                        ws.append(w)
                         i += 1
         if straggler:
             for (kind, idx), sp in straggler.items():
@@ -145,10 +152,14 @@ class Simulation:
                 if idx < len(ws):
                     ws[idx].speed = sp
 
+        tuner = None
+        if self.cfg.adaptive_chunk:
+            tuner = ChunkTuner(perf, itl_slo=slo.itl_thres,
+                               headroom=self.cfg.chunk_headroom)
         self.coordinator = Coordinator(
             perf=perf, routing=self.cfg.routing,
             scheduler=self.cfg.scheduler, reorder_w=self.cfg.reorder_w,
-            seed=self.cfg.seed)
+            seed=self.cfg.seed, chunk_tuner=tuner)
         self.runtime = ServingRuntime(
             ModeledBackend(perf, kv_overlap=self.cfg.kv_overlap),
             self.coordinator, self.prefill_workers, self.decode_workers,
@@ -228,8 +239,11 @@ def simulate_deployment(perf: PerfModel, deployment: Deployment,
                         sessions: List[Session], slo: SLOSpec,
                         scheduler: str = "ampd", seed: int = 0,
                         cfg: Optional[SimConfig] = None,
+                        chunk_tokens: int = 0, adaptive_chunk: bool = False,
                         **kw) -> SimResult:
     base = cfg or SimConfig(scheduler=scheduler, seed=seed,
+                            chunk_tokens=chunk_tokens,
+                            adaptive_chunk=adaptive_chunk,
                             routing=RoutingConfig(
                                 ttft_thres=slo.ttft_thres,
                                 itl_thres=slo.itl_thres))

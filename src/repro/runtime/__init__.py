@@ -16,6 +16,7 @@ from repro.runtime.backend import (  # noqa: F401
     LiveBackend,
     ModeledBackend,
 )
+from repro.runtime.chunk_tuner import ChunkTuner  # noqa: F401
 from repro.runtime.coordinator import (  # noqa: F401
     ADAPTIVE,
     COLOCATED,

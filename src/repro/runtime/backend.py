@@ -154,13 +154,12 @@ class ModeledBackend(ExecutionBackend):
         return dt, {s.session_id: None for s in batch}
 
     def run_fused_prefill(self, decode_worker, task, session, batch):
-        tp, speed = decode_worker.tp, decode_worker.speed
+        # T_fused (§3/DESIGN.md §11): chunk prefill + marginal decode under
+        # one dispatch — the same cost family the planner and tuner invert
         avg_ctx = sum(s.context_len for s in batch) / len(batch)
-        # marginal decode cost: per-sequence KV/state reads only — the
-        # weight-read + dispatch floor rides along with the chunk
-        marginal = (self.perf.t_dec(len(batch), tp, avg_ctx, speed)
-                    - self.perf.t_dec(0, tp, avg_ctx, speed))
-        dur = self.perf.t_pre(task.l_hist, task.l_incr, tp, speed) + marginal
+        dur = self.perf.t_fused(task.l_hist, task.l_incr, len(batch),
+                                decode_worker.tp, avg_ctx,
+                                decode_worker.speed)
         return dur, None, {s.session_id: None for s in batch}
 
     def detach(self, decode_worker, session) -> None:

@@ -1,0 +1,77 @@
+"""Adaptive per-worker chunk-size tuning (DESIGN.md §11).
+
+Chunked incremental prefill bounds a local prefill's decode pause to one
+fused chunk+decode step — but a *static* ``chunk_tokens`` only bounds that
+pause for the batch size and context lengths it was picked for.  As a decode
+worker's resident batch grows (more piggybacked sequences, more marginal KV
+reads) or its sessions' contexts lengthen, the same chunk takes longer and
+the ITL SLO erodes.
+
+:class:`ChunkTuner` closes the loop online: before each round increment is
+split, it inverts the fitted fused-step cost ``T_fused(chunk, b; theta)``
+(``PerfModel.t_fused``) for the largest chunk whose predicted fused-step
+duration stays within ``headroom * itl_slo``, given the bound decode
+worker's CURRENT batch size and mean context.  T_fused is quadratic in the
+chunk length (the attention term integrates over the chunk), so the bound
+
+    gamma_pre/2 * c^2 + (beta_pre + gamma_pre*l_hist) * c
+        + (alpha + beta_dec*b + gamma_dec*b*ctx)  <=  headroom * itl_slo
+
+solves in closed form.  The solution is monotone: a tighter ITL SLO, a
+bigger batch, or a longer history can never yield a *larger* chunk — the
+property the planner's joint search and the tests rely on.
+
+The tuner is owned by the :class:`~repro.runtime.coordinator.Coordinator`
+(it already holds the fitted perf model) and consulted by the
+:class:`~repro.runtime.protocol.ServingRuntime` at every chunk boundary, so
+both the modeled and the live backend re-derive each worker's chunk size as
+conditions drift.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.core.perf_model import PerfModel
+
+
+@dataclass
+class ChunkTuner:
+    """Derive ``chunk_tokens`` per decode worker from the fused-step model.
+
+    ``headroom``: fraction of the ITL SLO the fused step may occupy (the
+    rest absorbs queueing, write-back and model error).  ``quantum``: chunk
+    sizes are floored to a multiple of this (TPU-friendly shapes; also makes
+    the output stable under tiny load jitter).
+    """
+
+    perf: PerfModel
+    itl_slo: float
+    headroom: float = 0.85
+    min_chunk: int = 64
+    max_chunk: int = 8192
+    quantum: int = 64
+
+    def budget(self) -> float:
+        return self.headroom * self.itl_slo
+
+    def chunk_for(self, tp: int, batch: int, avg_ctx: float = 0.0,
+                  l_hist: int = 0, speed: float = 1.0) -> int:
+        """Largest quantized chunk whose fused step fits the ITL budget on a
+        worker of degree ``tp`` currently decoding ``batch`` sessions."""
+        c = self.perf.fused[self.perf._tp(tp)]
+        base = (c.alpha + c.beta_dec * batch
+                + c.gamma_dec * batch * avg_ctx)
+        rem = self.budget() * speed - base
+        if rem <= 0.0:
+            return self.min_chunk          # floor: progress over SLO purity
+        lin = c.beta_pre + c.gamma_pre * l_hist
+        quad = c.gamma_pre / 2.0
+        if quad > 1e-18:
+            n = (-lin + math.sqrt(lin * lin + 4.0 * quad * rem)) / (2.0 * quad)
+        elif lin > 1e-18:
+            n = rem / lin
+        else:
+            n = float(self.max_chunk)      # cost is flat in chunk length
+        n = min(max(n, self.min_chunk), self.max_chunk)
+        return max(self.min_chunk, int(n) // self.quantum * self.quantum)

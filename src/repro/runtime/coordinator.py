@@ -22,6 +22,7 @@ from typing import List, Optional, Tuple
 
 from repro.core.perf_model import PerfModel
 from repro.core.reordering import reorder_queue
+from repro.runtime.chunk_tuner import ChunkTuner
 from repro.core.routing import (
     RouteDecision,
     RoutingConfig,
@@ -47,6 +48,10 @@ class Coordinator:
     reorder_w: int = 3
     seed: int = 0
     record_decisions: bool = False
+    #: adaptive per-worker chunk sizing (DESIGN.md §11); when set, the
+    #: runtime asks ``chunk_size`` at every chunk boundary instead of using
+    #: a static chunk_tokens
+    chunk_tuner: Optional[ChunkTuner] = None
     rng: random.Random = field(init=False)
 
     def __post_init__(self):
@@ -102,6 +107,22 @@ class Coordinator:
                                       task.incr_offset, dec.kind,
                                       dec.worker_idx))
         return dec
+
+    # -- chunk sizing (DESIGN.md §11) ---------------------------------------
+    def chunk_size(self, task: PrefillTask, decode_worker,
+                   decoding_batch: List, fallback: int) -> int:
+        """Effective chunk size for splitting ``task``: the tuner's online
+        derivation from the bound decode worker's current load when adaptive
+        tuning is on, else the worker's planned per-group chunk_tokens, else
+        the runtime-wide static value."""
+        if self.chunk_tuner is not None:
+            b = len(decoding_batch)
+            avg_ctx = (sum(s.context_len for s in decoding_batch) / b
+                       if b else 0.0)
+            return self.chunk_tuner.chunk_for(
+                decode_worker.tp, b, avg_ctx, task.l_hist,
+                getattr(decode_worker, "speed", 1.0))
+        return getattr(decode_worker, "chunk_tokens", 0) or fallback
 
     # -- queue ordering (§4.2) ---------------------------------------------
     def order_queue(self, worker, now: float) -> None:

@@ -17,6 +17,14 @@ interleave at chunk boundaries so a local prefill pauses the decode batch
 for at most one chunk, and a remote chunk's KV is written back eagerly so
 the next chunk may run anywhere (history stays lazily readable).
 
+Chunk sizing is re-derived at EVERY chunk boundary (DESIGN.md §11): the
+runtime splits off only the next sub-chunk and keeps the remainder as one
+pending task, asking the Coordinator for the effective size each time — a
+planner-chosen per-worker ``chunk_tokens`` (carried on the worker), or the
+:class:`~repro.runtime.chunk_tuner.ChunkTuner`'s online derivation from the
+bound decode worker's current batch/context, or the static runtime-wide
+value.  With a static size this reproduces exactly the old up-front split.
+
 Session objects are duck-typed (core ``Session`` or serving ``LiveSession``)
 and gain runtime-managed fields: ``state`` ∈ arriving | prefill_wait |
 decoding | env | done | dropped, a rebind generation counter (stale events
@@ -27,7 +35,6 @@ provably returns to 0 once its sessions leave.
 """
 from __future__ import annotations
 
-from collections import deque
 from typing import Callable, Dict, List, Optional
 
 from repro.core.types import PrefillTask
@@ -57,6 +64,10 @@ class ServingRuntime:
             else 0)
         for w in list(prefill_workers) + list(decode_workers):
             self._init_worker(w)
+        self._chunked = bool(
+            self.chunk_tokens
+            or coordinator.chunk_tuner is not None
+            or any(getattr(w, "chunk_tokens", 0) for w in decode_workers))
 
     # -- wiring ------------------------------------------------------------
     @property
@@ -69,6 +80,8 @@ class ServingRuntime:
             w.util_busy_s = 0.0
         if not hasattr(w, "tasks_done"):
             w.tasks_done = 0
+        if not hasattr(w, "chunk_tokens"):
+            w.chunk_tokens = 0          # planner-chosen per-worker size
 
     def register_worker(self, w, kind: str):
         """Elastic scale-up: add a worker mid-run; it starts pulling work on
@@ -76,6 +89,8 @@ class ServingRuntime:
         ws = self.prefill_workers if kind == "prefill" else self.decode_workers
         ws.append(w)
         self._init_worker(w)
+        if kind == "decode" and getattr(w, "chunk_tokens", 0):
+            self._chunked = True
         return w
 
     def submit(self, session) -> None:
@@ -84,7 +99,7 @@ class ServingRuntime:
         session.tokens_this_round = 0
         session.last_token_time = 0.0
         session._rt_gen = 0
-        session._rt_chunks = None
+        session._rt_rest = None
         session._rt_chain_worker = None
         self.events.at(session.arrival_time,
                        lambda s=session: self._on_arrival(s), "arrival")
@@ -109,25 +124,40 @@ class ServingRuntime:
 
     # -- dispatch: chunk split + routing (§3 step 2 / §4.1) -----------------
     def _dispatch(self, s, task: PrefillTask) -> None:
+        """Route the next unit of work; in chunked mode, split off one
+        sub-chunk sized for CURRENT conditions and park the remainder
+        (re-split at the next boundary — DESIGN.md §11)."""
         if s.state == "dropped":
             return
-        c = self.chunk_tokens
-        if c and task.l_incr > c:
-            total = task.l_incr
-            s._rt_chunks = deque(
-                PrefillTask(
-                    session_id=task.session_id, round_idx=task.round_idx,
-                    l_hist=task.l_hist + off,
-                    l_incr=min(c, total - off),
-                    enqueue_time=task.enqueue_time,
-                    arrival_time=task.arrival_time,
-                    is_initial=task.is_initial,
-                    incr_offset=task.incr_offset + off,
-                    is_final_chunk=(off + c >= total),
-                    gen=s._rt_gen)
-                for off in range(0, total, c))
-            task = s._rt_chunks.popleft()
+        s._rt_rest = None
+        if self._chunked:
+            d = self.decode_workers[s.decode_worker]
+            batch = []
+            if self.coordinator.chunk_tuner is not None:
+                # only the tuner reads the current decoding batch
+                batch = [b for b in self.backend.attached(d)
+                         if getattr(b, "state", "") == "decoding"]
+            c = self.coordinator.chunk_size(task, d, batch, self.chunk_tokens)
+            if c and task.l_incr > c:
+                task, s._rt_rest = self._split_task(task, c)
         self._route_one(s, task)
+
+    @staticmethod
+    def _split_task(task: PrefillTask, c: int):
+        """(first c tokens, remainder) of one increment task."""
+        first = PrefillTask(
+            session_id=task.session_id, round_idx=task.round_idx,
+            l_hist=task.l_hist, l_incr=c,
+            enqueue_time=task.enqueue_time, arrival_time=task.arrival_time,
+            is_initial=task.is_initial, incr_offset=task.incr_offset,
+            is_final_chunk=False, gen=task.gen)
+        rest = PrefillTask(
+            session_id=task.session_id, round_idx=task.round_idx,
+            l_hist=task.l_hist + c, l_incr=task.l_incr - c,
+            enqueue_time=task.enqueue_time, arrival_time=task.arrival_time,
+            is_initial=task.is_initial, incr_offset=task.incr_offset + c,
+            is_final_chunk=task.is_final_chunk, gen=task.gen)
+        return first, rest
 
     def _route_one(self, s, task: PrefillTask) -> None:
         d = self.decode_workers[s.decode_worker]
@@ -169,7 +199,7 @@ class ServingRuntime:
             if task.gen != s._rt_gen:       # superseded by a rebind
                 continue
             d = self.decode_workers[s.decode_worker]
-            if w.kind == "decode" and self.chunk_tokens:
+            if w.kind == "decode" and self._chunked:
                 # chunked mode: piggyback the decode batch on the chunk —
                 # one fused step advances both (bounded interference)
                 batch = [b for b in self.backend.attached(w)
@@ -252,8 +282,8 @@ class ServingRuntime:
         d.mem_tokens += task.l_incr
         self.backend.on_join(d, s, task, payload)
         if not task.is_final_chunk:
-            nxt = s._rt_chunks.popleft()
-            self._route_one(s, nxt)
+            rest, s._rt_rest = s._rt_rest, None
+            self._dispatch(s, rest)     # re-derives the next chunk size
             self._kick(d)       # decode interleaves while the chunk queues
             return
         ttft = self.now - task.arrival_time
@@ -388,7 +418,7 @@ class ServingRuntime:
         self.coordinator.rebinds += 1
         s._rt_gen += 1
         pending = self._pending_increment(s, task)
-        s._rt_chunks = None
+        s._rt_rest = None
         s._rt_chain_worker = None
         rtask = self.backend.make_recovery_task(s, task, self.now, pending)
         rtask.gen = s._rt_gen
@@ -399,11 +429,11 @@ class ServingRuntime:
         """The un-joined suffix of the current round's increment, which the
         recovery prefill must cover on top of the (lost) context:
         (round_idx, offset_into_increment, token_count).  A failed task plus
-        its queued sibling chunks; or, for a session waiting out an env
-        delay, the whole upcoming increment (its round was never
-        dispatched)."""
+        its parked remainder; or, for a session waiting out an env delay,
+        the whole upcoming increment (its round was never dispatched)."""
         if task is not None:
-            pend = task.l_incr + sum(c.l_incr for c in (s._rt_chunks or ()))
+            rest = getattr(s, "_rt_rest", None)
+            pend = task.l_incr + (rest.l_incr if rest is not None else 0)
             return (task.round_idx, task.incr_offset, pend)
         r = min(s.current_round, s.num_rounds - 1)
         if s.state == "env":

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -21,7 +21,14 @@ from repro.configs.base import ModelConfig
 from repro.core.perf_model import PerfModel
 from repro.core.routing import RoutingConfig
 from repro.core.types import RoundSpec, SLOSpec
-from repro.runtime import Coordinator, LiveBackend, ServingRuntime, mean, p95
+from repro.runtime import (
+    ChunkTuner,
+    Coordinator,
+    LiveBackend,
+    ServingRuntime,
+    mean,
+    p95,
+)
 from repro.serving.engine import Engine, profile_engine
 from repro.serving.workers import (
     LiveDecodeWorker,
@@ -50,7 +57,9 @@ class LiveCluster:
                  n_decode: int = 1, max_slots: int = 4, max_len: int = 256,
                  scheduler: str = "ampd", slo: Optional[SLOSpec] = None,
                  seed: int = 0, model_kv_time: bool = False,
-                 profile: bool = True, chunk_tokens: int = 0):
+                 profile: bool = True, chunk_tokens: int = 0,
+                 adaptive_chunk: bool = False, chunk_headroom: float = 0.85,
+                 decode_chunk_tokens: Sequence[int] = ()):
         self.cfg = cfg
         self.slo = slo or SLOSpec(ttft_thres=2.0, itl_thres=0.2)
         key = __import__("jax").random.PRNGKey(seed)
@@ -67,8 +76,12 @@ class LiveCluster:
             eng = Engine(cfg, max_len=max_len, key=key,
                          params=shared_engine_params)
             shared_engine_params = eng.params
+            # planner-chosen per-worker chunk size (Deployment.decode_chunks())
+            per_worker = (decode_chunk_tokens[i]
+                          if i < len(decode_chunk_tokens) else 0)
             self.decode_workers.append(
-                LiveDecodeWorker(i, eng, max_slots=max_slots))
+                LiveDecodeWorker(i, eng, max_slots=max_slots,
+                                 chunk_tokens=per_worker))
 
         self.perf = PerfModel(cfg)
         if profile:
@@ -76,12 +89,19 @@ class LiveCluster:
                      else self.decode_workers[0].engine)
             profile_engine(probe, self.perf, tp=1,
                            prefill_lens=(16, 32, 64), hist_lens=(0, 32),
-                           batches=(1, max(2, max_slots // 2)))
+                           batches=(1, max(2, max_slots // 2)),
+                           fused=adaptive_chunk)
+        tuner = None
+        if adaptive_chunk:
+            # online per-worker chunk sizing from the PROFILED perf model
+            # (fused coefficients re-derive from the measured fits above)
+            tuner = ChunkTuner(self.perf, itl_slo=self.slo.itl_thres,
+                               headroom=chunk_headroom)
         self.coordinator = Coordinator(
             perf=self.perf,
             routing=RoutingConfig(ttft_thres=self.slo.ttft_thres,
                                   itl_thres=self.slo.itl_thres),
-            scheduler=scheduler, seed=seed)
+            scheduler=scheduler, seed=seed, chunk_tuner=tuner)
         self.runtime = ServingRuntime(
             LiveBackend(self.perf, model_kv_time=model_kv_time),
             self.coordinator, self.prefill_workers, self.decode_workers,

@@ -130,8 +130,14 @@ def profile_engine(engine: Engine, perf: PerfModel, tp: int,
                    *, prefill_lens: Tuple[int, ...] = (32, 64, 128),
                    hist_lens: Tuple[int, ...] = (0, 64),
                    batches: Tuple[int, ...] = (1, 4, 8),
+                   fused: bool = False,
                    seed: int = 0) -> PerfModel:
-    """Measure the live engine and overwrite perf coefficients for `tp`."""
+    """Measure the live engine and overwrite perf coefficients for `tp`.
+
+    With ``fused=True`` also measures Sarathi-style fused chunk+decode steps
+    (one row prefilling a chunk while ``b`` rows each decode one token) and
+    fits the T_fused family (``fit_fused``) — otherwise T_fused re-derives
+    from the fitted prefill/decode coefficients."""
     rng = np.random.default_rng(seed)
     cfg = engine.cfg
     V = cfg.vocab_size
@@ -171,4 +177,32 @@ def profile_engine(engine: Engine, perf: PerfModel, tp: int,
         dt, _ = _time_call(call)
         dec_samples.append((b, float(ctx), dt))
     perf.fit_decode(tp, dec_samples)
+
+    if fused:
+        fused_samples = []
+        for ctx in (16, 48):
+            for b in sorted({max(1, min(b, 3)) for b in batches}):
+                rows = b + 1
+                if ctx + min(prefill_lens) + 8 > engine.max_len:
+                    continue          # nothing in this group can fit
+                cache = engine.new_cache(rows)
+                htok = jnp.asarray(rng.integers(0, V, (rows, ctx)), jnp.int32)
+                cache, _, _ = engine.run_chunk(cache, htok)
+                for n in prefill_lens:
+                    if ctx + n + 8 > engine.max_len:
+                        continue
+                    m = engine.pad_mult
+                    width = ((n + m - 1) // m) * m
+                    chunk = np.full((rows, width), -1, np.int32)
+                    chunk[0, :n] = rng.integers(0, V, n)
+                    chunk[1:, 0] = rng.integers(0, V, b)  # decoding rows
+
+                    def call(c=cache, t=jnp.asarray(chunk)):
+                        c2 = jax.tree.map(jnp.copy, c)
+                        return engine.run_chunk(c2, t)
+
+                    dt, _ = _time_call(call)
+                    fused_samples.append((ctx, n, b, float(ctx), dt))
+        if len(fused_samples) >= 5:
+            perf.fit_fused(tp, fused_samples)
     return perf

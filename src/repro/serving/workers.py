@@ -119,12 +119,15 @@ class LiveDecodeWorker:
     kind = "decode"
 
     def __init__(self, idx: int, engine: Engine, max_slots: int, tp: int = 1,
-                 window_s: float = 10.0):
+                 window_s: float = 10.0, chunk_tokens: int = 0):
         self.idx = idx
         self.engine = engine
         self.tp = tp
         self.speed = 1.0
         self.alive = True
+        #: planner-chosen per-worker sub-chunk size (0 = runtime default);
+        #: the ServingRuntime/Coordinator consult this at chunk boundaries
+        self.chunk_tokens = chunk_tokens
         self.max_slots = max_slots
         self.cache = engine.new_cache(max_slots)
         self.slots: List[Optional[LiveSession]] = [None] * max_slots

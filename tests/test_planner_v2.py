@@ -1,0 +1,233 @@
+"""Planner v2: T_fused fit, ChunkTuner, joint chunk/deployment search,
+and degenerate-deployment guards (DESIGN.md §11)."""
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    Deployment,
+    PerfModel,
+    PlanningError,
+    SimConfig,
+    Simulation,
+    SLOSpec,
+    WorkerGroup,
+    plan,
+)
+from repro.core.planner import ILPSolution
+from repro.core.routing import RoutingConfig
+from repro.runtime import ChunkTuner
+from repro.workloads import make_trace
+
+
+@pytest.fixture(scope="module")
+def perf():
+    return PerfModel(get_config("qwen3-32b"))
+
+
+# ---------------------------------------------------------------------------
+# T_fused
+# ---------------------------------------------------------------------------
+
+
+def test_fit_fused_recovers_synthetic_coefficients():
+    # fresh instance: fit_fused mutates, and the module fixture is shared
+    perf = PerfModel(get_config("qwen3-32b"))
+    true = dict(alpha=2.5e-3, bp=1.7e-4, gp=3.0e-8, bd=2.0e-4, gd=5.0e-8)
+
+    def t(l_hist, l_incr, b, ctx):
+        return (
+            true["alpha"]
+            + true["bp"] * l_incr
+            + true["gp"] * l_incr * (l_hist + l_incr / 2.0)
+            + true["bd"] * b
+            + true["gd"] * b * ctx
+        )
+
+    samples = [
+        (h, n, b, float(ctx), t(h, n, b, ctx))
+        for h in (0, 512, 2048)
+        for n in (128, 512, 1024)
+        for b in (0, 4, 16)
+        for ctx in (256, 4096)
+    ]
+    perf.fit_fused(4, samples)
+    c = perf.fused[4]
+    assert c.alpha == pytest.approx(true["alpha"], rel=1e-6)
+    assert c.beta_pre == pytest.approx(true["bp"], rel=1e-6)
+    assert c.gamma_pre == pytest.approx(true["gp"], rel=1e-6)
+    assert c.beta_dec == pytest.approx(true["bd"], rel=1e-6)
+    assert c.gamma_dec == pytest.approx(true["gd"], rel=1e-6)
+    # and the cost function evaluates the fitted model
+    assert perf.t_fused(512, 256, 8, 4, 1024.0) == pytest.approx(
+        t(512, 256, 8, 1024.0), rel=1e-6
+    )
+
+
+def test_t_fused_analytic_matches_marginal_decode_composition():
+    perf = PerfModel(get_config("qwen3-32b"))
+    l_hist, l_incr, b, ctx, tp = 1024, 512, 6, 2048.0, 4
+    marginal = perf.t_dec(b, tp, ctx) - perf.t_dec(0, tp, ctx)
+    expect = perf.t_pre(l_hist, l_incr, tp) + marginal
+    assert perf.t_fused(l_hist, l_incr, b, tp, ctx) == pytest.approx(expect)
+
+
+def test_fit_prefill_refreshes_derived_fused_coefficients():
+    perf = PerfModel(get_config("qwen3-32b"))
+    samples = [
+        (h, n, 5e-3 + 4e-4 * n + 1e-8 * n * (h + n / 2.0))
+        for h in (0, 256, 1024)
+        for n in (64, 256, 1024)
+    ]
+    perf.fit_prefill(4, samples)
+    assert perf.fused[4].alpha == pytest.approx(perf.pre[4].alpha)
+    assert perf.fused[4].beta_pre == pytest.approx(perf.pre[4].beta)
+
+
+# ---------------------------------------------------------------------------
+# ChunkTuner
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_tuner_monotone_in_itl_slo(perf):
+    slos = (0.5, 0.3, 0.15, 0.08, 0.04, 0.02, 0.01)
+    chunks = [
+        ChunkTuner(perf, itl_slo=s).chunk_for(4, 8, 4096.0, 2048) for s in slos
+    ]
+    for tight, loose in zip(chunks[1:], chunks):
+        assert tight <= loose, f"tighter SLO grew the chunk: {chunks}"
+    # a meaningfully looser SLO must actually buy a bigger chunk
+    assert chunks[0] > chunks[-1]
+
+
+def test_chunk_tuner_monotone_in_batch_and_history(perf):
+    tuner = ChunkTuner(perf, itl_slo=0.05)
+    by_batch = [tuner.chunk_for(4, b, 8192.0, 1024) for b in (0, 8, 32, 128)]
+    assert all(a >= b for a, b in zip(by_batch, by_batch[1:]))
+    by_hist = [tuner.chunk_for(4, 4, 2048.0, h) for h in (0, 4096, 65536)]
+    assert all(a >= b for a, b in zip(by_hist, by_hist[1:]))
+
+
+def test_chunk_tuner_bounds_and_quantum(perf):
+    tuner = ChunkTuner(perf, itl_slo=1e-6)  # impossible budget
+    assert tuner.chunk_for(4, 64, 65536.0, 65536) == tuner.min_chunk
+    big = ChunkTuner(perf, itl_slo=1e3).chunk_for(16, 0, 0.0, 0)
+    assert big == ChunkTuner(perf, itl_slo=1e3).max_chunk
+    c = ChunkTuner(perf, itl_slo=0.08).chunk_for(4, 4, 2048.0, 512)
+    assert c % ChunkTuner(perf, itl_slo=0.08).quantum == 0
+
+
+# ---------------------------------------------------------------------------
+# Degenerate deployments raise
+# ---------------------------------------------------------------------------
+
+
+def test_ilp_solution_empty_side_raises():
+    sol = ILPSolution(x={4: 0}, y={4: 2}, z=1.0, status="optimal",
+                      solve_seconds=0.0)
+    with pytest.raises(PlanningError):
+        sol.deployment()
+    failed = ILPSolution(x={}, y={}, z=float("inf"), status="failed:infeasible",
+                         solve_seconds=0.0)
+    with pytest.raises(PlanningError):
+        failed.deployment()
+
+
+def test_plan_rejects_budget_below_one_worker_pair(perf):
+    slo = SLOSpec(ttft_thres=3.0, itl_thres=0.15)
+    with pytest.raises(PlanningError):
+        plan(perf, lambda: [], N=1, slo=slo, degrees=(2, 4))
+    with pytest.raises(PlanningError):
+        plan(perf, lambda: [], N=3, slo=slo, degrees=(2, 4))
+
+
+# ---------------------------------------------------------------------------
+# Joint chunk/deployment planning + adaptive runtime
+# ---------------------------------------------------------------------------
+
+
+def test_joint_plan_returns_chunked_deployment(perf):
+    slo = SLOSpec(ttft_thres=3.0, itl_thres=0.15)
+    res = plan(
+        perf,
+        lambda: make_trace("hotpotqa", num_sessions=12, arrival_rate=0.8,
+                           seed=5),
+        N=4,
+        slo=slo,
+        degrees=(1, 2),
+        max_candidates=4,
+        seed=5,
+        scheduler="ampd-chunked",
+        chunk_grid=(256, 512),
+    )
+    assert res.ilp.status == "optimal"
+    assert set(res.chunk_by_degree) == {1, 2}
+    assert all(c in (256, 512) for c in res.chunk_by_degree.values())
+    dep, att, _ = res.ranked[0]
+    assert att > 0.0
+    assert all(g.chunk_tokens in (256, 512) for g in dep.decode)
+    ilp_dep = res.ilp.deployment(res.chunk_by_degree)
+    assert all(g.chunk_tokens in (256, 512) for g in ilp_dep.decode)
+    assert "C=" in ilp_dep.label()
+
+
+def test_adaptive_chunk_simulation_completes(perf):
+    slo = SLOSpec(ttft_thres=6.0, itl_thres=0.1)
+    dep = Deployment((), (WorkerGroup(4, 2),))
+    cfg = SimConfig(
+        scheduler="ampd-chunked",
+        adaptive_chunk=True,
+        seed=11,
+        routing=RoutingConfig(ttft_thres=slo.ttft_thres,
+                              itl_thres=slo.itl_thres),
+    )
+    sessions = make_trace("gaia", num_sessions=10, arrival_rate=0.5, seed=11)
+    res = Simulation(perf, dep, sessions, slo, cfg).run()
+    assert all(s.finish_time is not None for s in sessions)
+    assert res.avg_itl > 0.0
+
+
+def test_decode_chunks_expansion_for_live_cluster():
+    dep = Deployment(
+        (WorkerGroup(1, 1),),
+        (WorkerGroup(2, 2, 256), WorkerGroup(1, 1, 128)),
+    )
+    assert dep.decode_chunks() == (256, 256, 128)
+
+
+def test_per_group_chunk_tokens_reach_live_workers():
+    from repro.configs import get_config as gc
+    from repro.serving.cluster import LiveCluster
+
+    cfg = gc("qwen2.5-14b").reduced()
+    cl = LiveCluster(
+        cfg,
+        n_prefill=1,
+        n_decode=2,
+        max_slots=1,
+        max_len=64,
+        scheduler="ampd-chunked",
+        profile=False,
+        decode_chunk_tokens=(16, 8),
+    )
+    assert [w.chunk_tokens for w in cl.decode_workers] == [16, 8]
+    assert cl.runtime._chunked
+
+
+def test_per_group_chunk_tokens_reach_workers(perf):
+    slo = SLOSpec(ttft_thres=6.0, itl_thres=0.1)
+    dep = Deployment(
+        (WorkerGroup(2, 1),),
+        (WorkerGroup(2, 2, 128),),
+    )
+    cfg = SimConfig(
+        scheduler="ampd-chunked",
+        seed=3,
+        routing=RoutingConfig(ttft_thres=slo.ttft_thres,
+                              itl_thres=slo.itl_thres),
+    )
+    sessions = make_trace("hotpotqa", num_sessions=8, arrival_rate=1.0, seed=3)
+    sim = Simulation(perf, dep, sessions, slo, cfg)
+    assert all(w.chunk_tokens == 128 for w in sim.decode_workers)
+    sim.run()
+    assert all(s.finish_time is not None for s in sessions)
