@@ -83,6 +83,28 @@ def smoke(json_path=None) -> int:
         failures.append(f"chunked ITL regressed vs whole-task ({gain:+.1%})")
     record("fig9_chunked", t0, rows, f"itl_gain={gain:+.1%}")
 
+    _section("smoke: Fig. 11 work stealing + priority preemption")
+    from benchmarks import fig11_stealing
+    t0 = time.time()
+    rows = fig11_stealing.run(num_sessions=SMOKE["num_sessions"],
+                              seeds=SMOKE["seeds"])
+    on = next(r for r in rows if r["arm"] == "stealing")
+    off = next(r for r in rows if r["arm"] == "no-stealing")
+    if on["steals"] < 1:
+        failures.append("stealing-enabled skewed run recorded no steals")
+    for r in (on, off):
+        if r["completed"] != r["arrived"]:
+            failures.append(
+                f"fig11 {r['arm']}: {r['completed']}/{r['arrived']} "
+                "sessions completed (work lost)")
+    if on["slo"] < off["slo"] - 0.05:
+        failures.append(
+            f"stealing hurt SLO attainment ({off['slo']:.3f} -> "
+            f"{on['slo']:.3f})")
+    record("fig11_stealing", t0, rows,
+           f"p95_ttft {off['p95_ttft_s']}s->{on['p95_ttft_s']}s "
+           f"steals={on['steals']}")
+
     _section("smoke: Fig. 10 joint vs two-stage planning")
     from benchmarks import fig10_joint_plan
     t0 = time.time()
@@ -184,6 +206,15 @@ def main() -> None:
                  and r["scheduler"] == "ampd-chunked")
     record("fig9_chunked", t0,
            f"itl_gain={(1 - chunk['avg_itl_ms'] / whole['avg_itl_ms']):+.1%}")
+
+    _section("Fig. 11: work stealing + priority preemption (beyond-paper)")
+    from benchmarks import fig11_stealing
+    t0 = time.time()
+    rows = fig11_stealing.main()
+    off = next(r for r in rows if r["arm"] == "no-stealing")
+    on = next(r for r in rows if r["arm"] == "stealing")
+    record("fig11_stealing", t0,
+           f"p95_ttft_gain={(1 - on['p95_ttft_s'] / off['p95_ttft_s']):+.1%}")
 
     _section("Fault tolerance / stragglers (beyond-paper)")
     from benchmarks import fault_tolerance

@@ -41,6 +41,7 @@ from repro.runtime import (
     Coordinator,
     ModeledBackend,
     ServingRuntime,
+    StealingConfig,
     WindowStat,
     mean,
     p95,
@@ -86,6 +87,11 @@ class SimConfig:
     chunk_tokens: int = 0         # 0 -> whole-task prefill (512 for -chunked)
     adaptive_chunk: bool = False  # ChunkTuner re-derives chunk sizes online
     chunk_headroom: float = 0.85  # fused-step budget fraction of the ITL SLO
+    # -- global scheduling layer (DESIGN.md §12) --------------------------
+    work_stealing: bool = False   # drained prefill workers steal backlog
+    steal_watermark: int = 0      # queue length at/below which to steal
+    steal_min_profit_s: float = 0.0   # required net ETA gain per move
+    preemption: bool = True       # SLO-slack priority (with work_stealing)
     seed: int = 0
     max_time: float = 1.0e7
 
@@ -105,6 +111,8 @@ class SimResult:
     recoveries: int
     sim_time: float
     worker_util: Dict[str, float]
+    steals: int = 0               # §12 counters (0 when stealing disabled)
+    preempts: int = 0
 
 
 class Simulation:
@@ -156,10 +164,16 @@ class Simulation:
         if self.cfg.adaptive_chunk:
             tuner = ChunkTuner(perf, itl_slo=slo.itl_thres,
                                headroom=self.cfg.chunk_headroom)
+        stealing = None
+        if self.cfg.work_stealing:
+            stealing = StealingConfig(
+                watermark=self.cfg.steal_watermark,
+                min_profit_s=self.cfg.steal_min_profit_s,
+                preemption=self.cfg.preemption)
         self.coordinator = Coordinator(
             perf=perf, routing=self.cfg.routing,
             scheduler=self.cfg.scheduler, reorder_w=self.cfg.reorder_w,
-            seed=self.cfg.seed, chunk_tuner=tuner)
+            seed=self.cfg.seed, chunk_tuner=tuner, stealing=stealing)
         self.runtime = ServingRuntime(
             ModeledBackend(perf, kv_overlap=self.cfg.kv_overlap),
             self.coordinator, self.prefill_workers, self.decode_workers,
@@ -232,6 +246,8 @@ class Simulation:
             recoveries=self.coordinator.rebinds,
             sim_time=self.now,
             worker_util=util,
+            steals=self.coordinator.sched.steals,
+            preempts=self.coordinator.sched.preempts,
         )
 
 
@@ -240,10 +256,12 @@ def simulate_deployment(perf: PerfModel, deployment: Deployment,
                         scheduler: str = "ampd", seed: int = 0,
                         cfg: Optional[SimConfig] = None,
                         chunk_tokens: int = 0, adaptive_chunk: bool = False,
+                        work_stealing: bool = False,
                         **kw) -> SimResult:
     base = cfg or SimConfig(scheduler=scheduler, seed=seed,
                             chunk_tokens=chunk_tokens,
                             adaptive_chunk=adaptive_chunk,
+                            work_stealing=work_stealing,
                             routing=RoutingConfig(
                                 ttft_thres=slo.ttft_thres,
                                 itl_thres=slo.itl_thres))

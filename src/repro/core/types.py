@@ -32,6 +32,7 @@ class PrefillTask:
     incr_offset: int = 0               # offset into the round's increment
     is_final_chunk: bool = True        # TTFT/decode trigger on the last chunk
     gen: int = 0                       # session rebind generation at creation
+    preempted: bool = False            # counted once when priority parks it
 
     @property
     def total_ctx(self) -> int:

@@ -23,7 +23,14 @@ from repro.runtime.coordinator import (  # noqa: F401
     REORDERING,
     SCHEDULERS,
     Coordinator,
+    StealingConfig,
 )
 from repro.runtime.events import EventLoop  # noqa: F401
-from repro.runtime.metrics import WindowStat, mean, p95, quantile  # noqa: F401
+from repro.runtime.metrics import (  # noqa: F401
+    SchedCounters,
+    WindowStat,
+    mean,
+    p95,
+    quantile,
+)
 from repro.runtime.protocol import DEFAULT_CHUNK_TOKENS, ServingRuntime  # noqa: F401

@@ -99,6 +99,20 @@ class ExecutionBackend:
         for s in list(self.attached(decode_worker)):
             self.detach(decode_worker, s)
 
+    # -- work stealing (DESIGN.md §12) -------------------------------------
+    def on_steal(self, task: PrefillTask, session, src_worker,
+                 dst_worker) -> None:
+        """A queued chunk migrates from ``src_worker`` to ``dst_worker``.
+
+        Base semantics (both backends): chunk-chain locality does not
+        migrate — if the session's previous chunk ran on the source, the
+        thief must lazily re-read the full history from the bound decode
+        worker (the KV-locality penalty the Coordinator charged when it
+        accepted the steal)."""
+        if getattr(session, "_rt_chain_worker", None) == (
+                src_worker.kind, src_worker.idx):
+            session._rt_chain_worker = None
+
     # -- fault tolerance ---------------------------------------------------
     def make_recovery_task(self, session, task: Optional[PrefillTask],
                            now: float, pending) -> PrefillTask:
@@ -185,9 +199,16 @@ class LiveBackend(ExecutionBackend):
     def __init__(self, perf: PerfModel, *, model_kv_time: bool = False):
         self.perf = perf
         self.model_kv_time = model_kv_time
+        self.kv_steal_bytes = 0     # history payload re-read after steals
 
     def incr_len(self, session, round_idx: int) -> int:
         return len(session.prompt_tokens[round_idx])
+
+    def on_steal(self, task, session, src_worker, dst_worker) -> None:
+        from repro.serving.kv_transfer import steal_handoff
+        super().on_steal(task, session, src_worker, dst_worker)
+        self.kv_steal_bytes += steal_handoff(
+            dst_worker.engine.cfg, task, session, src_worker, dst_worker)
 
     def admit_local(self, decode_worker, session) -> bool:
         if session.slot is None:

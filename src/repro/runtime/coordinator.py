@@ -13,16 +13,31 @@ of its recent-completion window mean and its current queue-drain estimate
 sum(T_pre over queued tasks).  Queue metadata is globally shared (§3) — the
 single-controller adaptation of the paper's Redis layer — and without the
 drain term a stale 10s window lets bursts pile onto one worker.
+
+Global scheduling layer (DESIGN.md §12): with a :class:`StealingConfig`
+attached, the Coordinator additionally (a) orders every queue by SLO-slack
+priority — least laxity (deadline minus PerfModel service estimate) first —
+instead of the per-queue Alg. 2 window, (b) records a *preempt* whenever a
+higher-priority chunk overtakes a parked mid-round remainder at a chunk
+boundary, and (c) plans *cross-worker steals*: when a prefill queue drains
+below the watermark, ``plan_steal`` migrates the most profitable queued
+chunk from the most backlogged worker — accepting a move only if the stay
+ETA (victim drain + service there) exceeds the move ETA (thief drain +
+service + the KV-locality penalty ``t_kv(l_hist)`` for re-reading history
+on the thief).  Routing decisions are irrevocable at enqueue time;
+stealing is the repair path when conditions drift (stragglers, bursts,
+chunk remainders landing behind a backlog).
 """
 from __future__ import annotations
 
 import random
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.perf_model import PerfModel
 from repro.core.reordering import reorder_queue
 from repro.runtime.chunk_tuner import ChunkTuner
+from repro.runtime.metrics import SchedCounters
 from repro.core.routing import (
     RouteDecision,
     RoutingConfig,
@@ -40,6 +55,24 @@ SCHEDULERS = ("ampd", "ampd-noreorder", "ampd-noroute", "ampd-chunked",
               "dynamo", "vllm", "continuum")
 
 
+@dataclass(frozen=True)
+class StealingConfig:
+    """Knobs of the global scheduling layer (DESIGN.md §12).
+
+    ``watermark``: a prefill worker whose queue length is at or below this
+    looks for work to steal (0 = steal only when about to idle).
+    ``min_profit_s``: required net ETA gain before a migration is accepted
+    — the steal-profitability condition is strict, so marginal moves (which
+    would just shuffle queue entries between equals) never happen.
+    ``preemption``: enable SLO-slack priority ordering + preempt accounting
+    (can be disabled to ablate stealing alone).
+    """
+
+    watermark: int = 0
+    min_profit_s: float = 0.0
+    preemption: bool = True
+
+
 @dataclass
 class Coordinator:
     perf: PerfModel
@@ -52,6 +85,9 @@ class Coordinator:
     #: runtime asks ``chunk_size`` at every chunk boundary instead of using
     #: a static chunk_tokens
     chunk_tuner: Optional[ChunkTuner] = None
+    #: global scheduling layer (DESIGN.md §12): SLO-slack priority,
+    #: chunk-boundary preemption and cross-worker work stealing
+    stealing: Optional[StealingConfig] = None
     rng: random.Random = field(init=False)
 
     def __post_init__(self):
@@ -62,8 +98,10 @@ class Coordinator:
         self.local_count = 0
         self.total_routed = 0
         self.rebinds = 0
-        #: (session_id, round_idx, incr_offset, kind, worker_idx) per route —
-        #: the backend-parity contract surface (tests/test_runtime_unified).
+        self.sched = SchedCounters()
+        #: (session_id, round_idx, incr_offset, kind, worker_idx) per event,
+        #: kind ∈ local | remote | steal | preempt — the backend-parity
+        #: contract surface (tests/test_runtime_unified).
         self.decision_log: List[Tuple[int, int, int, str, Optional[int]]] = []
 
     # -- binding (§3 step 1) ----------------------------------------------
@@ -71,6 +109,11 @@ class Coordinator:
         """Least-loaded alive decode worker; prefers one with a free slot
         when workers expose slot admission (live continuous batching)."""
         alive = [d for d in decode_workers if d.alive]
+        if not alive:
+            raise RuntimeError(
+                f"cannot bind session {session.session_id}: all "
+                f"{len(decode_workers)} decode workers are dead — the "
+                "runtime must drop (or queue) arrivals instead of binding")
         with_slot = [d for d in alive
                      if getattr(d, "free_slot", None) is None
                      or d.free_slot() is not None]
@@ -124,10 +167,121 @@ class Coordinator:
                 getattr(decode_worker, "speed", 1.0))
         return getattr(decode_worker, "chunk_tokens", 0) or fallback
 
-    # -- queue ordering (§4.2) ---------------------------------------------
+    # -- global scheduling layer (DESIGN.md §12) ----------------------------
+    @property
+    def preemptive(self) -> bool:
+        return self.stealing is not None and self.stealing.preemption
+
+    def laxity(self, task: PrefillTask, worker, now: float) -> float:
+        """SLO-slack priority: time to spare before this chunk must START to
+        meet its round's TTFT deadline, priced by the PerfModel.  Lower =
+        more urgent.  ``deadline - now - T_pre`` — note the ordering between
+        two tasks on one worker is independent of ``now`` (it cancels),
+        which keeps the priority order identical across the modeled and
+        live backends on the same queue state."""
+        deadline = task.arrival_time + self.routing.ttft_thres
+        return deadline - now - self.perf.t_pre(
+            task.l_hist, task.l_incr, worker.tp, worker.speed)
+
+    def note_parked(self, worker, chosen: PrefillTask, now: float) -> None:
+        """Chunk-boundary preemption accounting: ``chosen`` was just popped;
+        any queued mid-round remainder (incr_offset > 0) of another session
+        with strictly more slack has had its continuation parked.  Counted
+        once per chunk (the ``preempted`` flag) so repeated boundaries do
+        not inflate the counter."""
+        if not self.preemptive:
+            return
+        lx = self.laxity(chosen, worker, now)
+        for k in worker.prefill_queue:
+            if (k.incr_offset > 0 and not k.preempted
+                    and k.session_id != chosen.session_id
+                    and lx < self.laxity(k, worker, now)):
+                k.preempted = True
+                self.sched.preempts += 1
+                if self.record_decisions:
+                    self.decision_log.append(
+                        (k.session_id, k.round_idx, k.incr_offset,
+                         "preempt", worker.idx))
+
+    def plan_steal(self, thief, prefill_workers: List, now: float,
+                   sessions: Dict[int, object], decode_workers: List):
+        """Find the most profitable queued chunk to migrate onto ``thief``.
+
+        Steal-profitability condition (strict): accept candidate ``k`` on
+        victim ``v`` iff
+
+            stay = drain(v ahead of k) + T_pre(k; v)
+            move = drain(thief) + T_kv(l_hist; d -> thief) + T_pre(k; thief)
+            stay - move > min_profit_s
+
+        where the T_kv term is the KV-locality penalty — history must be
+        re-read from the bound decode worker on the thief (and the lazy-read
+        prefetch restarts, so the execution really pays it) — charged as 0
+        when the session's chunk chain already lives on the thief.  A
+        *running* task — on the victim AND on the thief (watermark>0
+        prefetch steals while the thief still runs) — contributes its full
+        service estimate to its side's drain (remaining time is unknowable
+        live; the full estimate keeps the plan backend-deterministic).
+
+        Returns (victim, task) or None.
+        """
+        st = self.stealing
+        t_self = sum(self.perf.t_pre(k.l_hist, k.l_incr, thief.tp,
+                                     thief.speed)
+                     for k in thief.prefill_queue)
+        mine = getattr(thief, "_rt_running_task", None)
+        if mine is not None:
+            t_self += self.perf.t_pre(mine.l_hist, mine.l_incr, thief.tp,
+                                      thief.speed)
+        best: Optional[Tuple[float, object, PrefillTask]] = None
+        examined = False
+        for v in prefill_workers:
+            if v is thief or not v.alive or not v.prefill_queue:
+                continue
+            run = getattr(v, "_rt_running_task", None)
+            ahead = (self.perf.t_pre(run.l_hist, run.l_incr, v.tp, v.speed)
+                     if run is not None else 0.0)
+            for k in v.prefill_queue:
+                stay_run = self.perf.t_pre(k.l_hist, k.l_incr, v.tp, v.speed)
+                s = sessions.get(k.session_id)
+                if s is None or k.gen != getattr(s, "_rt_gen", 0):
+                    continue                    # superseded by a rebind
+                examined = True
+                move_read = 0.0
+                if (k.l_hist > 0 and getattr(s, "_rt_chain_worker", None)
+                        != ("prefill", thief.idx)):
+                    d = decode_workers[s.decode_worker]
+                    move_read = self.perf.t_kv(k.l_hist, d.tp, thief.tp)
+                move = t_self + move_read + self.perf.t_pre(
+                    k.l_hist, k.l_incr, thief.tp, thief.speed)
+                profit = (ahead + stay_run) - move
+                ahead += stay_run
+                if profit > st.min_profit_s and (
+                        best is None or profit > best[0]):
+                    best = (profit, v, k)
+        if best is None:
+            if examined:
+                self.sched.steal_rejected += 1
+            return None
+        _, victim, task = best
+        self.sched.steals += 1
+        self.sched.stolen_tokens += task.l_incr
+        if self.record_decisions:
+            self.decision_log.append((task.session_id, task.round_idx,
+                                      task.incr_offset, "steal", thief.idx))
+        return victim, task
+
+    # -- queue ordering (§4.2 / §12) ----------------------------------------
     def order_queue(self, worker, now: float) -> None:
         q = worker.prefill_queue
         if len(q) <= 1:
+            return
+        if self.preemptive:
+            # SLO-slack priority: least laxity first; the sort is stable so
+            # equal-laxity tasks keep FCFS order.  (now cancels in the
+            # comparison — sort on the time-independent part.)
+            q.sort(key=lambda t: t.arrival_time - self.perf.t_pre(
+                t.l_hist, t.l_incr, worker.tp, worker.speed))
             return
         if self.scheduler in REORDERING:
             est = lambda t: self.perf.t_pre(t.l_hist, t.l_incr, worker.tp,

@@ -2,12 +2,31 @@
 
 One percentile definition and one sliding-window estimator, so the modeled
 simulator and the live cluster report *the same* statistics — previously
-each path carried its own (diverging) copy of the percentile math.
+each path carried its own (diverging) copy of the percentile math.  The
+global scheduling layer's counters (DESIGN.md §12) live here too: steal /
+preempt events are part of the backend-parity contract surface, so both
+backends must account them through the same structure.
 """
 from __future__ import annotations
 
 from collections import deque
+from dataclasses import dataclass
 from typing import List, Sequence
+
+
+@dataclass
+class SchedCounters:
+    """Work-stealing / preemption accounting (DESIGN.md §12).
+
+    Owned by the :class:`~repro.runtime.coordinator.Coordinator` — the only
+    writer — and surfaced on both ``SimResult`` and ``LiveResult`` so the
+    modeled and live backends report the new event kinds identically.
+    """
+
+    steals: int = 0            # queued chunks migrated to a draining worker
+    steal_rejected: int = 0    # steal scans where no move was net-positive
+    preempts: int = 0          # parked remainders overtaken by higher priority
+    stolen_tokens: int = 0     # sum of l_incr over migrated chunks
 
 
 def p95(vals: Sequence[float]) -> float:

@@ -25,6 +25,16 @@ planner-chosen per-worker ``chunk_tokens`` (carried on the worker), or the
 bound decode worker's current batch/context, or the static runtime-wide
 value.  With a static size this reproduces exactly the old up-front split.
 
+Global scheduling layer (DESIGN.md §12): with a ``StealingConfig`` on the
+Coordinator, queues order by SLO-slack priority, a higher-priority chunk
+overtaking a parked mid-round remainder at a chunk boundary is accounted as
+a *preemption* (no mid-kernel aborts — the remainder simply waits), and a
+prefill worker whose queue drains below the watermark *steals* the most
+profitable queued chunk from the most backlogged worker (``plan_steal``
+charges the KV-locality penalty before accepting).  A stolen task's
+``enqueue_time`` resets so the lazy-read prefetch overlap restarts on the
+thief — the penalty the Coordinator priced is the one the execution pays.
+
 Session objects are duck-typed (core ``Session`` or serving ``LiveSession``)
 and gain runtime-managed fields: ``state`` ∈ arriving | prefill_wait |
 decoding | env | done | dropped, a rebind generation counter (stale events
@@ -76,6 +86,7 @@ class ServingRuntime:
 
     def _init_worker(self, w) -> None:
         w._running = False
+        w._rt_running_task = None       # in-flight prefill (steal planning)
         if not hasattr(w, "util_busy_s"):
             w.util_busy_s = 0.0
         if not hasattr(w, "tasks_done"):
@@ -85,12 +96,14 @@ class ServingRuntime:
 
     def register_worker(self, w, kind: str):
         """Elastic scale-up: add a worker mid-run; it starts pulling work on
-        the next routing decision."""
+        the next routing decision — or immediately, by stealing backlog."""
         ws = self.prefill_workers if kind == "prefill" else self.decode_workers
         ws.append(w)
         self._init_worker(w)
         if kind == "decode" and getattr(w, "chunk_tokens", 0):
             self._chunked = True
+        if kind == "prefill":
+            self._kick(w)               # empty queue -> steal attempt
         return w
 
     def submit(self, session) -> None:
@@ -129,7 +142,20 @@ class ServingRuntime:
         (re-split at the next boundary — DESIGN.md §11)."""
         if s.state == "dropped":
             return
-        s._rt_rest = None
+        rest, s._rt_rest = s._rt_rest, None
+        if (rest is not None and rest.gen == task.gen
+                and rest.round_idx == task.round_idx
+                and rest.incr_offset == task.incr_offset + task.l_incr):
+            # re-dispatch of a chunk whose remainder is still parked (its
+            # prefill worker died while the chunk was queued): reabsorb the
+            # remainder so no increment tokens are lost — re-split below
+            task = PrefillTask(
+                session_id=task.session_id, round_idx=task.round_idx,
+                l_hist=task.l_hist, l_incr=task.l_incr + rest.l_incr,
+                enqueue_time=task.enqueue_time,
+                arrival_time=task.arrival_time, is_initial=task.is_initial,
+                incr_offset=task.incr_offset,
+                is_final_chunk=rest.is_final_chunk, gen=task.gen)
         if self._chunked:
             d = self.decode_workers[s.decode_worker]
             batch = []
@@ -187,6 +213,7 @@ class ServingRuntime:
             task.routed_to = f"remote:{w.idx}"
             w.prefill_queue.append(task)
             self._kick(w)
+            self._steal_scan()          # drained peers may relieve w
 
     # -- worker advance: prefill first (priority), else decode --------------
     def _kick(self, w) -> None:
@@ -198,6 +225,9 @@ class ServingRuntime:
             s = self.sessions[task.session_id]
             if task.gen != s._rt_gen:       # superseded by a rebind
                 continue
+            # chunk-boundary preemption accounting: queued remainders with
+            # more slack than the chosen chunk just got parked (§12)
+            self.coordinator.note_parked(w, task, self.now)
             d = self.decode_workers[s.decode_worker]
             if w.kind == "decode" and self._chunked:
                 # chunked mode: piggyback the decode batch on the chunk —
@@ -217,6 +247,7 @@ class ServingRuntime:
                             self._on_fused_done(w, task, payload, batch,
                                                 toks),
                         "fused-step")
+                    self._post_launch(w, task)
                     return
             extra = 0.0
             if w.kind == "prefill":
@@ -232,9 +263,57 @@ class ServingRuntime:
                 lambda w=w, task=task, payload=payload:
                     self._on_prefill_done(w, task, payload),
                 "prefill-done")
+            self._post_launch(w, task)
             return
         if w.kind == "decode":
             self._run_decode(w)
+        elif self._try_steal(w):
+            self._kick(w)               # run the stolen chunk immediately
+
+    def _post_launch(self, w, task: PrefillTask) -> None:
+        """Work just started on ``w``: expose it to the steal planner, and
+        let a prefill worker whose queue fell below the watermark prefetch
+        backlog from a more loaded peer before it next idles (watermark 0 =
+        no prefetch; steal only on idle)."""
+        w._rt_running_task = task
+        st = self.coordinator.stealing
+        if (st is not None and w.kind == "prefill"
+                and len(w.prefill_queue) < st.watermark):
+            self._try_steal(w)
+
+    # -- cross-worker work stealing (§12) -----------------------------------
+    def _try_steal(self, w) -> bool:
+        """Migrate the most profitable queued chunk from the most backlogged
+        prefill worker onto ``w``.  Only net-positive moves happen — the
+        Coordinator charges the KV-locality penalty before accepting."""
+        if (self.coordinator.stealing is None or w.kind != "prefill"
+                or not w.alive):
+            return False
+        plan = self.coordinator.plan_steal(
+            w, self.prefill_workers, self.now, self.sessions,
+            self.decode_workers)
+        if plan is None:
+            return False
+        victim, task = plan
+        victim.prefill_queue.remove(task)
+        s = self.sessions[task.session_id]
+        self.backend.on_steal(task, s, victim, w)
+        task.enqueue_time = self.now    # lazy-read prefetch restarts here
+        task.routed_to = f"remote:{w.idx}"
+        w.prefill_queue.append(task)
+        return True
+
+    def _steal_scan(self) -> None:
+        """A queue just grew: give every drained prefill worker a chance to
+        steal (an idle worker is not otherwise re-kicked by enqueues that
+        land elsewhere)."""
+        st = self.coordinator.stealing
+        if st is None:
+            return
+        for w in self.prefill_workers:
+            if (w.alive and not w._running
+                    and len(w.prefill_queue) <= st.watermark):
+                self._kick(w)           # drains queue, then tries stealing
 
     def _hist_to_read(self, w, task: PrefillTask, s) -> int:
         """History KV the worker must lazily pull before this chunk: none if
@@ -247,6 +326,7 @@ class ServingRuntime:
     # -- prefill completion, write-back, decode join (§3 step 3) ------------
     def _on_prefill_done(self, w, task: PrefillTask, payload) -> None:
         w._running = False
+        w._rt_running_task = None
         w.tasks_done += 1
         s = self.sessions[task.session_id]
         if task.gen != s._rt_gen:
@@ -338,6 +418,7 @@ class ServingRuntime:
         """A fused chunk+decode step ended: settle the decode tokens, then
         land the chunk (local write-back is free)."""
         d._running = False
+        d._rt_running_task = None
         d.tasks_done += 1
         s = self.sessions[task.session_id]
         if not d.alive:

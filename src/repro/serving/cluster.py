@@ -26,6 +26,7 @@ from repro.runtime import (
     Coordinator,
     LiveBackend,
     ServingRuntime,
+    StealingConfig,
     mean,
     p95,
 )
@@ -50,6 +51,9 @@ class LiveResult:
     kv_bytes_moved: int
     logical_time: float
     wall_time: float
+    steals: int = 0               # §12 counters (0 when stealing disabled)
+    preempts: int = 0
+    kv_steal_bytes: int = 0       # history re-read payload from steals
 
 
 class LiveCluster:
@@ -59,7 +63,9 @@ class LiveCluster:
                  seed: int = 0, model_kv_time: bool = False,
                  profile: bool = True, chunk_tokens: int = 0,
                  adaptive_chunk: bool = False, chunk_headroom: float = 0.85,
-                 decode_chunk_tokens: Sequence[int] = ()):
+                 decode_chunk_tokens: Sequence[int] = (),
+                 work_stealing: bool = False, steal_watermark: int = 0,
+                 steal_min_profit_s: float = 0.0, preemption: bool = True):
         self.cfg = cfg
         self.slo = slo or SLOSpec(ttft_thres=2.0, itl_thres=0.2)
         key = __import__("jax").random.PRNGKey(seed)
@@ -97,11 +103,16 @@ class LiveCluster:
             # (fused coefficients re-derive from the measured fits above)
             tuner = ChunkTuner(self.perf, itl_slo=self.slo.itl_thres,
                                headroom=chunk_headroom)
+        stealing = (StealingConfig(watermark=steal_watermark,
+                                   min_profit_s=steal_min_profit_s,
+                                   preemption=preemption)
+                    if work_stealing else None)
         self.coordinator = Coordinator(
             perf=self.perf,
             routing=RoutingConfig(ttft_thres=self.slo.ttft_thres,
                                   itl_thres=self.slo.itl_thres),
-            scheduler=scheduler, seed=seed, chunk_tuner=tuner)
+            scheduler=scheduler, seed=seed, chunk_tuner=tuner,
+            stealing=stealing)
         self.runtime = ServingRuntime(
             LiveBackend(self.perf, model_kv_time=model_kv_time),
             self.coordinator, self.prefill_workers, self.decode_workers,
@@ -160,6 +171,10 @@ class LiveCluster:
             kv_bytes_moved=sum(w.kv_bytes_moved for w in self.prefill_workers),
             logical_time=self.now,
             wall_time=wall,
+            steals=self.coordinator.sched.steals,
+            preempts=self.coordinator.sched.preempts,
+            kv_steal_bytes=getattr(self.runtime.backend,
+                                   "kv_steal_bytes", 0),
         )
 
 

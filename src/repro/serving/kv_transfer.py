@@ -103,6 +103,24 @@ def transfer_bytes(tree: Cache) -> int:
                for x in jax.tree.leaves(tree))
 
 
+def steal_handoff(cfg: ModelConfig, task, session, src_worker,
+                  dst_worker) -> int:
+    """Byte accounting for a QUEUED prefill task migrating between prefill
+    workers (work stealing, DESIGN.md §12).
+
+    Nothing materialized moves at steal time — the canonical KV lives on
+    the session's bound decode worker and is lazily pulled where the chunk
+    actually runs (``extract_range`` at execution); chunk-chain affinity
+    invalidation is owned by ``ExecutionBackend.on_steal`` (one copy for
+    both backends).  This returns the history payload in bytes the thief
+    will now re-read from the decode worker — the KV-locality penalty the
+    Coordinator charged when it accepted the steal.
+    """
+    if task.l_hist <= 0:
+        return 0
+    return cfg.session_state_bytes(task.l_hist)
+
+
 def reshard(tree: Cache, target_shardings=None) -> Cache:
     """Move a cache tree to another worker's device layout.
 

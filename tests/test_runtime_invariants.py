@@ -1,0 +1,215 @@
+"""Property-based runtime conservation suite (DESIGN.md §12).
+
+Under random interleavings of arrivals, worker failures, stragglers,
+chunking, cross-worker stealing and SLO-priority preemption, the unified
+runtime must conserve its protocol invariants:
+
+  * every routed chunk completes (joins the decode worker) EXACTLY once —
+    stealing moves queue entries, it never duplicates or drops them;
+  * every decode worker's ``mem_tokens`` returns to 0 once the trace
+    drains (dead workers are zeroed by the failure handler);
+  * no session's rounds ever reorder: final-chunk joins advance round
+    indices strictly within a rebind generation (a rebind may legitimately
+    replay the in-flight round);
+  * sessions are only dropped when a decode failure was injected.
+
+Runs against BOTH backends: the modeled backend under the property
+harness (hypothesis when installed, a seeded fallback sweep otherwise —
+CI installs hypothesis, the sandbox image may not), and the live JAX
+backend over a small seed sweep with real engines.
+"""
+import random
+from collections import Counter, defaultdict
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    Deployment,
+    PerfModel,
+    SimConfig,
+    Simulation,
+    SLOSpec,
+    WorkerGroup,
+)
+from repro.core.routing import RoutingConfig
+from repro.runtime import LiveBackend, ModeledBackend
+from repro.workloads import make_trace
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:          # image without hypothesis: seeded sweep
+    HAVE_HYPOTHESIS = False
+
+N_EXAMPLES = 15
+
+
+def property_seeds(fn):
+    """Drive ``fn(seed)`` by hypothesis when available, else a fixed
+    seed sweep — the case generator is seeded either way, so every
+    hypothesis failure reproduces from its printed seed."""
+    if HAVE_HYPOTHESIS:
+        return settings(max_examples=N_EXAMPLES, deadline=None)(
+            given(seed=st.integers(0, 1_000_000))(fn))
+    return pytest.mark.parametrize("seed", range(N_EXAMPLES))(fn)
+
+
+# ---------------------------------------------------------------------------
+# Audit backends: count joins without touching protocol behaviour
+# ---------------------------------------------------------------------------
+
+class _AuditMixin:
+    def audit_init(self):
+        self.join_counts = Counter()      # (sid, gen, round, offset) -> n
+        self.final_joins = defaultdict(list)   # sid -> [(gen, round_idx)]
+
+    def on_join(self, decode_worker, session, task, payload):
+        self.join_counts[(task.session_id, task.gen, task.round_idx,
+                          task.incr_offset)] += 1
+        if task.is_final_chunk:
+            self.final_joins[task.session_id].append(
+                (task.gen, task.round_idx))
+        super().on_join(decode_worker, session, task, payload)
+
+
+class AuditModeledBackend(_AuditMixin, ModeledBackend):
+    pass
+
+
+class AuditLiveBackend(_AuditMixin, LiveBackend):
+    pass
+
+
+def assert_invariants(runtime, audit, sessions, decode_workers,
+                      decode_failure_injected: bool):
+    dropped = [s for s in sessions if getattr(s, "state", "") == "dropped"]
+    finished = [s for s in sessions if s.finish_time is not None]
+    # exactly-once completion: no chunk ever joins twice
+    dup = {k: n for k, n in audit.join_counts.items() if n != 1}
+    assert not dup, f"chunks joined more than once: {dup}"
+    # conservation: everything not dropped ran to completion in full
+    assert len(finished) + len(dropped) == len(sessions)
+    if not decode_failure_injected:
+        assert not dropped
+    for s in finished:
+        covered = {r for _, r in audit.final_joins[s.session_id]}
+        assert covered == set(range(s.num_rounds)), s.session_id
+        if decode_failure_injected:
+            # a rebind legitimately replays the in-flight round (extra
+            # TTFT sample) and restarts its decode (extra ITL samples)
+            assert len(s.ttfts) >= s.num_rounds, s.session_id
+            assert len(s.itls) >= sum(r.decode_len for r in s.rounds)
+        else:
+            assert len(s.ttfts) == s.num_rounds, s.session_id
+            assert len(s.itls) == sum(r.decode_len for r in s.rounds)
+    # memory conservation at drain (dead workers zeroed by the handler)
+    for d in decode_workers:
+        assert d.mem_tokens == 0, (d.idx, d.alive, d.mem_tokens)
+    # round ordering: within a generation rounds advance strictly; a new
+    # generation (rebind) may replay the round that was in flight
+    for sid, seq in audit.final_joins.items():
+        for (g0, r0), (g1, r1) in zip(seq, seq[1:]):
+            assert g1 >= g0, (sid, seq)
+            if g1 == g0:
+                assert r1 == r0 + 1, (sid, seq)
+            else:
+                assert r1 >= r0, (sid, seq)
+    assert runtime.coordinator.sched.steals >= 0
+    assert runtime.coordinator.sched.preempts >= 0
+
+
+# ---------------------------------------------------------------------------
+# Modeled backend under random interleavings
+# ---------------------------------------------------------------------------
+
+def _modeled_case(rng: random.Random) -> dict:
+    n_pre = rng.randint(1, 3)
+    n_dec = rng.randint(1, 3)
+    chunk = rng.choice([0, 64, 256])
+    failures = []
+    kill_all_decode = n_dec >= 2 and rng.random() < 0.15
+    if kill_all_decode:
+        for i in range(n_dec):
+            failures.append((rng.uniform(2.0, 25.0), "decode", i))
+    elif n_dec > 1 and rng.random() < 0.6:
+        failures.append((rng.uniform(2.0, 25.0), "decode",
+                         rng.randrange(n_dec)))
+    if n_pre > 1 and rng.random() < 0.5:
+        failures.append((rng.uniform(2.0, 25.0), "prefill",
+                         rng.randrange(n_pre)))
+    straggler = {}
+    if rng.random() < 0.5:
+        straggler[("prefill", rng.randrange(n_pre))] = rng.uniform(0.3, 0.8)
+    return dict(
+        n_pre=n_pre, n_dec=n_dec,
+        trace=rng.choice(["hotpotqa", "toolbench"]),
+        num_sessions=rng.randint(6, 16),
+        rate=rng.uniform(0.5, 3.0),
+        chunk=chunk,
+        scheduler="ampd-chunked" if chunk else rng.choice(
+            ["ampd", "ampd-chunked"]),
+        preemption=rng.random() < 0.7,
+        watermark=rng.randint(0, 1),
+        failures=failures,
+        straggler=straggler,
+        decode_failure=any(k == "decode" for _, k, _i in failures),
+    )
+
+
+@property_seeds
+def test_modeled_conservation_under_interleavings(seed):
+    case = _modeled_case(random.Random(seed))
+    perf = PerfModel(get_config("qwen3-32b"))
+    dep = Deployment((WorkerGroup(2, case["n_pre"]),),
+                     (WorkerGroup(2, case["n_dec"]),))
+    slo = SLOSpec(ttft_thres=3.0, itl_thres=0.15)
+    ss = make_trace(case["trace"], num_sessions=case["num_sessions"],
+                    arrival_rate=case["rate"], seed=seed)
+    cfg = SimConfig(scheduler=case["scheduler"],
+                    chunk_tokens=case["chunk"], seed=seed,
+                    work_stealing=True, steal_watermark=case["watermark"],
+                    preemption=case["preemption"],
+                    routing=RoutingConfig(ttft_thres=slo.ttft_thres,
+                                          itl_thres=slo.itl_thres))
+    sim = Simulation(perf, dep, ss, slo, cfg, failures=case["failures"],
+                     straggler=case["straggler"])
+    audit = AuditModeledBackend(perf, kv_overlap=True)
+    audit.audit_init()
+    sim.runtime.backend = audit
+    sim.run()
+    assert_invariants(sim.runtime, audit, ss, sim.decode_workers,
+                      case["decode_failure"])
+
+
+# ---------------------------------------------------------------------------
+# Live backend (real reduced-config JAX engines), seeded interleavings
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def live_cfg():
+    return get_config("qwen2.5-14b").reduced()
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_live_conservation_under_interleavings(seed, live_cfg):
+    from repro.serving import LiveCluster, make_live_sessions
+    rng = random.Random(seed)
+    chunk = rng.choice([0, 8])
+    cl = LiveCluster(live_cfg, n_prefill=2, n_decode=2, max_slots=4,
+                     max_len=128, scheduler="ampd",
+                     slo=SLOSpec(10.0, 10.0), seed=seed, profile=False,
+                     chunk_tokens=chunk, work_stealing=True,
+                     steal_watermark=rng.randint(0, 1))
+    audit = AuditLiveBackend(cl.perf, model_kv_time=False)
+    audit.audit_init()
+    cl.runtime.backend = audit
+    sessions = make_live_sessions(
+        live_cfg, num_sessions=3, rounds=rng.randint(1, 2),
+        prefill_len=16, decode_len=3, arrival_gap=1e-4, seed=seed)
+    decode_failure = rng.random() < 0.7
+    if decode_failure:
+        cl.fail_worker("decode", rng.randrange(2), at=rng.uniform(0.0, 0.5))
+    cl.run_trace(sessions)
+    assert_invariants(cl.runtime, audit, sessions, cl.decode_workers,
+                      decode_failure)

@@ -4,9 +4,11 @@ simulator and the live cluster (DESIGN.md §2).
 Covers (a) fault-tolerance accounting — after decode-worker failure +
 rebind every non-dropped session finishes, recoveries/rebinds are counted,
 and each decode worker's ``mem_tokens`` returns to 0 once its sessions
-detach; (b) modeled/live backend parity — identical routing decisions on a
-fixed trace and seed, since both paths now share one Coordinator; and
-(c) chunked incremental prefill in both backends."""
+detach; (b) modeled/live backend parity — identical decision logs (route,
+steal AND preempt events) on a fixed trace and seed, since both paths now
+share one Coordinator; (c) chunked incremental prefill in both backends;
+and (d) binding edge cases — all decode workers dead raises a clear error
+at the Coordinator, and the runtime drops (not crashes) arrivals."""
 import pytest
 
 from repro.configs import get_config
@@ -20,7 +22,9 @@ from repro.core import (
     simulate_deployment,
 )
 from repro.core.routing import RoutingConfig
+from repro.core.simulator import SimWorker
 from repro.core.types import RoundSpec, Session
+from repro.runtime import Coordinator
 from repro.workloads import make_trace
 
 DEP = Deployment((WorkerGroup(4, 2),), (WorkerGroup(4, 2),))
@@ -129,7 +133,54 @@ def test_chunked_failure_recovery():
 
 
 # ---------------------------------------------------------------------------
-# (c) live backend: accounting + parity (reduced real-JAX engines)
+# (c) binding edge cases (Coordinator.bind regression)
+# ---------------------------------------------------------------------------
+
+def _session(sid=0, at=0.0, prefill=8, decode=1):
+    return Session(session_id=sid, arrival_time=at,
+                   rounds=[RoundSpec(prefill_len=prefill, decode_len=decode,
+                                     env_delay=0.0)])
+
+
+def test_bind_all_dead_raises_clear_error():
+    """Every decode worker dead used to surface as ``min([]) -> ValueError``
+    deep in the key function; it must name the condition instead."""
+    co = Coordinator(perf=_perf(), routing=RoutingConfig())
+    workers = [SimWorker(i, 4, "decode") for i in range(3)]
+    for w in workers:
+        w.alive = False
+    with pytest.raises(RuntimeError, match="decode workers are dead"):
+        co.bind(_session(), workers)
+
+
+def test_bind_rebinds_onto_survivor_after_failure():
+    co = Coordinator(perf=_perf(), routing=RoutingConfig())
+    workers = [SimWorker(0, 4, "decode"), SimWorker(1, 4, "decode")]
+    s = _session()
+    assert co.bind(s, workers).idx == 0        # least loaded
+    workers[0].alive = False
+    workers[1].mem_tokens = 10_000             # loaded but the only survivor
+    assert co.bind(s, workers).idx == 1
+    assert s.decode_worker == 1
+
+
+def test_runtime_drops_sessions_when_all_decode_dead():
+    """The runtime guards bind(): with every decode worker dead, in-flight
+    sessions drop (state, not a crash) and accounting still zeroes out."""
+    ss = [_session(sid, at=0.2 * sid, prefill=64, decode=8)
+          for sid in range(6)]
+    sim = Simulation(_perf(), DEP, ss, SLO, SimConfig(scheduler="ampd"),
+                     failures=[(0.5, "decode", 0), (0.5, "decode", 1)])
+    r = sim.run()
+    dropped = [s for s in ss if s.state == "dropped"]
+    assert dropped, "expected drops once every decode worker died"
+    assert all(s.finish_time is not None or s.state == "dropped"
+               for s in r.sessions)
+    assert all(d.mem_tokens == 0 for d in sim.decode_workers)
+
+
+# ---------------------------------------------------------------------------
+# (d) live backend: accounting + parity (reduced real-JAX engines)
 # ---------------------------------------------------------------------------
 
 @pytest.fixture(scope="module")
@@ -227,3 +278,91 @@ def test_backend_routing_parity(live_cfg):
 
     assert len(cl.coordinator.decision_log) == rounds
     assert sim.coordinator.decision_log == cl.coordinator.decision_log
+
+
+def test_backend_steal_event_parity(live_cfg):
+    """Contract parity for the ``steal`` event kind: with work stealing on,
+    two sessions whose prefills the seeded router stacks onto one worker
+    trigger the SAME migration — identical decision logs (routes + steal)
+    in both backends, because steal planning prices from the shared
+    PerfModel and never consults measured durations."""
+    from repro.serving import make_live_sessions
+    # arrival gap far below the modeled dispatch floor (alpha = 2 ms) so the
+    # second arrival lands while the first prefill runs in BOTH backends
+    gap, pf, dc = 1e-4, 16, 2
+
+    cl = _live_cluster(live_cfg, n_prefill=2, work_stealing=True)
+    cl.coordinator.record_decisions = True
+    live_sessions = make_live_sessions(live_cfg, num_sessions=2, rounds=1,
+                                       prefill_len=pf, decode_len=dc,
+                                       arrival_gap=gap)
+    cl.run_trace(live_sessions)
+
+    model_sessions = [Session(
+        session_id=i, arrival_time=i * gap,
+        rounds=[RoundSpec(prefill_len=pf, decode_len=dc, env_delay=0.0)])
+        for i in range(2)]
+    dep = Deployment((WorkerGroup(1, 2),), (WorkerGroup(1, 1),))
+    sim = Simulation(PerfModel(live_cfg), dep, model_sessions,
+                     SLOSpec(10.0, 10.0),
+                     SimConfig(scheduler="ampd", seed=0, work_stealing=True,
+                               routing=RoutingConfig(ttft_thres=10.0,
+                                                     itl_thres=10.0)))
+    sim.coordinator.record_decisions = True
+    sim.run()
+
+    # seed 0 stacks both prefills on worker 0; the idle peer steals one
+    assert any(k[3] == "steal" for k in sim.coordinator.decision_log)
+    assert sim.coordinator.decision_log == cl.coordinator.decision_log
+    assert (sim.coordinator.sched.steals
+            == cl.coordinator.sched.steals == 1)
+    assert all(s.finish_time is not None for s in live_sessions)
+
+
+def test_backend_preempt_event_parity(live_cfg):
+    """Contract parity for the ``preempt`` event kind: a long chunked
+    session's parked remainder is overtaken by two later tight arrivals at
+    a chunk boundary — the laxity comparison (arrival minus PerfModel
+    service estimate; ``now`` cancels) is identical in both backends, so
+    the preempt fires at the same queue position with the same log entry."""
+    import numpy as np
+    from repro.serving import LiveCluster
+    from repro.serving.workers import LiveSession
+    chunk = 32
+    # (sid, arrival, prefill_len): A = chunk + 8 splits; B and C are whole
+    # chunks whose laxity is lower than A's small remainder
+    specs = [(0, 0.0, chunk + 8), (1, 1e-9, chunk), (2, 2e-9, chunk)]
+
+    cl = LiveCluster(live_cfg, n_prefill=0, n_decode=1, max_slots=4,
+                     max_len=128, scheduler="vllm", slo=SLOSpec(10.0, 10.0),
+                     seed=0, profile=False, chunk_tokens=chunk,
+                     work_stealing=True)
+    cl.coordinator.record_decisions = True
+    rng = np.random.default_rng(0)
+    live_sessions = [LiveSession(
+        session_id=sid, arrival_time=at,
+        rounds=[RoundSpec(prefill_len=n, decode_len=2, env_delay=0.0)],
+        prompt_tokens=[rng.integers(0, live_cfg.vocab_size, n)
+                       .astype(np.int32)])
+        for sid, at, n in specs]
+    cl.run_trace(live_sessions)
+
+    model_sessions = [Session(
+        session_id=sid, arrival_time=at,
+        rounds=[RoundSpec(prefill_len=n, decode_len=2, env_delay=0.0)])
+        for sid, at, n in specs]
+    dep = Deployment((), (WorkerGroup(1, 1),))
+    sim = Simulation(PerfModel(live_cfg), dep, model_sessions,
+                     SLOSpec(10.0, 10.0),
+                     SimConfig(scheduler="vllm", seed=0, chunk_tokens=chunk,
+                               work_stealing=True,
+                               routing=RoutingConfig(ttft_thres=10.0,
+                                                     itl_thres=10.0)))
+    sim.coordinator.record_decisions = True
+    sim.run()
+
+    assert any(k[3] == "preempt" for k in sim.coordinator.decision_log)
+    assert sim.coordinator.decision_log == cl.coordinator.decision_log
+    assert (sim.coordinator.sched.preempts
+            == cl.coordinator.sched.preempts == 1)
+    assert all(s.finish_time is not None for s in live_sessions)
