@@ -1,0 +1,114 @@
+"""Fig. 12 (beyond-paper): measured KV-transfer cost — in-process copies vs
+real per-worker OS processes over the RPC path (DESIGN.md §13).
+
+DistServe (arXiv:2401.09670) and NVIDIA's disaggregation study
+(arXiv:2506.05508) both argue that PD-disaggregation conclusions stand or
+fall on *measured* inter-instance KV-transfer behaviour.  The in-process
+live cluster can only model it; ``LiveCluster(transport="proc")`` moves the
+actual cache bytes between worker processes and measures the wall time on
+the :class:`~repro.serving.kv_transfer.TransportKVPath`.
+
+This benchmark replays the SAME small GAIA-shaped slice (reduced model,
+lengths clipped to the CPU engine's window) through both transports under
+pure disaggregation (``dynamo`` routing — every increment crosses the
+prefill/decode boundary) and reports per-transport: completed sessions,
+measured KV bytes + milliseconds, bytes/transfer, effective bandwidth, and
+latency stats.  The ``--smoke`` gate in ``benchmarks/run.py`` asserts the
+proc transport completes the trace and reports NONZERO measured kv_ms.
+"""
+import math
+
+import benchmarks.common  # noqa: F401  (sys.path side effect for src/)
+from repro.configs import get_config
+from repro.core.types import SLOSpec
+from repro.workloads import make_trace
+
+
+def live_sessions_from_trace(cfg, *, trace="gaia", num_sessions=3,
+                             arrival_rate=2.0, seed=0, max_prefill=48,
+                             max_decode=4, max_rounds=2, max_len=128):
+    """Clip a synthetic trace to CPU-engine scale, keeping its shape: GAIA's
+    long-increment multi-round structure at ~1/128 length."""
+    import numpy as np
+    from repro.serving.workers import LiveSession
+    from repro.core.types import RoundSpec
+
+    rng = np.random.default_rng(seed)
+    out = []
+    for s in make_trace(trace, num_sessions=num_sessions,
+                        arrival_rate=arrival_rate, seed=seed):
+        rounds, total = [], 0
+        for r in s.rounds[:max_rounds]:
+            pf = max(8, min(r.prefill_len // 128, max_prefill))
+            if total + pf + max_decode + 8 > max_len:
+                break
+            total += pf + max_decode
+            rounds.append(RoundSpec(prefill_len=pf, decode_len=max_decode,
+                                    env_delay=0.0))
+        if not rounds:
+            rounds = [RoundSpec(prefill_len=8, decode_len=max_decode,
+                                env_delay=0.0)]
+        prompts = [rng.integers(0, cfg.vocab_size, r.prefill_len)
+                   .astype(np.int32) for r in rounds]
+        out.append(LiveSession(session_id=s.session_id,
+                               arrival_time=s.arrival_time,
+                               rounds=rounds, prompt_tokens=prompts))
+    return out
+
+
+def _run_one(cfg, transport, sessions, *, n_prefill, n_decode, seed):
+    from repro.serving import LiveCluster
+    cl = LiveCluster(cfg, n_prefill=n_prefill, n_decode=n_decode,
+                     max_slots=4, max_len=128, scheduler="dynamo",
+                     slo=SLOSpec(10.0, 10.0), seed=seed, profile=False,
+                     transport=transport)
+    try:
+        r = cl.run_trace(sessions)
+        completed = sum(1 for s in sessions if s.finish_time is not None)
+        kv_mib = r.kv_transfer_bytes / 2**20
+        return {
+            "transport": transport,
+            "arrived": len(sessions),
+            "completed": completed,
+            "kv_bytes": r.kv_transfer_bytes,
+            "kv_ms": round(r.kv_transfer_ms, 2),
+            "kv_transfers": r.kv_transfers,
+            "bytes_per_transfer": (r.kv_transfer_bytes
+                                   // max(r.kv_transfers, 1)),
+            "kv_MiB_per_s": (round(kv_mib / (r.kv_transfer_ms / 1e3), 2)
+                             if r.kv_transfer_ms > 0 else math.inf),
+            "prefill_kv_bytes": r.kv_bytes_moved,
+            "avg_ttft_ms": round(r.avg_ttft * 1e3, 1),
+            "avg_itl_ms": round(r.avg_itl * 1e3, 1),
+            "wall_s": round(r.wall_time, 2),
+        }
+    finally:
+        cl.close()
+
+
+def run(model="qwen2.5-14b", num_sessions=3, n_prefill=1, n_decode=1,
+        seed=0, transports=("inproc", "proc")):
+    cfg = get_config(model).reduced()
+    rows = []
+    for transport in transports:
+        # fresh sessions per arm: runs mutate session state
+        sessions = live_sessions_from_trace(cfg, num_sessions=num_sessions,
+                                            seed=seed)
+        rows.append(_run_one(cfg, transport, sessions, n_prefill=n_prefill,
+                             n_decode=n_decode, seed=seed))
+    return rows
+
+
+def main():
+    rows = run()
+    cols = ["transport", "arrived", "completed", "kv_bytes", "kv_ms",
+            "kv_transfers", "bytes_per_transfer", "kv_MiB_per_s",
+            "avg_ttft_ms", "avg_itl_ms", "wall_s"]
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

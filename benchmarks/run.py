@@ -105,6 +105,28 @@ def smoke(json_path=None) -> int:
            f"p95_ttft {off['p95_ttft_s']}s->{on['p95_ttft_s']}s "
            f"steals={on['steals']}")
 
+    _section("smoke: Fig. 12 multi-process transport (measured KV path)")
+    from benchmarks import fig12_transport
+    t0 = time.time()
+    try:
+        rows = fig12_transport.run(num_sessions=2)
+    except Exception as e:  # noqa: BLE001 — spawn failure is a gate failure
+        rows = []
+        failures.append(f"fig12 proc transport did not run: {e!r}")
+    proc = next((r for r in rows if r["transport"] == "proc"), None)
+    if proc is not None:
+        if proc["completed"] != proc["arrived"]:
+            failures.append(
+                f"fig12 proc transport lost work "
+                f"({proc['completed']}/{proc['arrived']} completed)")
+        if not proc["kv_ms"] > 0 or not proc["kv_bytes"] > 0:
+            failures.append(
+                "fig12 proc transport reported no measured KV transfer "
+                f"(kv_ms={proc['kv_ms']}, kv_bytes={proc['kv_bytes']})")
+    record("fig12_transport", t0, rows,
+           (f"proc kv={proc['kv_bytes']}B/{proc['kv_ms']}ms"
+            if proc else "unavailable"))
+
     _section("smoke: Fig. 10 joint vs two-stage planning")
     from benchmarks import fig10_joint_plan
     t0 = time.time()
@@ -215,6 +237,18 @@ def main() -> None:
     on = next(r for r in rows if r["arm"] == "stealing")
     record("fig11_stealing", t0,
            f"p95_ttft_gain={(1 - on['p95_ttft_s'] / off['p95_ttft_s']):+.1%}")
+
+    _section("Fig. 12: multi-process transport, measured KV path (beyond-paper)")
+    from benchmarks import fig12_transport
+    t0 = time.time()
+    try:
+        rows = fig12_transport.main()
+        proc = next(r for r in rows if r["transport"] == "proc")
+        record("fig12_transport", t0,
+               f"kv={proc['kv_bytes']}B in {proc['kv_ms']}ms "
+               f"over {proc['kv_transfers']} transfers")
+    except Exception as e:  # noqa: BLE001
+        record("fig12_transport", t0, f"skipped ({e})")
 
     _section("Fault tolerance / stragglers (beyond-paper)")
     from benchmarks import fault_tolerance

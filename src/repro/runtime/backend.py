@@ -25,6 +25,19 @@ from repro.core.types import PrefillTask
 PrefillPayload = Tuple[str, Optional[Dict], Optional[int]]
 
 
+class WorkerDiedError(RuntimeError):
+    """A live RPC to a worker process failed because the process is gone
+    (SIGKILL'd, crashed, or hung past the deadline) — raised by the proc
+    transport (``repro.serving.rpc``) and converted by the ServingRuntime
+    into the standard worker-failure path (DESIGN.md §13).  ``kind``/``idx``
+    identify the dead worker by its stable id."""
+
+    def __init__(self, kind: str, idx: int, msg: str = ""):
+        super().__init__(f"{kind} worker {idx} died: {msg}")
+        self.kind = kind
+        self.idx = idx
+
+
 class ExecutionBackend:
     """Duck-typed interface; both implementations below are the spec."""
 
@@ -205,10 +218,10 @@ class LiveBackend(ExecutionBackend):
         return len(session.prompt_tokens[round_idx])
 
     def on_steal(self, task, session, src_worker, dst_worker) -> None:
-        from repro.serving.kv_transfer import steal_handoff
         super().on_steal(task, session, src_worker, dst_worker)
-        self.kv_steal_bytes += steal_handoff(
-            dst_worker.engine.cfg, task, session, src_worker, dst_worker)
+        # workers own the handoff accounting so the proc transport can run
+        # it inside the thief's process (same engine-adjacent code path)
+        self.kv_steal_bytes += dst_worker.steal_handoff(task, session)
 
     def admit_local(self, decode_worker, session) -> bool:
         if session.slot is None:

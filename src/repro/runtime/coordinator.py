@@ -250,7 +250,10 @@ class Coordinator:
                 move_read = 0.0
                 if (k.l_hist > 0 and getattr(s, "_rt_chain_worker", None)
                         != ("prefill", thief.idx)):
-                    d = decode_workers[s.decode_worker]
+                    # stable-id lookup: decode_worker is an id, NOT a list
+                    # position (clusters may add/kill workers mid-run)
+                    d = next(w for w in decode_workers
+                             if w.idx == s.decode_worker)
                     move_read = self.perf.t_kv(k.l_hist, d.tp, thief.tp)
                 move = t_self + move_read + self.perf.t_pre(
                     k.l_hist, k.l_incr, thief.tp, thief.speed)

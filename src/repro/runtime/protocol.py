@@ -48,7 +48,7 @@ from __future__ import annotations
 from typing import Callable, Dict, List, Optional
 
 from repro.core.types import PrefillTask
-from repro.runtime.backend import ExecutionBackend
+from repro.runtime.backend import ExecutionBackend, WorkerDiedError
 from repro.runtime.coordinator import Coordinator
 from repro.runtime.events import EventLoop
 
@@ -83,6 +83,22 @@ class ServingRuntime:
     @property
     def now(self) -> float:
         return self.events.now
+
+    def worker_by_id(self, kind: str, idx: int):
+        """Resolve a worker by its STABLE id, never by list position —
+        clusters that add/kill workers mid-run must not cross wires."""
+        ws = self.prefill_workers if kind == "prefill" else self.decode_workers
+        for w in ws:
+            if w.idx == idx:
+                return w
+        return None
+
+    def _bound_decode(self, s):
+        d = self.worker_by_id("decode", s.decode_worker)
+        assert d is not None, (
+            f"session {s.session_id} bound to unknown decode worker "
+            f"{s.decode_worker}")
+        return d
 
     def _init_worker(self, w) -> None:
         w._running = False
@@ -157,7 +173,7 @@ class ServingRuntime:
                 incr_offset=task.incr_offset,
                 is_final_chunk=rest.is_final_chunk, gen=task.gen)
         if self._chunked:
-            d = self.decode_workers[s.decode_worker]
+            d = self._bound_decode(s)
             batch = []
             if self.coordinator.chunk_tuner is not None:
                 # only the tuner reads the current decoding batch
@@ -186,7 +202,7 @@ class ServingRuntime:
         return first, rest
 
     def _route_one(self, s, task: PrefillTask) -> None:
-        d = self.decode_workers[s.decode_worker]
+        d = self._bound_decode(s)
         if not d.alive:
             self._rebind(s, task)
             return
@@ -196,7 +212,12 @@ class ServingRuntime:
         task.enqueue_time = self.now
         s.state = "prefill_wait"
         if dec.kind == "local":
-            if not self.backend.admit_local(d, s):
+            try:
+                admitted = self.backend.admit_local(d, s)
+            except WorkerDiedError as e:
+                self._on_rpc_death(e, d, task, s)
+                return
+            if not admitted:
                 # admission backpressure: retry shortly (a slot frees when a
                 # resident session finishes)
                 self.events.after(
@@ -228,15 +249,19 @@ class ServingRuntime:
             # chunk-boundary preemption accounting: queued remainders with
             # more slack than the chosen chunk just got parked (§12)
             self.coordinator.note_parked(w, task, self.now)
-            d = self.decode_workers[s.decode_worker]
+            d = self._bound_decode(s)
             if w.kind == "decode" and self._chunked:
                 # chunked mode: piggyback the decode batch on the chunk —
                 # one fused step advances both (bounded interference)
                 batch = [b for b in self.backend.attached(w)
                          if getattr(b, "state", "") == "decoding"]
                 if batch:
-                    dur, payload, toks = self.backend.run_fused_prefill(
-                        w, task, s, batch)
+                    try:
+                        dur, payload, toks = self.backend.run_fused_prefill(
+                            w, task, s, batch)
+                    except WorkerDiedError as e:
+                        self._on_rpc_death(e, w, task, s)
+                        return
                     w._running = True
                     w.util_busy_s += dur
                     s._rt_chain_worker = (w.kind, w.idx)
@@ -250,11 +275,15 @@ class ServingRuntime:
                     self._post_launch(w, task)
                     return
             extra = 0.0
-            if w.kind == "prefill":
-                waited = self.now - task.enqueue_time
-                extra = self.backend.history_read_extra(
-                    w, task, d, waited, self._hist_to_read(w, task, s))
-            dur, payload = self.backend.run_prefill(w, task, s, d)
+            try:
+                if w.kind == "prefill":
+                    waited = self.now - task.enqueue_time
+                    extra = self.backend.history_read_extra(
+                        w, task, d, waited, self._hist_to_read(w, task, s))
+                dur, payload = self.backend.run_prefill(w, task, s, d)
+            except WorkerDiedError as e:
+                self._on_rpc_death(e, w, task, s)
+                return
             w._running = True
             w.util_busy_s += dur + extra
             s._rt_chain_worker = (w.kind, w.idx)
@@ -332,7 +361,7 @@ class ServingRuntime:
         if task.gen != s._rt_gen:
             self._kick(w)
             return
-        d = self.decode_workers[s.decode_worker]
+        d = self._bound_decode(s)
         if not d.alive:
             self._rebind(s, task)
             self._kick(w)
@@ -345,7 +374,7 @@ class ServingRuntime:
     def _on_join(self, s, task: PrefillTask, payload, stat_worker) -> None:
         if task.gen != s._rt_gen:
             return
-        d = self.decode_workers[s.decode_worker]
+        d = self._bound_decode(s)
         if not d.alive:
             self._rebind(s, task)
             return
@@ -360,7 +389,12 @@ class ServingRuntime:
             return
         s.context_len = task.l_hist + task.l_incr
         d.mem_tokens += task.l_incr
-        self.backend.on_join(d, s, task, payload)
+        try:
+            self.backend.on_join(d, s, task, payload)
+        except WorkerDiedError as e:
+            d.mem_tokens -= task.l_incr     # the KV write-back never landed
+            self._on_rpc_death(e, d, task, s)
+            return
         if not task.is_final_chunk:
             rest, s._rt_rest = s._rt_rest, None
             self._dispatch(s, rest)     # re-derives the next chunk size
@@ -381,7 +415,12 @@ class ServingRuntime:
         if not batch:
             return
         d._running = True
-        dur, toks = self.backend.run_decode(d, batch)
+        try:
+            dur, toks = self.backend.run_decode(d, batch)
+        except WorkerDiedError as e:
+            d._running = False
+            self._on_rpc_death(e, d, None, None)
+            return
         d.util_busy_s += dur
         self.events.after(
             dur, lambda: self._on_step_end(d, batch, toks), "decode-step")
@@ -455,13 +494,22 @@ class ServingRuntime:
             enqueue_time=self.now, arrival_time=self.now, gen=s._rt_gen)
         self._dispatch(s, task)
 
-    # -- failures / recovery (§6) -------------------------------------------
-    def _on_failure(self, kind: str, idx: int) -> None:
-        ws = self.prefill_workers if kind == "prefill" else self.decode_workers
-        if idx >= len(ws):
+    # -- failures / recovery (§6 / §13) -------------------------------------
+    def _on_failure(self, kind: str, idx: int, inflight=None) -> None:
+        """``inflight``: an optional (session, task) pair that was mid-RPC
+        on the dying decode worker — it must be rebound WITH its task so
+        the un-joined suffix of the round's increment is re-prefilled (the
+        victim scan alone cannot know about it and would replay only the
+        transcript)."""
+        w = self.worker_by_id(kind, idx)     # stable id, never list position
+        if w is None or not w.alive:
             return
-        w = ws[idx]
         w.alive = False
+        # real failure injection under the proc transport: the worker
+        # process is SIGKILL'd — no flush, no goodbye (DESIGN.md §13).
+        kill = getattr(w, "kill", None)
+        if kill is not None:
+            kill()
         orphans = list(w.prefill_queue)
         w.prefill_queue.clear()
         if kind == "decode":
@@ -469,6 +517,12 @@ class ServingRuntime:
             self.backend.on_decode_failure(w)
             w.mem_tokens = 0
             handled = set()
+            if inflight is not None:
+                s, task = inflight
+                if (task.gen == s._rt_gen
+                        and s.state not in ("done", "dropped")):
+                    self._rebind(s, task)
+                    handled.add(s.session_id)
             for task in orphans:             # queued local prefills: the
                 s = self.sessions[task.session_id]   # increment is re-prefilled
                 if task.gen != s._rt_gen:
@@ -486,6 +540,35 @@ class ServingRuntime:
                 if task.gen != s._rt_gen:
                     continue
                 self._dispatch(s, task)
+
+    def _on_rpc_death(self, err: WorkerDiedError, w, task, s) -> None:
+        """A backend call failed mid-flight because a worker process died
+        under us (chaos SIGKILL outside the scheduled-failure path).
+
+        ``w`` is the worker we were driving; the DEAD worker is named by
+        ``err`` (it may instead be the bound decode worker contacted for a
+        history read or KV write-back).  Route through the standard
+        failure handler, handing it the in-flight task — already popped
+        from its queue, so the orphan scan cannot see it; if the dead
+        worker is the session's bound decode worker the handler rebinds
+        WITH the task (the un-joined increment suffix re-prefills), else
+        the chunk is re-routed here like an orphan."""
+        w._running = False
+        w._rt_running_task = None
+        gen = s._rt_gen if s is not None else None
+        inflight = None
+        if (err.kind == "decode" and s is not None and task is not None
+                and err.idx == s.decode_worker):
+            inflight = (s, task)
+        self._on_failure(err.kind, err.idx, inflight=inflight)
+        if s is not None and s.state not in ("done", "dropped") \
+                and task is not None and task.gen == gen == s._rt_gen:
+            # session not superseded by the failure handler (its bound
+            # decode worker survives): the executing prefill worker died —
+            # re-route the chunk exactly like an orphan
+            self._dispatch(s, task)
+        if w.alive and not w._running:
+            self._kick(w)               # continue the survivor's queue
 
     def _rebind(self, s, task: Optional[PrefillTask]) -> None:
         """Decode worker died: drop stale in-flight work, re-bind, and

@@ -1,4 +1,5 @@
 from repro.serving.cluster import LiveCluster, LiveResult, make_live_sessions  # noqa: F401
 from repro.serving.coordinator import Coordinator  # noqa: F401
 from repro.serving.engine import Engine, profile_engine  # noqa: F401
+from repro.serving.kv_transfer import TransportKVPath  # noqa: F401
 from repro.serving.workers import LiveDecodeWorker, LivePrefillWorker, LiveSession  # noqa: F401

@@ -1,5 +1,4 @@
-"""Live cluster driver: logically-parallel workers executing real JAX —
-live-backend facade over the unified runtime.
+"""Live cluster driver — live-backend facade over the unified runtime.
 
 The multi-round protocol (binding, adaptive routing, lazy history reads,
 incremental KV write-back, local prefill interference, chunked incremental
@@ -8,6 +7,17 @@ and elastic scaling) runs in ``repro.runtime.ServingRuntime`` — the same
 engine as the discrete-event simulator — with a :class:`LiveBackend` whose
 every duration is *measured* from the actual engine call rather than
 predicted: the CPU-scale twin of a TPU deployment.
+
+Two transports (DESIGN.md §13) behind one contract:
+
+  * ``transport="inproc"`` (default): workers execute logically in parallel
+    inside this process — cheap, CI-friendly, KV moves as device copies.
+  * ``transport="proc"``: every worker is a real OS process owning its own
+    JAX engine; KV bytes move over RPC sockets
+    (:class:`~repro.serving.kv_transfer.TransportKVPath` measures them) and
+    ``fail_worker`` delivers a real ``SIGKILL``.  Decision logs and token
+    accounting must match ``inproc`` on the same seeded trace — the parity
+    contract held by ``tests/test_multiproc_cluster.py``.
 """
 from __future__ import annotations
 
@@ -37,6 +47,8 @@ from repro.serving.workers import (
     LiveSession,
 )
 
+TRANSPORTS = ("inproc", "proc")
+
 
 @dataclass
 class LiveResult:
@@ -54,6 +66,10 @@ class LiveResult:
     steals: int = 0               # §12 counters (0 when stealing disabled)
     preempts: int = 0
     kv_steal_bytes: int = 0       # history re-read payload from steals
+    transport: str = "inproc"     # §13: which execution transport ran
+    kv_transfer_bytes: int = 0    # measured bytes over the RPC KV path
+    kv_transfer_ms: float = 0.0   # measured wall time of those transfers
+    kv_transfers: int = 0
 
 
 class LiveCluster:
@@ -65,34 +81,62 @@ class LiveCluster:
                  adaptive_chunk: bool = False, chunk_headroom: float = 0.85,
                  decode_chunk_tokens: Sequence[int] = (),
                  work_stealing: bool = False, steal_watermark: int = 0,
-                 steal_min_profit_s: float = 0.0, preemption: bool = True):
+                 steal_min_profit_s: float = 0.0, preemption: bool = True,
+                 transport: str = "inproc", rpc_timeout_s: float = 180.0):
+        if transport not in TRANSPORTS:
+            raise ValueError(f"unknown transport {transport!r}; "
+                             f"expected one of {TRANSPORTS}")
         self.cfg = cfg
+        self.transport = transport
         self.slo = slo or SLOSpec(ttft_thres=2.0, itl_thres=0.2)
-        key = __import__("jax").random.PRNGKey(seed)
-        shared_engine_params = None
+        self._seed = seed
+        self._max_len = max_len
+        self._max_slots = max_slots
+        self._pool = None
+        self.kv_path = None
 
-        self.prefill_workers: List[LivePrefillWorker] = []
-        self.decode_workers: List[LiveDecodeWorker] = []
-        for i in range(n_prefill):
-            eng = Engine(cfg, max_len=max_len, key=key,
-                         params=shared_engine_params)
-            shared_engine_params = eng.params
-            self.prefill_workers.append(LivePrefillWorker(i, eng))
-        for i in range(n_decode):
-            eng = Engine(cfg, max_len=max_len, key=key,
-                         params=shared_engine_params)
-            shared_engine_params = eng.params
-            # planner-chosen per-worker chunk size (Deployment.decode_chunks())
-            per_worker = (decode_chunk_tokens[i]
-                          if i < len(decode_chunk_tokens) else 0)
-            self.decode_workers.append(
-                LiveDecodeWorker(i, eng, max_slots=max_slots,
-                                 chunk_tokens=per_worker))
+        self.prefill_workers: List = []
+        self.decode_workers: List = []
+        if transport == "proc":
+            from repro.serving.kv_transfer import TransportKVPath
+            from repro.serving.worker_proc import ProcWorkerPool
+            self.kv_path = TransportKVPath()
+            self._pool = ProcWorkerPool(
+                cfg, max_len=max_len, max_slots=max_slots, seed=seed,
+                rpc_timeout_s=rpc_timeout_s, kv_path=self.kv_path)
+            specs = [("prefill", i, 0) for i in range(n_prefill)]
+            specs += [("decode", i,
+                       decode_chunk_tokens[i]
+                       if i < len(decode_chunk_tokens) else 0)
+                      for i in range(n_decode)]
+            workers = self._pool.spawn_many(specs)
+            self.prefill_workers = workers[:n_prefill]
+            self.decode_workers = workers[n_prefill:]
+        else:
+            key = __import__("jax").random.PRNGKey(seed)
+            shared_engine_params = None
+            for i in range(n_prefill):
+                eng = Engine(cfg, max_len=max_len, key=key,
+                             params=shared_engine_params)
+                shared_engine_params = eng.params
+                self.prefill_workers.append(LivePrefillWorker(i, eng))
+            for i in range(n_decode):
+                eng = Engine(cfg, max_len=max_len, key=key,
+                             params=shared_engine_params)
+                shared_engine_params = eng.params
+                # planner-chosen per-worker chunk size (Deployment.decode_chunks())
+                per_worker = (decode_chunk_tokens[i]
+                              if i < len(decode_chunk_tokens) else 0)
+                self.decode_workers.append(
+                    LiveDecodeWorker(i, eng, max_slots=max_slots,
+                                     chunk_tokens=per_worker))
 
         self.perf = PerfModel(cfg)
         if profile:
-            probe = (self.prefill_workers[0].engine if self.prefill_workers
-                     else self.decode_workers[0].engine)
+            # proc transport: profile a coordinator-side probe engine —
+            # identical params/config as the children (deterministic init
+            # from the shared seed), so the fitted coefficients transfer
+            probe = self._probe_engine()
             profile_engine(probe, self.perf, tp=1,
                            prefill_lens=(16, 32, 64), hist_lens=(0, 32),
                            batches=(1, max(2, max_slots // 2)),
@@ -118,6 +162,25 @@ class LiveCluster:
             self.coordinator, self.prefill_workers, self.decode_workers,
             chunk_tokens=chunk_tokens)
 
+    def _probe_engine(self) -> Engine:
+        if self.transport != "proc":
+            return (self.prefill_workers[0].engine if self.prefill_workers
+                    else self.decode_workers[0].engine)
+        key = __import__("jax").random.PRNGKey(self._seed)
+        return Engine(self.cfg, max_len=self._max_len, key=key)
+
+    # -- lifecycle ---------------------------------------------------------
+    def close(self) -> None:
+        """Tear down worker processes (no-op for the inproc transport)."""
+        if self._pool is not None:
+            self._pool.close()
+
+    def __enter__(self) -> "LiveCluster":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
     # -- public API -------------------------------------------------------
     @property
     def now(self) -> float:
@@ -127,18 +190,27 @@ class LiveCluster:
         self.runtime.submit(session)
 
     def fail_worker(self, kind: str, idx: int, at: float) -> None:
+        """Schedule a failure of the worker with STABLE id ``idx`` at
+        logical time ``at`` — under the proc transport this is a real
+        ``SIGKILL`` of the worker process."""
         self.runtime.schedule_failure(kind, idx, at)
 
     def set_straggler(self, kind: str, idx: int, speed: float) -> None:
-        ws = self.prefill_workers if kind == "prefill" else self.decode_workers
-        ws[idx].speed = speed
+        w = self.runtime.worker_by_id(kind, idx)
+        if w is None:
+            raise KeyError(f"no {kind} worker with id {idx}")
+        w.speed = speed
 
-    def add_prefill_worker(self) -> LivePrefillWorker:
-        ref = (self.prefill_workers[0] if self.prefill_workers
-               else self.decode_workers[0])
-        eng = Engine(self.cfg, max_len=ref.engine.max_len,
-                     params=ref.engine.params)
-        w = LivePrefillWorker(len(self.prefill_workers), eng)
+    def add_prefill_worker(self):
+        next_id = max((w.idx for w in self.prefill_workers), default=-1) + 1
+        if self.transport == "proc":
+            w = self._pool.spawn("prefill", next_id)
+        else:
+            ref = (self.prefill_workers[0] if self.prefill_workers
+                   else self.decode_workers[0])
+            eng = Engine(self.cfg, max_len=ref.engine.max_len,
+                         params=ref.engine.params)
+            w = LivePrefillWorker(next_id, eng)
         self.runtime.register_worker(w, "prefill")
         return w
 
@@ -159,6 +231,7 @@ class LiveCluster:
         ttfts = [t for s in sessions for t in s.ttfts]
         itls = [t for s in sessions for t in s.itls]
         ok = sum(1 for s in sessions if self.slo.satisfied(s))
+        kv = self.kv_path
         return LiveResult(
             sessions=sessions,
             slo_attainment=ok / max(len(sessions), 1),
@@ -175,6 +248,10 @@ class LiveCluster:
             preempts=self.coordinator.sched.preempts,
             kv_steal_bytes=getattr(self.runtime.backend,
                                    "kv_steal_bytes", 0),
+            transport=self.transport,
+            kv_transfer_bytes=kv.bytes_moved if kv else 0,
+            kv_transfer_ms=kv.ms if kv else 0.0,
+            kv_transfers=kv.transfers if kv else 0,
         )
 
 

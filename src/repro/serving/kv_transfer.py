@@ -121,6 +121,58 @@ def steal_handoff(cfg: ModelConfig, task, session, src_worker,
     return cfg.session_state_bytes(task.l_hist)
 
 
+class TransportKVPath:
+    """Measured KV movement between worker *processes* (DESIGN.md §13).
+
+    Under ``LiveCluster(transport="proc")`` every KV hop is real bytes over
+    the RPC socket — the incremental write-back (prefill -> decode), the
+    lazy history read (decode -> prefill), and the coordinator relay leg in
+    between — and this object is the single account of them: exact payload
+    bytes (``transfer_bytes`` of the tree that moved) and wall-clock
+    seconds, measured around the blocking RPC, not modeled.  The in-process
+    transport keeps the same protocol with ``jax.device_put`` copies; there
+    the path stays unused and the modeled/measured T_kv comparison of
+    ``benchmarks/fig12_transport.py`` is the reproduction target.
+    """
+
+    def __init__(self):
+        self.bytes_moved = 0
+        self.seconds = 0.0
+        self.transfers = 0
+
+    @property
+    def ms(self) -> float:
+        return self.seconds * 1e3
+
+    def account(self, nbytes: int, seconds: float) -> None:
+        self.bytes_moved += int(nbytes)
+        self.seconds += float(seconds)
+        self.transfers += 1
+
+    def put(self, client, slot: int, lo: int, tree: Cache) -> float:
+        """Incremental KV write-back into a decode worker's cache slot
+        (blocking RPC; returns measured seconds)."""
+        import time
+        t0 = time.perf_counter()
+        client.call("kv_put", slot=slot, lo=lo, tree=_numpy_tree(tree))
+        dt = time.perf_counter() - t0
+        self.account(transfer_bytes(tree), dt)
+        return dt
+
+    def get(self, client, slot: int, lo: int, hi: int) -> Cache:
+        """Lazy history read out of a decode worker's cache slot."""
+        import time
+        t0 = time.perf_counter()
+        tree = client.call("kv_get", slot=slot, lo=lo, hi=hi)
+        self.account(transfer_bytes(tree), time.perf_counter() - t0)
+        return tree
+
+
+def _numpy_tree(tree: Cache) -> Cache:
+    """Materialize device arrays as numpy before they hit the RPC encoder."""
+    return jax.tree.map(lambda x: np.asarray(x), tree)
+
+
 def reshard(tree: Cache, target_shardings=None) -> Cache:
     """Move a cache tree to another worker's device layout.
 

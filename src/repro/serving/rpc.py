@@ -1,0 +1,253 @@
+"""Lightweight RPC layer between the coordinator and per-worker processes
+(DESIGN.md §13).
+
+Wire format — length-prefixed frames over a stream socket (AF_UNIX locally;
+the framing is transport-agnostic so a TCP deployment changes only the
+address family):
+
+    [u32 header_len][header JSON][blob 0][blob 1]...
+
+The header is UTF-8 JSON; ``numpy`` arrays anywhere in the payload tree are
+hoisted out as raw binary blobs (zero re-encoding of KV bytes — the paylod
+cost of a KV transfer IS the array bytes) and referenced from the JSON as
+``{"__nd__": k, "dtype": ..., "shape": ...}``.  Dicts with non-string keys
+(slot -> token maps) encode as ``{"__kv__": [[k, v], ...]}``.
+
+Messages:
+
+  * request   ``{"id": n, "m": method, "p": params}``  -> one response
+  * response  ``{"id": n, "r": result}`` or ``{"id": n, "e": traceback}``
+  * oneway    ``{"m": method, "p": params}``           -> no response
+
+Calls are strictly serial per connection (the serving runtime is a
+discrete-event loop: each logical event issues at most one engine call, so a
+single in-flight request per worker matches the execution model exactly —
+logical parallelism across workers comes from the event loop, as in-process).
+
+Failure semantics: any socket error, EOF, or timeout while talking to a
+worker raises :class:`~repro.runtime.backend.WorkerDiedError` tagged with
+the worker's (kind, idx) — the ServingRuntime converts it into the standard
+worker-failure path (orphan re-dispatch / rebind), so a ``SIGKILL``'d
+worker process is handled exactly like a scheduled failure injection.
+"""
+from __future__ import annotations
+
+import json
+import socket
+import struct
+import traceback
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.runtime.backend import WorkerDiedError
+
+__all__ = ["RemoteError", "WorkerDiedError", "RpcConn", "RpcClient", "serve",
+           "pack", "unpack"]
+
+_U32 = struct.Struct(">I")
+MAX_FRAME_BYTES = 1 << 31        # sanity bound on a single frame
+
+
+class RemoteError(RuntimeError):
+    """The worker raised while executing a request (it is still alive)."""
+
+
+# ---------------------------------------------------------------------------
+# payload <-> (json tree, blobs)
+# ---------------------------------------------------------------------------
+
+def pack(obj: Any, blobs: Optional[List[bytes]] = None):
+    """Encode a payload tree into a JSON-safe tree plus binary blobs."""
+    if blobs is None:
+        blobs = []
+    enc = _encode(obj, blobs)
+    return enc, blobs
+
+
+def _is_array(x: Any) -> bool:
+    return isinstance(x, np.ndarray) or (
+        hasattr(x, "dtype") and hasattr(x, "shape") and hasattr(x, "__array__"))
+
+
+def _encode(obj: Any, blobs: List[bytes]) -> Any:
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    if _is_array(obj):
+        a = np.ascontiguousarray(np.asarray(obj))
+        blobs.append(a.tobytes())
+        return {"__nd__": len(blobs) - 1, "dtype": str(a.dtype),
+                "shape": list(a.shape)}
+    if isinstance(obj, np.generic):          # numpy scalar
+        return obj.item()
+    if isinstance(obj, dict):
+        if all(isinstance(k, str) for k in obj):
+            return {k: _encode(v, blobs) for k, v in obj.items()}
+        return {"__kv__": [[_encode(k, blobs), _encode(v, blobs)]
+                           for k, v in obj.items()]}
+    if isinstance(obj, (list, tuple)):
+        return [_encode(v, blobs) for v in obj]
+    raise TypeError(f"cannot encode {type(obj).__name__} for RPC")
+
+
+def unpack(enc: Any, blobs: List[memoryview]) -> Any:
+    if isinstance(enc, dict):
+        if "__nd__" in enc:
+            a = np.frombuffer(blobs[enc["__nd__"]], dtype=np.dtype(enc["dtype"]))
+            return a.reshape(enc["shape"]).copy()
+        if "__kv__" in enc:
+            return {unpack(k, blobs): unpack(v, blobs) for k, v in enc["__kv__"]}
+        return {k: unpack(v, blobs) for k, v in enc.items()}
+    if isinstance(enc, list):
+        return [unpack(v, blobs) for v in enc]
+    return enc
+
+
+# ---------------------------------------------------------------------------
+# framing
+# ---------------------------------------------------------------------------
+
+def _recv_exact(sock: socket.socket, n: int) -> memoryview:
+    buf = bytearray(n)
+    view = memoryview(buf)
+    got = 0
+    while got < n:
+        r = sock.recv_into(view[got:], n - got)
+        if r == 0:
+            raise ConnectionError("peer closed the connection")
+        got += r
+    return memoryview(buf)
+
+
+class RpcConn:
+    """One frame-oriented connection endpoint (either side)."""
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        self.bytes_sent = 0
+        self.bytes_received = 0
+
+    def send_msg(self, msg: Dict[str, Any]) -> int:
+        enc, blobs = pack(msg)
+        enc["blobs"] = [len(b) for b in blobs]
+        header = json.dumps(enc, separators=(",", ":")).encode()
+        if len(header) > MAX_FRAME_BYTES:
+            raise ValueError("oversized RPC header")
+        parts = [_U32.pack(len(header)), header, *blobs]
+        data = b"".join(parts)
+        self.sock.sendall(data)
+        self.bytes_sent += len(data)
+        return len(data)
+
+    def recv_msg(self) -> Tuple[Dict[str, Any], int]:
+        (hlen,) = _U32.unpack(_recv_exact(self.sock, 4))
+        if hlen > MAX_FRAME_BYTES:
+            raise ConnectionError(f"corrupt frame (header {hlen} bytes)")
+        header = json.loads(bytes(_recv_exact(self.sock, hlen)))
+        sizes = header.pop("blobs", [])
+        blobs: List[memoryview] = []
+        total = 4 + hlen
+        for n in sizes:
+            blobs.append(_recv_exact(self.sock, n))
+            total += n
+        self.bytes_received += total
+        return unpack(header, blobs), total
+
+    def close(self) -> None:
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+# ---------------------------------------------------------------------------
+# client (coordinator side)
+# ---------------------------------------------------------------------------
+
+class RpcClient(RpcConn):
+    """Blocking request/response client bound to ONE worker process.
+
+    ``kind``/``idx`` tag the :class:`WorkerDiedError` raised when the peer
+    vanishes (socket error / EOF / timeout) so the runtime can route the
+    failure to the right worker's recovery path.  A timeout counts as death:
+    a worker that stops answering is indistinguishable from a dead one, and
+    the bound keeps a hung subprocess from wedging the whole run.
+    """
+
+    def __init__(self, sock: socket.socket, kind: str, idx: int,
+                 timeout_s: float = 180.0):
+        super().__init__(sock)
+        self.kind = kind
+        self.idx = idx
+        self.dead = False
+        self.last_call_bytes = 0
+        sock.settimeout(timeout_s)
+
+    def call(self, method: str, **params) -> Any:
+        if self.dead:
+            raise WorkerDiedError(self.kind, self.idx, "connection closed")
+        self._seq = getattr(self, "_seq", 0) + 1
+        try:
+            sent = self.send_msg({"id": self._seq, "m": method, "p": params})
+            msg, received = self.recv_msg()
+        except (OSError, ConnectionError, socket.timeout) as e:
+            self.dead = True
+            self.close()
+            raise WorkerDiedError(
+                self.kind, self.idx,
+                f"rpc {method!r} failed: {e!r}") from e
+        self.last_call_bytes = sent + received
+        if msg.get("id") != self._seq:
+            self.dead = True
+            self.close()
+            raise WorkerDiedError(self.kind, self.idx,
+                                  f"rpc {method!r}: out-of-order response")
+        if "e" in msg:
+            raise RemoteError(f"{self.kind}[{self.idx}].{method}: {msg['e']}")
+        return msg.get("r")
+
+    def notify(self, method: str, **params) -> None:
+        """Oneway: fire and forget (shutdown, cache hints)."""
+        if self.dead:
+            return
+        try:
+            self.send_msg({"m": method, "p": params})
+        except (OSError, ConnectionError, socket.timeout):
+            self.dead = True
+            self.close()
+
+
+# ---------------------------------------------------------------------------
+# server loop (worker side)
+# ---------------------------------------------------------------------------
+
+def serve(conn: RpcConn,                            # pragma: no cover — runs
+          handlers: Dict[str, Callable[..., Any]]) -> None:  # in the child
+    """Serve requests until EOF or a handler raises SystemExit (shutdown).
+
+    Handler exceptions are shipped back as error responses — the worker
+    stays up (a bad request must not look like a process crash).  Exercised
+    end-to-end by tests/test_multiproc_cluster.py inside real worker
+    subprocesses, which the parent's coverage tracer does not follow."""
+    while True:
+        try:
+            msg, _ = conn.recv_msg()
+        except (ConnectionError, OSError):
+            return                            # coordinator went away
+        method, params = msg.get("m"), msg.get("p") or {}
+        rid = msg.get("id")
+        fn = handlers.get(method)
+        try:
+            if fn is None:
+                raise KeyError(f"unknown RPC method {method!r}")
+            result = fn(**params)
+        except SystemExit:
+            if rid is not None:
+                conn.send_msg({"id": rid, "r": None})
+            return
+        except Exception:                     # noqa: BLE001 — shipped to caller
+            if rid is not None:
+                conn.send_msg({"id": rid, "e": traceback.format_exc(limit=8)})
+            continue
+        if rid is not None:
+            conn.send_msg({"id": rid, "r": result})

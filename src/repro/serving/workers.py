@@ -29,6 +29,7 @@ from repro.serving.kv_transfer import (
     extract_range,
     insert_range,
     reshard,
+    steal_handoff,
     transfer_bytes,
 )
 
@@ -73,13 +74,15 @@ def timed(fn, *args, **kw):
     return time.perf_counter() - t0, out
 
 
-class LivePrefillWorker:
-    kind = "prefill"
+class WorkerSchedState:
+    """The scheduling-facing worker surface — the ONLY fields the
+    Coordinator and ServingRuntime read or write on a worker, shared by
+    the in-process workers here and the proc-transport handles
+    (``repro.serving.worker_proc``) so the duck-typed contract cannot
+    drift between transports."""
 
-    def __init__(self, idx: int, engine: Engine, tp: int = 1,
-                 window_s: float = 10.0):
-        self.idx = idx
-        self.engine = engine
+    def _init_sched_state(self, idx: int, tp: int, window_s: float) -> None:
+        self.idx = idx                  # STABLE id (never a list position)
         self.tp = tp
         self.speed = 1.0
         self.alive = True
@@ -90,6 +93,54 @@ class LivePrefillWorker:
         self.windowed_itl = 0.0
         self.busy_until = 0.0
         self.kv_bytes_moved = 0
+
+
+class SlotBookkeeping:
+    """Decode-slot occupancy owned by the coordinator side on BOTH
+    transports (the proc worker's cache rows mirror it via ``reset_slot``
+    RPCs).  Requires ``self.slots`` and ``self.reset_slot``."""
+
+    def free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def occupancy(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
+    def allocate(self, session: LiveSession) -> int:
+        slot = self.free_slot()
+        assert slot is not None, "no free decode slots"
+        session.slot = slot
+        self.slots[slot] = session
+        self.reset_slot(slot)
+        return slot
+
+    def detach(self, session: LiveSession) -> None:
+        if session.slot is not None:
+            self.slots[session.slot] = None
+            session.slot = None
+        # cache row is wiped (reset_slot) on next allocate
+
+
+class LivePrefillWorker(WorkerSchedState):
+    kind = "prefill"
+
+    def __init__(self, idx: int, engine: Engine, tp: int = 1,
+                 window_s: float = 10.0):
+        self._init_sched_state(idx, tp, window_s)
+        self.engine = engine
+
+    @property
+    def cfg(self) -> ModelConfig:
+        return self.engine.cfg
+
+    def steal_handoff(self, task: PrefillTask,
+                      session: Optional[LiveSession] = None) -> int:
+        """A queued chunk migrated onto this worker (it is the thief):
+        account the history payload it must now lazily re-read (§12)."""
+        return steal_handoff(self.engine.cfg, task, session, None, self)
 
     def execute(self, task: PrefillTask, session: LiveSession,
                 history_extract: Optional[Dict] = None,
@@ -115,40 +166,22 @@ class LivePrefillWorker:
         return {"increment": incr, "logits": np.asarray(logits)}
 
 
-class LiveDecodeWorker:
+class LiveDecodeWorker(WorkerSchedState, SlotBookkeeping):
     kind = "decode"
 
     def __init__(self, idx: int, engine: Engine, max_slots: int, tp: int = 1,
                  window_s: float = 10.0, chunk_tokens: int = 0):
-        self.idx = idx
+        self._init_sched_state(idx, tp, window_s)
         self.engine = engine
-        self.tp = tp
-        self.speed = 1.0
-        self.alive = True
         #: planner-chosen per-worker sub-chunk size (0 = runtime default);
         #: the ServingRuntime/Coordinator consult this at chunk boundaries
         self.chunk_tokens = chunk_tokens
         self.max_slots = max_slots
         self.cache = engine.new_cache(max_slots)
         self.slots: List[Optional[LiveSession]] = [None] * max_slots
-        self.prefill_queue: List[PrefillTask] = []
-        self.ttft_stat = WindowStat(window_s)
-        self.itl_stat = WindowStat(window_s)
-        self.windowed_ttft = 0.0
-        self.windowed_itl = 0.0
-        self.busy_until = 0.0
         self.mem_tokens = 0
 
-    # -- slot management -------------------------------------------------
-    def free_slot(self) -> Optional[int]:
-        for i, s in enumerate(self.slots):
-            if s is None:
-                return i
-        return None
-
-    def occupancy(self) -> int:
-        return sum(1 for s in self.slots if s is not None)
-
+    # -- slot management (free/occupancy/allocate/detach: SlotBookkeeping) --
     def reset_slot(self, slot: int) -> None:
         """Wipe a slot's cache row (lengths, positions, state) before reuse —
         stale positions from a previous occupant must never look valid."""
@@ -156,14 +189,6 @@ class LiveDecodeWorker:
         self.cache = insert_range(self.cache, fresh, self.engine.cfg,
                                   self.engine.max_len, 0, slot,
                                   replace_state=True)
-
-    def allocate(self, session: LiveSession) -> int:
-        slot = self.free_slot()
-        assert slot is not None, "no free decode slots"
-        session.slot = slot
-        self.slots[slot] = session
-        self.reset_slot(slot)
-        return slot
 
     def attach(self, session: LiveSession, increment: Dict, lo: int,
                first_token: int, n_tokens: int) -> None:
@@ -176,12 +201,6 @@ class LiveDecodeWorker:
                                   self.engine.cfg, self.engine.max_len,
                                   lo, session.slot, replace_state=True)
         session.last_token = first_token
-
-    def detach(self, session: LiveSession) -> None:
-        if session.slot is not None:
-            self.slots[session.slot] = None
-            session.slot = None
-        # cache row is wiped (reset_slot) on next allocate
 
     def history_extract(self, session: LiveSession) -> Dict:
         return extract_range(self.cache, self.engine.cfg, self.engine.max_len,

@@ -97,6 +97,22 @@ def test_decode_worker_failure_recovery(cfg):
     assert all(len(s.generated) == 8 for s in finished)
 
 
+def test_profile_engine_fits_live_coefficients(cfg):
+    """The offline profiler (§3) must fit prefill/decode — and with
+    ``fused=True`` the T_fused family — from real measured engine calls,
+    leaving every predicted duration positive and finite."""
+    from repro.core.perf_model import PerfModel
+    from repro.serving import profile_engine
+
+    eng = Engine(cfg, max_len=64, key=jax.random.PRNGKey(0))
+    perf = PerfModel(cfg)
+    profile_engine(eng, perf, tp=1, prefill_lens=(8, 16), hist_lens=(0,),
+                   batches=(1, 2), fused=True)
+    assert 0.0 < perf.t_pre(0, 16, 1, 1.0) < 60.0
+    assert 0.0 < perf.t_dec(2, 1, 32.0, 1.0) < 60.0
+    assert 0.0 < perf.t_fused(0, 16, 2, 1, 32.0, 1.0) < 120.0
+
+
 def test_kv_transfer_roundtrip(cfg):
     from repro.models import build_model
     m = build_model(cfg)
