@@ -1,0 +1,124 @@
+"""Fig. 13 (beyond-paper): adaptive decode-local offload under decode
+saturation (DESIGN.md §14).
+
+AMPD's core placement claim is that incremental prefills should run
+*locally* on the decode instance when that avoids KV movement, and ship to
+prefill instances when the decode side is saturated — and that the decision
+must be revisited as conditions change ("Not All Prefills Are Equal",
+arXiv:2603.13358, makes the same point for multi-turn prefills).
+This benchmark builds the workload where a static answer loses either way —
+a decode-saturated GAIA slice: round 0 carries the full GAIA prompt (a LONG
+history accretes on the decode worker), later rounds add only SHORT
+increments, and arrivals come in bursts:
+
+  * ``local-always`` never moves KV but stacks every incremental prefill
+    onto the decode workers; under the burst waves the local queues stall
+    decoding and round TTFTs blow through the SLO;
+  * ``ship-always`` (dynamo-style ``ampd-noroute``) keeps decode clean but
+    pays the maximal KV bill — every short increment drags its long history
+    across the phase boundary (lazy read) and writes the increment back;
+  * ``decode-offload`` routes local-first (the KV-frugal choice) and lets
+    the Coordinator migrate queued local chunks to prefill workers whenever
+    a decode worker's projected stall exceeds the guard — paying
+    ``t_kv(l_hist)`` only for the chunks that actually had to move.
+
+Same deployment, same trace, same seeds: offload should beat BOTH static
+arms on SLO attainment at equal resources (the ``--smoke`` gate asserts
+migrations >= 1, completed == arrived, and attainment >= local-always).
+A plain adaptive ``ampd-chunked`` row is included for reference.
+"""
+from benchmarks.common import perf_for
+
+from repro.core import Deployment, SimConfig, Simulation, SLOSpec, WorkerGroup
+from repro.core.routing import RoutingConfig, local_first_routing
+from repro.core.types import RoundSpec
+from repro.workloads import make_trace
+
+
+def saturated_slice(num_sessions, rate, seed, *, burst=5, incr_div=8,
+                    env_delay=0.2):
+    """Decode-saturated GAIA: keep round 0's long prompt (the history), cut
+    later increments to ~1/8 length, and compress Poisson arrivals into
+    waves of ``burst`` simultaneous sessions."""
+    ss = make_trace("gaia", num_sessions=num_sessions, arrival_rate=rate,
+                    seed=seed)
+    for s in ss:
+        s.rounds = [RoundSpec(
+            prefill_len=(r.prefill_len if i == 0
+                         else max(32, r.prefill_len // incr_div)),
+            decode_len=max(8, r.decode_len), env_delay=env_delay)
+            for i, r in enumerate(s.rounds)]
+    wave_t = {}
+    for i, s in enumerate(ss):
+        w = i // burst
+        wave_t.setdefault(w, s.arrival_time)
+        s.arrival_time = wave_t[w]
+    return ss
+
+
+def _cfg(arm, slo, seed):
+    local_first = local_first_routing(slo.ttft_thres, slo.itl_thres)
+    adaptive = RoutingConfig(ttft_thres=slo.ttft_thres,
+                             itl_thres=slo.itl_thres)
+    return {
+        "local-always": SimConfig(scheduler="ampd-chunked", seed=seed,
+                                  routing=local_first),
+        "ship-always": SimConfig(scheduler="ampd-noroute", chunk_tokens=512,
+                                 seed=seed, routing=adaptive),
+        "ampd": SimConfig(scheduler="ampd-chunked", seed=seed,
+                          routing=adaptive),
+        "decode-offload": SimConfig(scheduler="ampd-chunked", seed=seed,
+                                    decode_offload=True,
+                                    routing=local_first),
+    }[arm]
+
+
+ARMS = ("local-always", "ship-always", "ampd", "decode-offload")
+
+
+def run(model="qwen3-32b", num_sessions=40, rate=0.8, seeds=(11, 12),
+        arms=ARMS):
+    perf = perf_for(model)
+    slo = SLOSpec(ttft_thres=6.0, itl_thres=0.15)
+    dep = Deployment((WorkerGroup(4, 2),), (WorkerGroup(4, 2),))
+    rows = []
+    for arm in arms:
+        att = ttft = itl = 0.0
+        migrations = completed = arrived = 0
+        for seed in seeds:
+            ss = saturated_slice(num_sessions, rate, seed)
+            r = Simulation(perf, dep, ss, slo, _cfg(arm, slo, seed)).run()
+            att += r.slo_attainment / len(seeds)
+            ttft += r.p95_ttft / len(seeds)
+            itl += r.p95_itl / len(seeds)
+            migrations += r.migrations
+            arrived += len(ss)
+            completed += sum(1 for x in ss if x.finish_time is not None)
+        rows.append({
+            "arm": arm, "slo": round(att, 3),
+            "p95_ttft_s": round(ttft, 3),
+            "p95_itl_ms": round(itl * 1e3, 1),
+            "migrations": migrations,
+            "completed": completed, "arrived": arrived,
+        })
+    return rows
+
+
+def main():
+    rows = run()
+    cols = ("arm", "slo", "p95_ttft_s", "p95_itl_ms", "migrations",
+            "completed", "arrived")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+    by = {r["arm"]: r for r in rows}
+    off = by["decode-offload"]
+    print(f"# decode-offload attainment {off['slo']:.3f} vs "
+          f"local-always {by['local-always']['slo']:.3f} / "
+          f"ship-always {by['ship-always']['slo']:.3f} "
+          f"({off['migrations']} migrations)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -105,6 +105,29 @@ def smoke(json_path=None) -> int:
            f"p95_ttft {off['p95_ttft_s']}s->{on['p95_ttft_s']}s "
            f"steals={on['steals']}")
 
+    _section("smoke: Fig. 13 decode-local offload")
+    from benchmarks import fig13_offload
+    t0 = time.time()
+    rows = fig13_offload.run(num_sessions=SMOKE["num_sessions"],
+                             seeds=SMOKE["seeds"])
+    by = {r["arm"]: r for r in rows}
+    off, loc, ship = (by["decode-offload"], by["local-always"],
+                      by["ship-always"])
+    if off["migrations"] < 1:
+        failures.append("offload-enabled saturated run recorded no migrations")
+    for r in rows:
+        if r["completed"] != r["arrived"]:
+            failures.append(
+                f"fig13 {r['arm']}: {r['completed']}/{r['arrived']} "
+                "sessions completed (work lost)")
+    if off["slo"] < loc["slo"]:
+        failures.append(
+            f"decode-offload lost to local-always "
+            f"({off['slo']:.3f} < {loc['slo']:.3f})")
+    record("fig13_offload", t0, rows,
+           f"slo local={loc['slo']} ship={ship['slo']} offload={off['slo']} "
+           f"migrations={off['migrations']}")
+
     _section("smoke: Fig. 12 multi-process transport (measured KV path)")
     from benchmarks import fig12_transport
     t0 = time.time()
@@ -237,6 +260,16 @@ def main() -> None:
     on = next(r for r in rows if r["arm"] == "stealing")
     record("fig11_stealing", t0,
            f"p95_ttft_gain={(1 - on['p95_ttft_s'] / off['p95_ttft_s']):+.1%}")
+
+    _section("Fig. 13: adaptive decode-local offload (beyond-paper)")
+    from benchmarks import fig13_offload
+    t0 = time.time()
+    rows = fig13_offload.main()
+    by = {r["arm"]: r for r in rows}
+    record("fig13_offload", t0,
+           f"slo: local={by['local-always']['slo']} "
+           f"ship={by['ship-always']['slo']} "
+           f"offload={by['decode-offload']['slo']}")
 
     _section("Fig. 12: multi-process transport, measured KV path (beyond-paper)")
     from benchmarks import fig12_transport

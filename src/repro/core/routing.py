@@ -30,6 +30,21 @@ class RoutingConfig:
     itl_thres: float = 0.1           # seconds
 
 
+def local_first_routing(ttft_thres: float, itl_thres: float) -> RoutingConfig:
+    """The KV-frugal static placement: Alg. 1 degenerates to local-always.
+
+    ``alpha < 0`` makes the prefill-side slack gate unsatisfiable (windowed
+    TTFT is never negative) and the huge ``beta`` always grants the local
+    gate — every prefill runs on the bound decode worker, no KV ever moves
+    at routing time.  This is the router the decode-local offload layer
+    (DESIGN.md §14) is designed to repair, and the ``local-always`` /
+    ``decode-offload`` arms of ``benchmarks/fig13_offload.py``; the offload
+    tests also use it to saturate a decode worker deterministically.
+    """
+    return RoutingConfig(alpha=-1.0, beta=1e9, ttft_thres=ttft_thres,
+                         itl_thres=itl_thres)
+
+
 @dataclass(frozen=True)
 class RouteDecision:
     kind: str                        # "local" | "remote"

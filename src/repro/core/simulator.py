@@ -40,6 +40,7 @@ from repro.runtime import (
     ChunkTuner,
     Coordinator,
     ModeledBackend,
+    OffloadConfig,
     ServingRuntime,
     StealingConfig,
     WindowStat,
@@ -92,6 +93,12 @@ class SimConfig:
     steal_watermark: int = 0      # queue length at/below which to steal
     steal_min_profit_s: float = 0.0   # required net ETA gain per move
     preemption: bool = True       # SLO-slack priority (with work_stealing)
+    # -- decode-local offload (DESIGN.md §14) -----------------------------
+    decode_offload: bool = False  # saturated decode workers shed local chunks
+    offload_guard: float = 1.0    # stall trigger as a multiple of the ITL SLO
+    offload_hysteresis: float = 0.5   # low-water fraction of the trigger
+    offload_budget: int = 1       # max migrations per chunk per round
+    offload_min_profit_s: float = 0.0  # required net ETA gain per migration
     seed: int = 0
     max_time: float = 1.0e7
 
@@ -113,6 +120,7 @@ class SimResult:
     worker_util: Dict[str, float]
     steals: int = 0               # §12 counters (0 when stealing disabled)
     preempts: int = 0
+    migrations: int = 0           # §14 counter (0 when offload disabled)
 
 
 class Simulation:
@@ -170,10 +178,18 @@ class Simulation:
                 watermark=self.cfg.steal_watermark,
                 min_profit_s=self.cfg.steal_min_profit_s,
                 preemption=self.cfg.preemption)
+        offload = None
+        if self.cfg.decode_offload:
+            offload = OffloadConfig(
+                guard=self.cfg.offload_guard,
+                hysteresis=self.cfg.offload_hysteresis,
+                budget=self.cfg.offload_budget,
+                min_profit_s=self.cfg.offload_min_profit_s)
         self.coordinator = Coordinator(
             perf=perf, routing=self.cfg.routing,
             scheduler=self.cfg.scheduler, reorder_w=self.cfg.reorder_w,
-            seed=self.cfg.seed, chunk_tuner=tuner, stealing=stealing)
+            seed=self.cfg.seed, chunk_tuner=tuner, stealing=stealing,
+            offload=offload)
         self.runtime = ServingRuntime(
             ModeledBackend(perf, kv_overlap=self.cfg.kv_overlap),
             self.coordinator, self.prefill_workers, self.decode_workers,
@@ -248,6 +264,7 @@ class Simulation:
             worker_util=util,
             steals=self.coordinator.sched.steals,
             preempts=self.coordinator.sched.preempts,
+            migrations=self.coordinator.sched.migrations,
         )
 
 
@@ -257,11 +274,13 @@ def simulate_deployment(perf: PerfModel, deployment: Deployment,
                         cfg: Optional[SimConfig] = None,
                         chunk_tokens: int = 0, adaptive_chunk: bool = False,
                         work_stealing: bool = False,
+                        decode_offload: bool = False,
                         **kw) -> SimResult:
     base = cfg or SimConfig(scheduler=scheduler, seed=seed,
                             chunk_tokens=chunk_tokens,
                             adaptive_chunk=adaptive_chunk,
                             work_stealing=work_stealing,
+                            decode_offload=decode_offload,
                             routing=RoutingConfig(
                                 ttft_thres=slo.ttft_thres,
                                 itl_thres=slo.itl_thres))

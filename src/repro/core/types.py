@@ -33,6 +33,7 @@ class PrefillTask:
     is_final_chunk: bool = True        # TTFT/decode trigger on the last chunk
     gen: int = 0                       # session rebind generation at creation
     preempted: bool = False            # counted once when priority parks it
+    migrations: int = 0                # decode-local offload hops (§14 budget)
 
     @property
     def total_ctx(self) -> int:

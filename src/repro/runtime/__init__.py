@@ -23,6 +23,7 @@ from repro.runtime.coordinator import (  # noqa: F401
     REORDERING,
     SCHEDULERS,
     Coordinator,
+    OffloadConfig,
     StealingConfig,
 )
 from repro.runtime.events import EventLoop  # noqa: F401

@@ -126,6 +126,25 @@ class ExecutionBackend:
                 src_worker.kind, src_worker.idx):
             session._rt_chain_worker = None
 
+    # -- decode-local offload (DESIGN.md §14) ------------------------------
+    def on_migrate(self, task: PrefillTask, session, src_decode,
+                   dst_prefill) -> None:
+        """A queued LOCAL chunk migrates off a saturated decode worker onto
+        ``dst_prefill`` — the placement revisit that crosses the
+        prefill/decode phase boundary.
+
+        Base semantics (both backends): as with stealing, chunk-chain
+        locality does not migrate — if the session's previous chunk ran
+        locally on ``src_decode``, the destination must lazily re-read the
+        full history (the KV-locality penalty ``plan_offload`` charged),
+        and the increment now pays a real write-back on completion.  May
+        raise :class:`WorkerDiedError` when the destination process died
+        mid-handoff (proc transport); the runtime converts that into the
+        standard recovery path."""
+        if getattr(session, "_rt_chain_worker", None) == (
+                src_decode.kind, src_decode.idx):
+            session._rt_chain_worker = None
+
     # -- fault tolerance ---------------------------------------------------
     def make_recovery_task(self, session, task: Optional[PrefillTask],
                            now: float, pending) -> PrefillTask:
@@ -213,6 +232,7 @@ class LiveBackend(ExecutionBackend):
         self.perf = perf
         self.model_kv_time = model_kv_time
         self.kv_steal_bytes = 0     # history payload re-read after steals
+        self.kv_migrate_bytes = 0   # history re-read after decode offload
 
     def incr_len(self, session, round_idx: int) -> int:
         return len(session.prompt_tokens[round_idx])
@@ -222,6 +242,14 @@ class LiveBackend(ExecutionBackend):
         # workers own the handoff accounting so the proc transport can run
         # it inside the thief's process (same engine-adjacent code path)
         self.kv_steal_bytes += dst_worker.steal_handoff(task, session)
+
+    def on_migrate(self, task, session, src_decode, dst_prefill) -> None:
+        super().on_migrate(task, session, src_decode, dst_prefill)
+        # runs in the destination process under the proc transport; a
+        # WorkerDiedError here (destination SIGKILL'd mid-handoff)
+        # propagates so the runtime re-routes the chunk — unlike steals,
+        # the source queue entry is already gone at this point
+        self.kv_migrate_bytes += dst_prefill.migrate_handoff(task, session)
 
     def admit_local(self, decode_worker, session) -> bool:
         if session.slot is None:

@@ -27,6 +27,17 @@ service + the KV-locality penalty ``t_kv(l_hist)`` for re-reading history
 on the thief).  Routing decisions are irrevocable at enqueue time;
 stealing is the repair path when conditions drift (stragglers, bursts,
 chunk remainders landing behind a backlog).
+
+Decode-local offload (DESIGN.md §14): with an :class:`OffloadConfig`
+attached, the Coordinator also repairs placements across the prefill/decode
+phase boundary — the one direction stealing never touches.  When a decode
+worker's projected stall (``T_fused`` over its running + queued local
+chunks under the current decoding batch) exceeds the guard, ``plan_offload``
+migrates queued local chunks to the most profitable prefill worker,
+charging the full KV-locality penalty ``t_kv(l_hist)`` plus the increment
+write-back that local execution gets for free; a schmitt-trigger hysteresis
+band and a per-chunk migration budget keep the migrator from fighting the
+router (oscillation is an explicitly tested failure mode).
 """
 from __future__ import annotations
 
@@ -53,6 +64,40 @@ REORDERING = ("ampd", "ampd-noroute", "ampd-chunked")
 ADAPTIVE = ("ampd", "ampd-noreorder", "ampd-chunked")
 SCHEDULERS = ("ampd", "ampd-noreorder", "ampd-noroute", "ampd-chunked",
               "dynamo", "vllm", "continuum")
+
+
+@dataclass(frozen=True)
+class OffloadConfig:
+    """Decode-local offload knobs (DESIGN.md §14).
+
+    Routing (Alg. 1) may deliberately place an incremental prefill *locally*
+    on the bound decode worker — the KV-frugal choice — but the decision is
+    irrevocable at enqueue time, and a burst of local chunks can saturate
+    the decode side long after the router's window looked healthy.  With
+    this config attached, the Coordinator re-visits those placements:
+    whenever a decode worker's projected stall (``T_fused`` of the running
+    plus queued local chunks under the current decoding batch) exceeds
+    ``guard * itl_thres``, queued local chunks migrate to the most
+    profitable prefill worker, paying the full KV-locality penalty
+    ``t_kv(l_hist)`` plus the increment write-back they would have had for
+    free locally.
+
+    ``guard``: saturation trigger, as a multiple of the ITL SLO — the
+    high-water mark of the schmitt trigger.
+    ``hysteresis``: fraction of the trigger level the projected stall must
+    drain below before the migrator disengages (the low-water mark); the
+    [low, high] band is what keeps the migrator from fighting the router
+    at the threshold.
+    ``budget``: maximum times one chunk may migrate within its round — a
+    chunk at budget stays put even under saturation (oscillation bound).
+    ``min_profit_s``: required net ETA gain per migration (strict), as in
+    :class:`StealingConfig`.
+    """
+
+    guard: float = 1.0
+    hysteresis: float = 0.5
+    budget: int = 1
+    min_profit_s: float = 0.0
 
 
 @dataclass(frozen=True)
@@ -88,6 +133,9 @@ class Coordinator:
     #: global scheduling layer (DESIGN.md §12): SLO-slack priority,
     #: chunk-boundary preemption and cross-worker work stealing
     stealing: Optional[StealingConfig] = None
+    #: decode-local offload (DESIGN.md §14): migrate queued local prefill
+    #: chunks off a saturated decode worker across the phase boundary
+    offload: Optional[OffloadConfig] = None
     rng: random.Random = field(init=False)
 
     def __post_init__(self):
@@ -100,8 +148,9 @@ class Coordinator:
         self.rebinds = 0
         self.sched = SchedCounters()
         #: (session_id, round_idx, incr_offset, kind, worker_idx) per event,
-        #: kind ∈ local | remote | steal | preempt — the backend-parity
-        #: contract surface (tests/test_runtime_unified).
+        #: kind ∈ local | remote | steal | preempt | migrate — the
+        #: backend-parity contract surface (tests/test_runtime_unified,
+        #: tests/test_multiproc_cluster).
         self.decision_log: List[Tuple[int, int, int, str, Optional[int]]] = []
 
     # -- binding (§3 step 1) ----------------------------------------------
@@ -274,6 +323,129 @@ class Coordinator:
                                       task.incr_offset, "steal", thief.idx))
         return victim, task
 
+    # -- decode-local offload (DESIGN.md §14) -------------------------------
+    def _stall_parts(self, decode_worker, decoding_batch: List):
+        """Fused-step pricing of a decode worker's local prefill backlog
+        under the CURRENT decoding batch: (running-task cost, [(chunk,
+        cost) per queued chunk]).  One pass prices both the saturation
+        signal and the per-chunk stay prefix — this runs at every decode
+        kick."""
+        b = len(decoding_batch)
+        avg_ctx = (sum(s.context_len for s in decoding_batch) / b
+                   if b else 0.0)
+        est = lambda k: self.perf.t_fused(
+            k.l_hist, k.l_incr, b, decode_worker.tp, avg_ctx,
+            decode_worker.speed)
+        run = getattr(decode_worker, "_rt_running_task", None)
+        return (est(run) if run is not None else 0.0,
+                [(k, est(k)) for k in decode_worker.prefill_queue])
+
+    def projected_stall(self, decode_worker, decoding_batch: List) -> float:
+        """Projected decode stall of ``decode_worker``: the time its local
+        prefill backlog (the running task at its full estimate, plus every
+        queued chunk) will occupy the engine, priced as fused steps under
+        the CURRENT decoding batch — the ``T_fused`` family the planner and
+        tuner already invert, so both backends project identically."""
+        run_cost, queued = self._stall_parts(decode_worker, decoding_batch)
+        return run_cost + sum(c for _k, c in queued)
+
+    def plan_offload(self, decode_worker, prefill_workers: List, now: float,
+                     sessions: Dict[int, object], decoding_batch: List):
+        """Revisit Alg. 1 placements on a saturated decode worker: find one
+        queued LOCAL chunk to migrate to the most profitable prefill worker
+        (decode-local offload, DESIGN.md §14).
+
+        Saturation is a schmitt trigger on :meth:`projected_stall`: engage
+        above ``guard * itl_thres`` (high water), then keep migrating until
+        the stall drains below ``hysteresis * guard * itl_thres`` (low
+        water) — the band keeps a worker hovering at the threshold from
+        shedding and re-accreting marginal chunks every boundary.  A chunk
+        that has already migrated ``budget`` times this round stays put.
+
+        Migration-profitability condition (strict): accept candidate ``k``
+        for destination ``w`` iff
+
+            stay = fused-drain(d ahead of k) + T_fused(k; d, batch)
+            move = drain(w) + T_kv(l_hist; d -> w) + T_pre(k; w)
+                   + T_kv(l_incr; w -> d)
+            stay - move > min_profit_s
+
+        The two T_kv terms are what local execution gets for free — the
+        full KV-locality penalty of crossing the phase boundary: the
+        destination must lazily re-read the history from ``decode_worker``
+        AND write the increment back (charged 0 when the session's chunk
+        chain already lives on ``w``).  Returns (task, dest) or None.
+        """
+        off = self.offload
+        if off is None:
+            return None
+        hi = off.guard * self.routing.itl_thres
+        lo = off.hysteresis * hi
+        run_cost, queued = self._stall_parts(decode_worker, decoding_batch)
+        stall = run_cost + sum(c for _k, c in queued)
+        hot = getattr(decode_worker, "_rt_offload_hot", False)
+        if stall <= (lo if hot else hi):
+            # below the governing water mark: disengage — evaluated even
+            # with an empty queue, so a worker never stays "hot" across an
+            # idle period and sheds the next lone chunk spuriously
+            decode_worker._rt_offload_hot = False
+            return None
+        if not queued:
+            return None        # stalled on the running task alone: nothing
+        decode_worker._rt_offload_hot = True       # to shed
+        # per-chunk stay costs are destination-independent: the single
+        # _stall_parts pass above priced them once, not once per worker
+        ahead = run_cost
+        chunks: List[Tuple[PrefillTask, float, object]] = []
+        examined = False
+        for k, cost in queued:
+            stay = ahead + cost
+            ahead = stay
+            s = sessions.get(k.session_id)
+            if s is None or k.gen != getattr(s, "_rt_gen", 0):
+                continue                # superseded by a rebind
+            examined = True
+            if k.migrations >= off.budget:
+                continue                # oscillation bound: chunk is pinned
+            chunks.append((k, stay, s))
+        best: Optional[Tuple[float, PrefillTask, object]] = None
+        for w in prefill_workers:
+            if not w.alive:
+                continue
+            drain = sum(self.perf.t_pre(k.l_hist, k.l_incr, w.tp, w.speed)
+                        for k in w.prefill_queue)
+            mine = getattr(w, "_rt_running_task", None)
+            if mine is not None:
+                drain += self.perf.t_pre(mine.l_hist, mine.l_incr, w.tp,
+                                         w.speed)
+            for k, stay, s in chunks:
+                move_read = 0.0
+                if (k.l_hist > 0 and getattr(s, "_rt_chain_worker", None)
+                        != ("prefill", w.idx)):
+                    move_read = self.perf.t_kv(k.l_hist, decode_worker.tp,
+                                               w.tp)
+                move = (drain + move_read
+                        + self.perf.t_pre(k.l_hist, k.l_incr, w.tp, w.speed)
+                        + self.perf.t_kv(k.l_incr, w.tp, decode_worker.tp))
+                profit = stay - move
+                if profit > off.min_profit_s and (
+                        best is None or profit > best[0]):
+                    best = (profit, k, w)
+        if best is None:
+            if examined:
+                self.sched.offload_rejected += 1
+            # nothing profitable (or every chunk at budget): disengage so
+            # the scan does not re-run at every boundary while saturated
+            decode_worker._rt_offload_hot = False
+            return None
+        _, task, dest = best
+        self.sched.migrations += 1
+        self.sched.migrated_tokens += task.l_incr
+        if self.record_decisions:
+            self.decision_log.append((task.session_id, task.round_idx,
+                                      task.incr_offset, "migrate", dest.idx))
+        return task, dest
+
     # -- queue ordering (§4.2 / §12) ----------------------------------------
     def order_queue(self, worker, now: float) -> None:
         q = worker.prefill_queue
@@ -285,6 +457,24 @@ class Coordinator:
             # comparison — sort on the time-independent part.)
             q.sort(key=lambda t: t.arrival_time - self.perf.t_pre(
                 t.l_hist, t.l_incr, worker.tp, worker.speed))
+            # Overload refinement (§14, found by the scheduling-oracle
+            # suite): pure least-laxity is longest-job-first among
+            # near-equal arrivals — exactly inverted from the
+            # satisfied-count-maximizing order once deadlines tighten, and
+            # it cascades misses under overload.  Refine the head window
+            # with Alg. 2 (starvation-bounded by ``postponements``); the
+            # laxity sort still sets the macro order and the preemption
+            # comparison in ``note_parked`` stays laxity-based.  Trade-off:
+            # the refinement consults ``now - enqueue_time``, so — unlike
+            # the bare laxity sort — the head order is only guaranteed
+            # identical across the modeled and live backends on
+            # protocol-determined traces (the kind every parity test and
+            # golden pins); drift on timing-dependent traces is bounded to
+            # the w-task window.
+            est = lambda t: self.perf.t_pre(t.l_hist, t.l_incr, worker.tp,
+                                            worker.speed)
+            reorder_queue(q, now, self.routing.ttft_thres, est,
+                          self.reorder_w)
             return
         if self.scheduler in REORDERING:
             est = lambda t: self.perf.t_pre(t.l_hist, t.l_incr, worker.tp,

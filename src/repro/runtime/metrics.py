@@ -27,6 +27,10 @@ class SchedCounters:
     steal_rejected: int = 0    # steal scans where no move was net-positive
     preempts: int = 0          # parked remainders overtaken by higher priority
     stolen_tokens: int = 0     # sum of l_incr over migrated chunks
+    # -- decode-local offload (DESIGN.md §14) ---------------------------
+    migrations: int = 0        # local chunks shipped off a saturated decode
+    migrated_tokens: int = 0   # sum of l_incr over offloaded chunks
+    offload_rejected: int = 0  # saturated scans where no move was profitable
 
 
 def p95(vals: Sequence[float]) -> float:

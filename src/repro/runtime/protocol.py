@@ -35,6 +35,15 @@ charges the KV-locality penalty before accepting).  A stolen task's
 ``enqueue_time`` resets so the lazy-read prefetch overlap restarts on the
 thief — the penalty the Coordinator priced is the one the execution pays.
 
+Decode-local offload (DESIGN.md §14): with an ``OffloadConfig`` on the
+Coordinator, every kick of a decode worker revisits the Alg. 1 placement of
+its queued LOCAL chunks — the one repair direction stealing cannot reach.
+When the projected stall (``T_fused`` over running + queued chunks under
+the current batch) trips the guard, queued chunks migrate to prefill
+workers (``migrate`` decision events), paying the full KV-locality penalty;
+their parked ``_rt_rest`` remainders re-dispatch at join time through the
+normal routing path, crossing the phase boundary with them.
+
 Session objects are duck-typed (core ``Session`` or serving ``LiveSession``)
 and gain runtime-managed fields: ``state`` ∈ arriving | prefill_wait |
 decoding | env | done | dropped, a rebind generation counter (stale events
@@ -103,6 +112,7 @@ class ServingRuntime:
     def _init_worker(self, w) -> None:
         w._running = False
         w._rt_running_task = None       # in-flight prefill (steal planning)
+        w._rt_offload_hot = False       # offload schmitt trigger state (§14)
         if not hasattr(w, "util_busy_s"):
             w.util_busy_s = 0.0
         if not hasattr(w, "tasks_done"):
@@ -238,7 +248,15 @@ class ServingRuntime:
 
     # -- worker advance: prefill first (priority), else decode --------------
     def _kick(self, w) -> None:
-        if not w.alive or w._running:
+        if not w.alive:
+            return
+        if w.kind == "decode":
+            # decode-local offload (§14): every kick of a decode worker —
+            # an enqueue or a chunk boundary — revisits the Alg. 1
+            # placement of its queued local chunks.  Runs even while the
+            # worker executes: queued chunks can leave mid-step.
+            self._try_offload(w)
+        if w._running:
             return
         while w.prefill_queue:
             self.coordinator.order_queue(w, self.now)
@@ -331,6 +349,40 @@ class ServingRuntime:
         task.routed_to = f"remote:{w.idx}"
         w.prefill_queue.append(task)
         return True
+
+    # -- decode-local offload (DESIGN.md §14) --------------------------------
+    def _try_offload(self, d) -> None:
+        """Migrate queued local prefill chunks off a saturated decode
+        worker onto prefill workers — the first placement revisit that
+        crosses the prefill/decode phase boundary.  The Coordinator owns
+        the policy (saturation trigger, hysteresis, budget, profit gate);
+        this loop executes accepted moves one at a time, re-projecting the
+        stall after each, until the plan disengages."""
+        if self.coordinator.offload is None or not d.alive:
+            return
+        while True:
+            batch = [b for b in self.backend.attached(d)
+                     if getattr(b, "state", "") == "decoding"]
+            plan = self.coordinator.plan_offload(
+                d, self.prefill_workers, self.now, self.sessions, batch)
+            if plan is None:
+                return
+            task, w = plan
+            d.prefill_queue.remove(task)
+            s = self.sessions[task.session_id]
+            task.migrations += 1
+            try:
+                self.backend.on_migrate(task, s, d, w)
+            except WorkerDiedError as e:
+                # destination died mid-handoff (real SIGKILL under the proc
+                # transport): the chunk re-enters the standard recovery
+                # path — the failure handler re-routes it like an orphan
+                self._on_rpc_death(e, w, task, s)
+                continue
+            task.enqueue_time = self.now    # lazy-read overlap restarts
+            task.routed_to = f"remote:{w.idx}"
+            w.prefill_queue.append(task)
+            self._kick(w)
 
     def _steal_scan(self) -> None:
         """A queue just grew: give every drained prefill worker a chance to

@@ -35,6 +35,7 @@ from repro.runtime import (
     ChunkTuner,
     Coordinator,
     LiveBackend,
+    OffloadConfig,
     ServingRuntime,
     StealingConfig,
     mean,
@@ -65,7 +66,9 @@ class LiveResult:
     wall_time: float
     steals: int = 0               # §12 counters (0 when stealing disabled)
     preempts: int = 0
+    migrations: int = 0           # §14 counter (0 when offload disabled)
     kv_steal_bytes: int = 0       # history re-read payload from steals
+    kv_migrate_bytes: int = 0     # history re-read payload from offloads
     transport: str = "inproc"     # §13: which execution transport ran
     kv_transfer_bytes: int = 0    # measured bytes over the RPC KV path
     kv_transfer_ms: float = 0.0   # measured wall time of those transfers
@@ -82,6 +85,9 @@ class LiveCluster:
                  decode_chunk_tokens: Sequence[int] = (),
                  work_stealing: bool = False, steal_watermark: int = 0,
                  steal_min_profit_s: float = 0.0, preemption: bool = True,
+                 decode_offload: bool = False, offload_guard: float = 1.0,
+                 offload_hysteresis: float = 0.5, offload_budget: int = 1,
+                 offload_min_profit_s: float = 0.0,
                  transport: str = "inproc", rpc_timeout_s: float = 180.0):
         if transport not in TRANSPORTS:
             raise ValueError(f"unknown transport {transport!r}; "
@@ -151,12 +157,17 @@ class LiveCluster:
                                    min_profit_s=steal_min_profit_s,
                                    preemption=preemption)
                     if work_stealing else None)
+        offload = (OffloadConfig(guard=offload_guard,
+                                 hysteresis=offload_hysteresis,
+                                 budget=offload_budget,
+                                 min_profit_s=offload_min_profit_s)
+                   if decode_offload else None)
         self.coordinator = Coordinator(
             perf=self.perf,
             routing=RoutingConfig(ttft_thres=self.slo.ttft_thres,
                                   itl_thres=self.slo.itl_thres),
             scheduler=scheduler, seed=seed, chunk_tuner=tuner,
-            stealing=stealing)
+            stealing=stealing, offload=offload)
         self.runtime = ServingRuntime(
             LiveBackend(self.perf, model_kv_time=model_kv_time),
             self.coordinator, self.prefill_workers, self.decode_workers,
@@ -246,8 +257,11 @@ class LiveCluster:
             wall_time=wall,
             steals=self.coordinator.sched.steals,
             preempts=self.coordinator.sched.preempts,
+            migrations=self.coordinator.sched.migrations,
             kv_steal_bytes=getattr(self.runtime.backend,
                                    "kv_steal_bytes", 0),
+            kv_migrate_bytes=getattr(self.runtime.backend,
+                                     "kv_migrate_bytes", 0),
             transport=self.transport,
             kv_transfer_bytes=kv.bytes_moved if kv else 0,
             kv_transfer_ms=kv.ms if kv else 0.0,

@@ -121,6 +121,32 @@ def steal_handoff(cfg: ModelConfig, task, session, src_worker,
     return cfg.session_state_bytes(task.l_hist)
 
 
+def migrate_handoff(cfg: ModelConfig, task, session, src_worker,
+                    dst_worker) -> int:
+    """Byte accounting for a queued LOCAL prefill chunk migrating from a
+    saturated decode worker to a prefill worker (decode-local offload,
+    DESIGN.md §14).
+
+    The phase-boundary twin of :func:`steal_handoff`: nothing materialized
+    moves at migration time — the canonical KV stays on the bound decode
+    worker, and when the chunk executes on the destination the history is
+    lazily pulled (``extract_range`` / ``kv_get``) and the increment is
+    written back (``insert_range`` / ``kv_put``): under the proc transport
+    both legs are real bytes over the RPC socket, measured by
+    :class:`TransportKVPath`.  This returns the history payload the
+    destination must now re-read — the ``t_kv(l_hist)`` penalty
+    ``plan_offload`` charged when it accepted the move.  Local execution
+    would have paid neither leg, which is exactly why the Coordinator only
+    migrates when the decode side is saturated.
+
+    The byte accounting itself is the steal formula (one definition, so
+    the two counters cannot drift); what distinguishes migration — the
+    phase boundary, and a destination death propagating instead of being
+    swallowed — lives in the callers.
+    """
+    return steal_handoff(cfg, task, session, src_worker, dst_worker)
+
+
 class TransportKVPath:
     """Measured KV movement between worker *processes* (DESIGN.md §13).
 

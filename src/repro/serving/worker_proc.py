@@ -61,6 +61,7 @@ from repro.serving.kv_transfer import (
     _numpy_tree,
     extract_range,
     insert_range,
+    migrate_handoff,
     reshard,
     steal_handoff,
     transfer_bytes,
@@ -141,7 +142,13 @@ def _prefill_handlers(worker):                       # pragma: no cover — runs
         task = _chunk_task(np.empty(0, np.int32), l_hist)
         return int(steal_handoff(worker.engine.cfg, task, None, None, worker))
 
-    return {"prefill_chunk": prefill_chunk, "steal_handoff": do_steal_handoff}
+    def do_migrate_handoff(l_hist):
+        task = _chunk_task(np.empty(0, np.int32), l_hist)
+        return int(migrate_handoff(worker.engine.cfg, task, None, None,
+                                   worker))
+
+    return {"prefill_chunk": prefill_chunk, "steal_handoff": do_steal_handoff,
+            "migrate_handoff": do_migrate_handoff}
 
 
 def _decode_handlers(worker):                        # pragma: no cover — runs
@@ -338,6 +345,14 @@ class ProcPrefillWorker(_ProcWorkerBase):
             # thief died between plan and handoff — account locally; the
             # runtime discovers the death on its next engine call
             return steal_handoff(self.cfg, task, session, None, self)
+
+    def migrate_handoff(self, task: PrefillTask, session=None) -> int:
+        # unlike steal_handoff, a WorkerDiedError here PROPAGATES: at this
+        # point the chunk has already left the decode worker's queue, so
+        # the runtime must learn of the death NOW and re-route the chunk
+        # through the standard recovery path (the chaos suite SIGKILLs the
+        # destination exactly here)
+        return int(self._call("migrate_handoff", l_hist=int(task.l_hist)))
 
 
 class ProcDecodeWorker(_ProcWorkerBase, SlotBookkeeping):

@@ -28,6 +28,7 @@ from repro.serving.engine import Engine, chunk_limit
 from repro.serving.kv_transfer import (
     extract_range,
     insert_range,
+    migrate_handoff,
     reshard,
     steal_handoff,
     transfer_bytes,
@@ -141,6 +142,13 @@ class LivePrefillWorker(WorkerSchedState):
         """A queued chunk migrated onto this worker (it is the thief):
         account the history payload it must now lazily re-read (§12)."""
         return steal_handoff(self.engine.cfg, task, session, None, self)
+
+    def migrate_handoff(self, task: PrefillTask,
+                        session: Optional[LiveSession] = None) -> int:
+        """A local chunk was offloaded here from a saturated decode worker
+        (§14): account the history payload this worker must lazily pull
+        across the phase boundary before the chunk can run."""
+        return migrate_handoff(self.engine.cfg, task, session, None, self)
 
     def execute(self, task: PrefillTask, session: LiveSession,
                 history_extract: Optional[Dict] = None,

@@ -1,6 +1,8 @@
 import os
 import sys
 
+import pytest
+
 # Tests run on the real single CPU device (the dry-run sets its own
 # XLA_FLAGS in a separate process; never here).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -8,3 +10,17 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax  # noqa: E402
 
 jax.config.update("jax_platform_name", "cpu")
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--regen-golden", action="store_true", default=False,
+        help="rewrite the pinned decision logs under tests/golden/ from "
+             "this run's output, then assert against the fresh copy — "
+             "golden updates stay deliberate, reviewable one-liners "
+             "(see tests/golden/README.md)")
+
+
+@pytest.fixture
+def regen_golden(request) -> bool:
+    return request.config.getoption("--regen-golden")

@@ -41,6 +41,23 @@ pytestmark = pytest.mark.multiproc
 
 GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
                       "multiproc_decision_log.json")
+GOLDEN_OFFLOAD = os.path.join(os.path.dirname(__file__), "golden",
+                              "multiproc_offload_decision_log.json")
+
+
+def _check_golden(path, got, regen, note):
+    """Assert ``got`` against the pinned log at ``path``; with
+    ``--regen-golden`` rewrite the file first (a deliberate, reviewable
+    one-liner — see tests/golden/README.md)."""
+    if regen:
+        with open(path, "w") as fh:
+            json.dump({"README": note, "decision_log": got}, fh, indent=1)
+    with open(path) as fh:
+        want = [tuple(e) for e in json.load(fh)["decision_log"]]
+    assert [tuple(e) for e in got] == want, (
+        f"decision log drifted from {os.path.relpath(path)} — if the "
+        "schedule change is intentional, regenerate with --regen-golden "
+        "(tests/golden/README.md)")
 
 #: the seeded parity trace — keep in lockstep with the golden file.  The
 #: arrival gap exceeds any measured engine duration, so the event order
@@ -116,17 +133,16 @@ def test_transport_parity_on_seeded_trace(live_cfg):
     assert a["result"].kv_transfer_bytes == 0
 
 
-def test_decision_log_matches_golden(live_cfg):
+def test_decision_log_matches_golden(live_cfg, regen_golden):
     """Golden regression: the parity trace's decision log is committed —
     schedule drift (routing, chunk splitting, rng use) fails loudly here
     instead of silently invalidating cross-transport comparisons."""
     got = _run_parity_trace(live_cfg, "inproc")["log"]
-    with open(GOLDEN) as fh:
-        want = [tuple(e) for e in json.load(fh)["decision_log"]]
-    assert got == want, (
-        "decision log drifted from tests/golden/multiproc_decision_log.json"
-        " — if the schedule change is intentional, regenerate the golden"
-        " file (see its README key)")
+    _check_golden(GOLDEN, got, regen_golden,
+                  "Golden decision log for the multiproc parity trace "
+                  "(PARITY/PARITY_CLUSTER). Regenerate ONLY for an "
+                  "intentional schedule change: pytest -k golden "
+                  "--regen-golden (tests/golden/README.md).")
 
 
 def test_transport_parity_under_contention(live_cfg):
@@ -158,6 +174,121 @@ def test_transport_parity_under_contention(live_cfg):
     assert chunks_i == chunks_p
     assert toks_i == toks_p
     assert mem_i == mem_p == [0]
+
+
+# ---------------------------------------------------------------------------
+# decode-local offload: transport parity + golden (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+#: decode-saturated seeded trace: every session arrives at t=0, so ALL
+#: scheduling decisions — the local routes and the offload migrations they
+#: trigger — happen at logical time zero, before the first measured engine
+#: duration can influence event order.  Like PARITY, that makes the
+#: decision-log ORDER protocol-determined (stable across machines and
+#: transports); unlike PARITY it drives the §14 path: local-first routing
+#: (alpha<0 disables the remote-slack gate, huge beta always grants local)
+#: stacks every prefill onto the single decode worker, whose projected
+#: stall then trips the offload guard and sheds queued chunks to the
+#: prefill workers — `migrate` events with real KV write-backs over RPC.
+#: The prefill side runs at 4x speed so every planned migration is
+#: decisively profitable: the decode queue fully drains at t=0 (a chunk
+#: REJECTED at t=0 would linger and migrate later, at a measured — hence
+#: transport-dependent — boundary, which is exactly what a golden cannot
+#: pin).
+SATURATED = dict(num_sessions=6, rounds=1, prefill_len=24, decode_len=3,
+                 arrival_gap=0.0)
+SATURATED_CLUSTER = dict(n_prefill=2, n_decode=1, max_slots=8, max_len=128,
+                         scheduler="ampd", seed=0, profile=False,
+                         chunk_tokens=32, decode_offload=True)
+SATURATED_PREFILL_SPEED = 4.0
+
+
+def _saturated_cluster(live_cfg, transport, **kw):
+    from repro.core.routing import local_first_routing
+    cl = _cluster(live_cfg, transport, slo=SLOSpec(10.0, 1e-3),
+                  **{**SATURATED_CLUSTER, **kw})
+    cl.coordinator.routing = local_first_routing(ttft_thres=10.0,
+                                                 itl_thres=1e-3)
+    cl.coordinator.record_decisions = True
+    for i in range(SATURATED_CLUSTER["n_prefill"]):
+        cl.set_straggler("prefill", i, SATURATED_PREFILL_SPEED)
+    return cl
+
+
+def _run_saturated_trace(live_cfg, transport):
+    from repro.serving import make_live_sessions
+    cl = _saturated_cluster(live_cfg, transport)
+    try:
+        sessions = make_live_sessions(live_cfg, **SATURATED)
+        result = cl.run_trace(sessions)
+        return dict(
+            log=list(cl.coordinator.decision_log),
+            tokens=[list(map(int, s.generated)) for s in sessions],
+            mem=[d.mem_tokens for d in cl.decode_workers],
+            finished=all(s.finish_time is not None for s in sessions),
+            result=result,
+        )
+    finally:
+        cl.close()
+
+
+def test_offload_transport_parity_on_saturated_trace(live_cfg):
+    """`migrate` joins the parity contract: the saturated trace must
+    produce IDENTICAL decision logs (routes + migrations) on both
+    transports, byte-identical tokens, conserved accounting — and the proc
+    run's migrated chunks must move real KV bytes over the wire."""
+    a = _run_saturated_trace(live_cfg, "inproc")
+    b = _run_saturated_trace(live_cfg, "proc")
+    assert a["finished"] and b["finished"]
+    assert a["log"] == b["log"]
+    assert any(k[3] == "migrate" for k in a["log"]), (
+        "saturated trace no longer triggers decode-local offload")
+    assert a["tokens"] == b["tokens"]
+    assert a["mem"] == b["mem"] == [0]
+    assert a["result"].migrations == b["result"].migrations >= 1
+    # offloaded chunks write their increments back over the RPC KV path
+    assert b["result"].kv_transfer_bytes > 0
+    assert b["result"].kv_transfer_ms > 0.0
+    assert a["result"].kv_transfer_bytes == 0
+
+
+def test_offload_decision_log_matches_golden(live_cfg, regen_golden):
+    """The saturated trace's log — including its `migrate` events — is
+    pinned: offload-policy drift (guard, hysteresis, profit pricing,
+    destination choice) fails loudly here."""
+    got = _run_saturated_trace(live_cfg, "inproc")["log"]
+    _check_golden(GOLDEN_OFFLOAD, got, regen_golden,
+                  "Golden decision log for the decode-saturated offload "
+                  "parity trace (SATURATED/SATURATED_CLUSTER). Regenerate "
+                  "ONLY for an intentional schedule change: pytest -k "
+                  "golden --regen-golden (tests/golden/README.md).")
+
+
+def test_chaos_sigkill_destination_mid_migrate_handoff(live_cfg):
+    """SIGKILL the offload DESTINATION so the `migrate_handoff` RPC itself
+    fails: the chunk has already left the decode worker's queue, so the
+    WorkerDiedError must propagate (not be swallowed like a steal handoff)
+    and push the chunk through the standard recovery path — re-routed,
+    re-prefilled, joined exactly once."""
+    from repro.serving import make_live_sessions
+    cl = _saturated_cluster(live_cfg, "proc", offload_budget=2)
+    audit = _audit(cl)
+    try:
+        sessions = make_live_sessions(live_cfg, **SATURATED)
+        # the first migration deterministically targets prefill worker 0
+        # (equal drains; strict-> profit keeps the first scanned) — kill it
+        # unannounced, so the death surfaces inside the handoff RPC
+        os.kill(cl.runtime.worker_by_id("prefill", 0).proc.pid,
+                signal.SIGKILL)
+        cl.run_trace(sessions)
+        assert not cl.runtime.worker_by_id("prefill", 0).alive
+        # migrations happened, and the survivor (or the decode worker
+        # itself) absorbed the re-routed chunk without double-joining
+        assert cl.coordinator.sched.migrations >= 1
+        assert cl.coordinator.rebinds == 0     # decode side untouched
+        _check_invariants(cl, audit, sessions, decode_failure=False)
+    finally:
+        cl.close()
 
 
 def test_proc_transport_measures_kv_path(live_cfg):

@@ -1,17 +1,24 @@
-"""Property-based runtime conservation suite (DESIGN.md §12).
+"""Property-based runtime conservation suite (DESIGN.md §12, §14).
 
 Under random interleavings of arrivals, worker failures, stragglers,
-chunking, cross-worker stealing and SLO-priority preemption, the unified
-runtime must conserve its protocol invariants:
+chunking, cross-worker stealing, SLO-priority preemption and decode-local
+offload, the unified runtime must conserve its protocol invariants:
 
   * every routed chunk completes (joins the decode worker) EXACTLY once —
-    stealing moves queue entries, it never duplicates or drops them;
+    stealing and offload migration move queue entries, they never
+    duplicate or drop them, even when remainders cross the prefill/decode
+    phase boundary;
   * every decode worker's ``mem_tokens`` returns to 0 once the trace
     drains (dead workers are zeroed by the failure handler);
   * no session's rounds ever reorder: final-chunk joins advance round
     indices strictly within a rebind generation (a rebind may legitimately
     replay the in-flight round);
-  * sessions are only dropped when a decode failure was injected.
+  * sessions are only dropped when a decode failure was injected;
+  * no oscillation: a chunk migrates off a decode worker at most
+    ``OffloadConfig.budget`` times within its round (checked per-chunk on
+    the decision log in failure-free cases; a rebind legitimately resets
+    the chunk), and the hysteresis band keeps a worker hovering between
+    the low and high water marks from shedding chunks at all.
 
 Runs against BOTH backends: the modeled backend under the property
 harness (hypothesis when installed, a seeded fallback sweep otherwise —
@@ -19,6 +26,7 @@ CI installs hypothesis, the sandbox image may not), and the live JAX
 backend over a small seed sweep with real engines.
 """
 import random
+import types
 from collections import Counter, defaultdict
 
 import pytest
@@ -32,8 +40,15 @@ from repro.core import (
     SLOSpec,
     WorkerGroup,
 )
-from repro.core.routing import RoutingConfig
-from repro.runtime import LiveBackend, ModeledBackend
+from repro.core.routing import RoutingConfig, local_first_routing
+from repro.core.simulator import SimWorker
+from repro.core.types import PrefillTask
+from repro.runtime import (
+    Coordinator,
+    LiveBackend,
+    ModeledBackend,
+    OffloadConfig,
+)
 from repro.workloads import make_trace
 
 try:
@@ -43,6 +58,10 @@ except ModuleNotFoundError:          # image without hypothesis: seeded sweep
     HAVE_HYPOTHESIS = False
 
 N_EXAMPLES = 15
+
+
+def _perf() -> PerfModel:
+    return PerfModel(get_config("qwen3-32b"))
 
 
 def property_seeds(fn):
@@ -117,6 +136,18 @@ def assert_invariants(runtime, audit, sessions, decode_workers,
                 assert r1 >= r0, (sid, seq)
     assert runtime.coordinator.sched.steals >= 0
     assert runtime.coordinator.sched.preempts >= 0
+    assert runtime.coordinator.sched.migrations >= 0
+
+
+def assert_no_oscillation(coordinator, budget: int):
+    """Explicit §14 no-oscillation property: a chunk migrates at most
+    ``budget`` times within its round.  Checked on the decision log, so
+    only valid for failure-free runs (a rebind/re-dispatch legitimately
+    resets a chunk's identity and budget)."""
+    migrates = Counter((sid, r, off) for sid, r, off, kind, _w
+                       in coordinator.decision_log if kind == "migrate")
+    over = {k: n for k, n in migrates.items() if n > budget}
+    assert not over, f"chunks migrated past the budget ({budget}): {over}"
 
 
 # ---------------------------------------------------------------------------
@@ -151,6 +182,9 @@ def _modeled_case(rng: random.Random) -> dict:
             ["ampd", "ampd-chunked"]),
         preemption=rng.random() < 0.7,
         watermark=rng.randint(0, 1),
+        offload=rng.random() < 0.6,
+        offload_guard=rng.choice([0.2, 1.0]),
+        offload_budget=rng.randint(1, 2),
         failures=failures,
         straggler=straggler,
         decode_failure=any(k == "decode" for _, k, _i in failures),
@@ -170,16 +204,22 @@ def test_modeled_conservation_under_interleavings(seed):
                     chunk_tokens=case["chunk"], seed=seed,
                     work_stealing=True, steal_watermark=case["watermark"],
                     preemption=case["preemption"],
+                    decode_offload=case["offload"],
+                    offload_guard=case["offload_guard"],
+                    offload_budget=case["offload_budget"],
                     routing=RoutingConfig(ttft_thres=slo.ttft_thres,
                                           itl_thres=slo.itl_thres))
     sim = Simulation(perf, dep, ss, slo, cfg, failures=case["failures"],
                      straggler=case["straggler"])
+    sim.coordinator.record_decisions = True
     audit = AuditModeledBackend(perf, kv_overlap=True)
     audit.audit_init()
     sim.runtime.backend = audit
     sim.run()
     assert_invariants(sim.runtime, audit, ss, sim.decode_workers,
                       case["decode_failure"])
+    if not case["failures"]:
+        assert_no_oscillation(sim.coordinator, case["offload_budget"])
 
 
 # ---------------------------------------------------------------------------
@@ -191,16 +231,180 @@ def live_cfg():
     return get_config("qwen2.5-14b").reduced()
 
 
+# ---------------------------------------------------------------------------
+# Decode-local offload (§14): hysteresis band, budget, handoff death
+# ---------------------------------------------------------------------------
+
+def _offload_setup(n_queued: int, *, guard_fused: float = 2.5,
+                   hysteresis: float = 0.5, budget: int = 1, l_incr=256):
+    """One decode worker with ``n_queued`` equal local chunks, one fast
+    prefill worker, and an OffloadConfig whose high-water mark sits at
+    ``guard_fused`` fused-step estimates."""
+    perf = _perf()
+    f = perf.t_fused(0, l_incr, 0, 4, 0.0)
+    co = Coordinator(
+        perf=perf, routing=RoutingConfig(ttft_thres=3.0, itl_thres=1.0),
+        offload=OffloadConfig(guard=guard_fused * f, hysteresis=hysteresis,
+                              budget=budget))
+    d = SimWorker(0, 4, "decode")
+    w = SimWorker(0, 4, "prefill", speed=8.0)   # migration decisively cheap
+    sessions = {}
+    for sid in range(n_queued):
+        d.prefill_queue.append(PrefillTask(
+            session_id=sid, round_idx=0, l_hist=0, l_incr=l_incr,
+            enqueue_time=0.0, arrival_time=0.0))
+        sessions[sid] = types.SimpleNamespace(decode_worker=0, _rt_gen=0,
+                                              _rt_chain_worker=None)
+    return co, d, w, sessions, f
+
+
+def _drain_plans(co, d, w, sessions):
+    """Execute plan_offload moves until the policy disengages; returns the
+    number of accepted migrations."""
+    moves = 0
+    while True:
+        plan = co.plan_offload(d, [w], 0.0, sessions, [])
+        if plan is None:
+            return moves
+        task, dest = plan
+        assert dest is w
+        d.prefill_queue.remove(task)
+        task.migrations += 1
+        w.prefill_queue.append(task)
+        moves += 1
+        assert moves <= 16, "offload plan never disengaged"
+
+
+def test_offload_hysteresis_band():
+    """Schmitt-trigger semantics: below the high-water mark nothing moves
+    (even inside the band); once triggered, migration continues THROUGH
+    the band until the stall drains below the low-water mark."""
+    # stall = 2f, inside the [1.25f, 2.5f] band -> no churn
+    co, d, w, sessions, f = _offload_setup(2)
+    # the saturation signal itself: fused-step pricing of the local backlog
+    assert co.projected_stall(d, []) == pytest.approx(2 * f)
+    assert co.plan_offload(d, [w], 0.0, sessions, []) is None
+    assert co.sched.migrations == 0 and not d._rt_offload_hot
+    # stall = 4f > 2.5f -> engage, and keep shedding at 3f and 2f (both
+    # below the trigger, above the low-water mark) until 1f <= 1.25f
+    co, d, w, sessions, f = _offload_setup(4)
+    assert _drain_plans(co, d, w, sessions) == 3
+    assert len(d.prefill_queue) == 1
+    assert not d._rt_offload_hot
+    assert co.sched.migrations == 3
+    # the survivor stays put on a re-scan (band again)
+    assert co.plan_offload(d, [w], 0.0, sessions, []) is None
+
+
+def test_offload_budget_pins_chunks():
+    """A chunk at its migration budget never moves again, even under
+    saturation — the oscillation bound."""
+    co, d, w, sessions, f = _offload_setup(4, budget=1)
+    for k in d.prefill_queue[:2]:
+        k.migrations = 1                 # already moved once this round
+    # only the two fresh chunks are eligible; the plan sheds exactly those
+    assert _drain_plans(co, d, w, sessions) == 2
+    assert [k.migrations for k in d.prefill_queue] == [1, 1]
+    assert co.sched.migrations == 2
+    # saturated (stall = 2f... with guard at 1.0f) but every chunk pinned:
+    co, d, w, sessions, f = _offload_setup(2, guard_fused=1.0, budget=1)
+    for k in d.prefill_queue:
+        k.migrations = 1
+    assert co.plan_offload(d, [w], 0.0, sessions, []) is None
+    assert co.sched.offload_rejected == 1
+    assert co.sched.migrations == 0
+
+
+def test_migrate_handoff_death_recovers_and_pins_budget(live_cfg):
+    """Deterministic §14 chaos twin (inproc): the offload DESTINATION dies
+    inside ``migrate_handoff`` — the same WorkerDiedError the proc RPC
+    layer raises.  The chunk must re-enter the standard recovery path
+    (re-routed, prefilled exactly once, no double-join), and with the only
+    prefill worker dead no further migrations may be planned."""
+    from repro.runtime.backend import WorkerDiedError
+    from repro.serving import LiveCluster, make_live_sessions
+
+    cl = LiveCluster(live_cfg, n_prefill=1, n_decode=1, max_slots=8,
+                     max_len=128, scheduler="ampd", slo=SLOSpec(10.0, 1e-3),
+                     seed=0, profile=False, chunk_tokens=32,
+                     decode_offload=True)
+    cl.coordinator.routing = local_first_routing(ttft_thres=10.0,
+                                                 itl_thres=1e-3)
+    cl.coordinator.record_decisions = True
+    audit = AuditLiveBackend(cl.perf, model_kv_time=False)
+    audit.audit_init()
+    cl.runtime.backend = audit
+    orig = audit.on_migrate
+    died = []
+
+    def dying_on_migrate(task, session, src, dst):
+        if not died:
+            died.append((task.session_id, task.incr_offset))
+            raise WorkerDiedError("prefill", dst.idx,
+                                  "injected at migrate_handoff")
+        return orig(task, session, src, dst)
+
+    audit.on_migrate = dying_on_migrate
+    sessions = make_live_sessions(live_cfg, num_sessions=3, rounds=1,
+                                  prefill_len=24, decode_len=3,
+                                  arrival_gap=0.0)
+    cl.run_trace(sessions)
+    assert died, "saturated trace no longer plans a migration"
+    assert not cl.runtime.worker_by_id("prefill", 0).alive
+    assert all(s.finish_time is not None for s in sessions)
+    assert all(d.mem_tokens == 0 for d in cl.decode_workers)
+    assert cl.coordinator.rebinds == 0          # decode side untouched
+    assert_invariants(cl.runtime, audit, sessions, cl.decode_workers,
+                      decode_failure_injected=False)
+    # the planned migration was logged, then the chunk re-routed local;
+    # with no surviving prefill worker no further migration is planned
+    kinds = Counter(k[3] for k in cl.coordinator.decision_log)
+    assert kinds["migrate"] == 1 == cl.coordinator.sched.migrations
+    sid, off = died[0]
+    reroutes = [k for k in cl.coordinator.decision_log
+                if (k[0], k[2], k[3]) == (sid, off, "local")]
+    assert len(reroutes) == 2, "chunk was not re-routed after the death"
+
+
+def test_offload_beats_local_always_under_saturation():
+    """Tiny modeled twin of benchmarks/fig13: on a decode-saturated slice
+    with local-first routing, enabling decode-local offload must migrate
+    work and improve SLO attainment, conserving every session."""
+    perf = _perf()
+    slo = SLOSpec(ttft_thres=6.0, itl_thres=0.15)
+    dep = Deployment((WorkerGroup(4, 2),), (WorkerGroup(4, 2),))
+    local_first = local_first_routing(slo.ttft_thres, slo.itl_thres)
+
+    def arm(offload: bool):
+        ss = make_trace("gaia", num_sessions=12, arrival_rate=2.0, seed=11)
+        for s in ss:
+            s.arrival_time = 0.0         # one burst: decode side saturates
+        cfg = SimConfig(scheduler="ampd-chunked", seed=11,
+                        decode_offload=offload, routing=local_first)
+        return Simulation(perf, dep, ss, slo, cfg).run(), ss
+
+    base, ss0 = arm(False)
+    off, ss1 = arm(True)
+    assert base.migrations == 0 and off.migrations >= 1
+    assert all(s.finish_time is not None for s in ss0 + ss1)
+    assert off.slo_attainment >= base.slo_attainment
+    assert off.p95_ttft <= base.p95_ttft
+
+
 @pytest.mark.parametrize("seed", [0, 1, 2])
 def test_live_conservation_under_interleavings(seed, live_cfg):
     from repro.serving import LiveCluster, make_live_sessions
     rng = random.Random(seed)
     chunk = rng.choice([0, 8])
+    # offload guard in absolute terms: the loose SLO (10 s) keeps routing
+    # permissive, so trigger at guard * itl_thres = 2 ms — within reach of
+    # the reduced engines' fused estimates, exercising §14 live
     cl = LiveCluster(live_cfg, n_prefill=2, n_decode=2, max_slots=4,
                      max_len=128, scheduler="ampd",
                      slo=SLOSpec(10.0, 10.0), seed=seed, profile=False,
                      chunk_tokens=chunk, work_stealing=True,
-                     steal_watermark=rng.randint(0, 1))
+                     steal_watermark=rng.randint(0, 1),
+                     decode_offload=True, offload_guard=2e-4)
     audit = AuditLiveBackend(cl.perf, model_kv_time=False)
     audit.audit_init()
     cl.runtime.backend = audit

@@ -21,7 +21,7 @@ from repro.core import (
     WorkerGroup,
     simulate_deployment,
 )
-from repro.core.routing import RoutingConfig
+from repro.core.routing import RoutingConfig, local_first_routing
 from repro.core.simulator import SimWorker
 from repro.core.types import RoundSpec, Session
 from repro.runtime import Coordinator
@@ -366,3 +366,50 @@ def test_backend_preempt_event_parity(live_cfg):
     assert (sim.coordinator.sched.preempts
             == cl.coordinator.sched.preempts == 1)
     assert all(s.finish_time is not None for s in live_sessions)
+
+
+def test_backend_migrate_event_parity(live_cfg):
+    """Contract parity for the ``migrate`` event kind (DESIGN.md §14):
+    under local-first routing every chunk stacks onto the single decode
+    worker; its projected stall trips the offload guard and queued chunks
+    migrate to the (fast) prefill workers.  Every quantity the plan
+    consults — T_fused projections, drains, the t_kv penalty — prices
+    from the shared PerfModel with all decisions at t=0, so the modeled
+    and live backends must log IDENTICAL routes and migrations."""
+    from repro.serving import LiveCluster, make_live_sessions
+    n_sessions, pf, dc, n_pre = 4, 24, 2, 2
+    speed = 4.0        # fast prefill side: migrations decisively profitable
+    slo = SLOSpec(10.0, 1e-3)
+    routing = local_first_routing(ttft_thres=10.0, itl_thres=1e-3)
+
+    cl = LiveCluster(live_cfg, n_prefill=n_pre, n_decode=1, max_slots=8,
+                     max_len=128, scheduler="ampd", slo=slo, seed=0,
+                     profile=False, chunk_tokens=32, decode_offload=True)
+    cl.coordinator.routing = routing
+    cl.coordinator.record_decisions = True
+    for i in range(n_pre):
+        cl.set_straggler("prefill", i, speed)
+    live_sessions = make_live_sessions(live_cfg, num_sessions=n_sessions,
+                                       rounds=1, prefill_len=pf,
+                                       decode_len=dc, arrival_gap=0.0)
+    cl.run_trace(live_sessions)
+
+    model_sessions = [Session(
+        session_id=i, arrival_time=0.0,
+        rounds=[RoundSpec(prefill_len=pf, decode_len=dc, env_delay=0.0)])
+        for i in range(n_sessions)]
+    dep = Deployment((WorkerGroup(1, n_pre),), (WorkerGroup(1, 1),))
+    sim = Simulation(PerfModel(live_cfg), dep, model_sessions, slo,
+                     SimConfig(scheduler="ampd", seed=0, chunk_tokens=32,
+                               decode_offload=True, routing=routing),
+                     straggler={("prefill", i): speed
+                                for i in range(n_pre)})
+    sim.coordinator.record_decisions = True
+    sim.run()
+
+    assert any(k[3] == "migrate" for k in sim.coordinator.decision_log)
+    assert sim.coordinator.decision_log == cl.coordinator.decision_log
+    assert (sim.coordinator.sched.migrations
+            == cl.coordinator.sched.migrations >= 1)
+    assert all(s.finish_time is not None for s in live_sessions)
+    assert all(d.mem_tokens == 0 for d in cl.decode_workers)
