@@ -1,0 +1,166 @@
+"""Fig. 14 (beyond-paper): ragged fused chunk+decode megakernel vs the dense
+rectangle — fused-step latency and e2e ITL/SLO on a GAIA-shaped live trace
+at equal resources (DESIGN.md §15).
+
+The dense fused step pays ``max_slots x width`` token rows for
+``width + batch`` useful ones; the packed step pays a shape-bucketed
+``width + batch`` stream.  Two layers of evidence:
+
+  * **microbench** (per-step): dense vs packed fused-step wall time at the
+    standard piggyback shape, with the roofline-style useful-work fractions
+    (useful tokens / executed token rows) — the compute-bound speedup limit
+    is ``dense_rows / packed_rows``, and the measured speedup must not
+    exceed it (sanity: the packing removes work, it cannot invent FLOPs).
+  * **e2e** (trace): the SAME GAIA-shaped session trace through
+    ``LiveCluster(packed=False)`` and ``LiveCluster(packed=True)`` on
+    identical resources — fused-step ms, ITL, SLO attainment, uploads.
+
+The ``--smoke`` gate in ``benchmarks/run.py`` asserts the packed arm
+completes the trace with token parity against the dense arm and that the
+microbench speedup stays within its roofline bound.
+"""
+import numpy as np
+
+import benchmarks.common  # noqa: F401  (sys.path side effect for src/)
+from benchmarks.fig12_transport import live_sessions_from_trace
+from repro.configs import get_config
+from repro.core.types import SLOSpec
+
+
+def microbench(model="qwen3-32b", max_slots=8, width=64, ctx=32, seed=0):
+    """Per-step dense vs packed numbers + roofline useful-work fractions."""
+    from benchmarks.kernel_bench import fused_step_bench
+
+    r = fused_step_bench(arch=model, max_slots=max_slots, width=width,
+                         ctx=ctx, seed=seed)
+    useful = r["useful_tokens"]
+    r["useful_frac_dense"] = round(useful / r["dense_token_rows"], 4)
+    r["useful_frac_packed"] = round(useful / r["packed_tokens"], 4)
+    # compute-bound limit of the packing win: the ratio of executed rows
+    r["roofline_bound"] = round(r["dense_token_rows"] / r["packed_tokens"], 2)
+    r["speedup"] = round(r["speedup"], 2)
+    return r
+
+
+def _run_arm(cfg, packed, sessions, *, n_prefill, n_decode, seed):
+    from repro.serving import LiveCluster
+
+    # colocated scheduling: EVERY prefill chunk is a fused step on the
+    # decode worker — deterministic routing puts the same fused work on
+    # both arms, so fused_ms_per_step compares like-for-like (adaptive
+    # routing would let the arms' different timing profiles diverge)
+    cl = LiveCluster(cfg, n_prefill=n_prefill, n_decode=n_decode,
+                     max_slots=8, max_len=128, scheduler="vllm",
+                     slo=SLOSpec(2.0, 0.2), seed=seed, profile=False,
+                     chunk_tokens=16, packed=packed)
+    try:
+        # warm the jit caches of whichever step family this arm uses —
+        # otherwise first-occurrence compiles (seconds on CPU) dominate the
+        # measured fused-step and ITL numbers for both arms
+        warm = live_sessions_from_trace(cfg, trace="gaia", num_sessions=2,
+                                        seed=seed + 17)
+        for s in warm:
+            s.session_id += 10_000
+            s.arrival_time = 0.0
+        cl.run_trace(warm)
+        if packed:
+            # the packed jit cache is keyed on (P, n_out) shape buckets; the
+            # trace warmup above does not necessarily touch every bucket the
+            # measured trace will, so compile them against a scratch cache
+            rng_w = np.random.default_rng(0)
+            for w in cl.decode_workers:
+                if not getattr(w, "packed", False):
+                    continue
+                eng = w.engine
+                for chunk_len in (5, 13, 17):
+                    # scratch cache MUST match the live slot count — the
+                    # packed jit cache is keyed on (P, n_out) but still
+                    # retraces on a different cache batch dimension
+                    segs = [(0, rng_w.integers(0, cfg.vocab_size, chunk_len)
+                             .astype(np.int32))]
+                    segs += [(i, rng_w.integers(0, cfg.vocab_size, 1)
+                              .astype(np.int32)) for i in (1, 2, 3)]
+                    eng.run_packed(eng.new_cache(w.max_slots), segs)
+        for w in cl.decode_workers:
+            w.fused_steps, w.fused_s = 0, 0.0
+            w.engine.tokens_uploaded = 0
+        for w in cl.prefill_workers:
+            w.engine.tokens_uploaded = 0
+        r = cl.run_trace(sessions)
+        completed = sum(1 for s in sessions if s.finish_time is not None)
+        return {
+            "arm": "packed" if packed else "dense",
+            "arrived": len(sessions),
+            "completed": completed,
+            "fused_steps": r.fused_steps,
+            "fused_ms_per_step": (round(r.fused_ms / r.fused_steps, 2)
+                                  if r.fused_steps else 0.0),
+            "avg_itl_ms": round(r.avg_itl * 1e3, 1),
+            "p95_itl_ms": round(r.p95_itl * 1e3, 1),
+            "avg_ttft_ms": round(r.avg_ttft * 1e3, 1),
+            "slo": round(r.slo_attainment, 3),
+            "tokens_uploaded": r.tokens_uploaded,
+            "wall_s": round(r.wall_time, 2),
+            "tokens": [list(map(int, s.generated)) for s in sessions],
+        }
+    finally:
+        cl.close()
+
+
+def run(model="gemma2-2b", num_sessions=3, n_prefill=1, n_decode=1,
+        seeds=(0,)):
+    """Dense vs packed arms over GAIA-shaped traces; one row per arm with
+    per-seed results aggregated, plus one microbench row."""
+    cfg = get_config(model).reduced()
+    arms = {False: [], True: []}
+    for seed in seeds:
+        for packed in (False, True):
+            # fresh sessions per arm: runs mutate session state
+            sessions = live_sessions_from_trace(cfg, trace="gaia",
+                                                num_sessions=num_sessions,
+                                                seed=seed)
+            arms[packed].append(_run_arm(cfg, packed, sessions,
+                                         n_prefill=n_prefill,
+                                         n_decode=n_decode, seed=seed))
+    rows = []
+    for packed in (False, True):
+        rs = arms[packed]
+        n = len(rs)
+        rows.append({
+            "arm": rs[0]["arm"],
+            "arrived": sum(r["arrived"] for r in rs),
+            "completed": sum(r["completed"] for r in rs),
+            "fused_steps": sum(r["fused_steps"] for r in rs),
+            "fused_ms_per_step": round(
+                sum(r["fused_ms_per_step"] for r in rs) / n, 2),
+            "avg_itl_ms": round(sum(r["avg_itl_ms"] for r in rs) / n, 1),
+            "p95_itl_ms": round(sum(r["p95_itl_ms"] for r in rs) / n, 1),
+            "avg_ttft_ms": round(sum(r["avg_ttft_ms"] for r in rs) / n, 1),
+            "slo": round(sum(r["slo"] for r in rs) / n, 3),
+            "tokens_uploaded": sum(r["tokens_uploaded"] for r in rs),
+            "wall_s": round(sum(r["wall_s"] for r in rs), 2),
+            "tokens": [t for r in rs for t in r["tokens"]],
+        })
+    rows.append({"arm": "microbench", **microbench(model="qwen3-32b")})
+    return rows
+
+
+def main():
+    rows = run()
+    cols = ["arm", "arrived", "completed", "fused_steps", "fused_ms_per_step",
+            "avg_itl_ms", "p95_itl_ms", "avg_ttft_ms", "slo",
+            "tokens_uploaded", "wall_s"]
+    print(",".join(cols))
+    for r in rows:
+        if r["arm"] == "microbench":
+            print(f"microbench,dense_ms={r['dense_ms']:.2f},"
+                  f"packed_ms={r['packed_ms']:.2f},speedup={r['speedup']}x,"
+                  f"useful_frac {r['useful_frac_dense']}->"
+                  f"{r['useful_frac_packed']},bound={r['roofline_bound']}x")
+            continue
+        print(",".join(str(r[c]) for c in cols))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

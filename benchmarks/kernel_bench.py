@@ -1,6 +1,14 @@
 """Kernel micro-bench: interpret-mode correctness + XLA-path wall times for
 the attention operators at serving-relevant shapes (CPU; TPU wall-times come
-from the roofline terms)."""
+from the roofline terms).
+
+``--smoke`` runs the dense-vs-packed fused-step microbench at the standard
+piggyback shape (1 chunk row + 7 decode rows), writes a JSON artifact, and
+GATES packed >= dense useful-token throughput — the CI teeth of the ragged
+megakernel (DESIGN.md §15).
+"""
+import argparse
+import json
 import os
 import sys
 import time
@@ -9,6 +17,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
 
 from repro.kernels.decode_attn.ops import decode_attention  # noqa: E402
 from repro.kernels.flash_prefill.ops import flash_attention  # noqa: E402
@@ -59,7 +68,100 @@ def run():
     return rows
 
 
-def main():
+def _time_step(fn, n=5):
+    """min-of-n wall time for an engine-step closure (compile excluded)."""
+    out = fn()
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(jax.tree.leaves(out)[0])
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def fused_step_bench(arch="qwen3-32b", max_slots=8, width=64, ctx=32,
+                     repeats=5, seed=0):
+    """Dense rectangle vs ragged packed fused step on the standard piggyback
+    shape: 1 prefill chunk + (max_slots - 1) single-token decode rows."""
+    from repro.configs import get_config
+    from repro.serving.engine import Engine
+
+    cfg = get_config(arch).reduced()
+    eng = Engine(cfg, max_len=max(256, ctx + width + 8),
+                 key=jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    V = cfg.vocab_size
+    cache = eng.new_cache(max_slots)
+    hist = jnp.asarray(rng.integers(0, V, (max_slots, ctx)), jnp.int32)
+    cache, _, _ = eng.run_chunk(cache, hist)
+
+    chunk = np.full((max_slots, width), -1, np.int32)
+    chunk[0] = rng.integers(0, V, width)
+    chunk[1:, 0] = rng.integers(0, V, max_slots - 1)
+
+    def dense():
+        c2 = jax.tree.map(jnp.copy, cache)
+        return eng.run_chunk(c2, jnp.asarray(chunk))
+
+    segs = [(0, chunk[0].astype(np.int32))] + [
+        (i, chunk[i, :1].astype(np.int32)) for i in range(1, max_slots)]
+
+    def packed():
+        c2 = jax.tree.map(jnp.copy, cache)
+        return eng.run_packed(c2, segs)
+
+    useful = width + (max_slots - 1)
+    t_dense = _time_step(dense, repeats)
+    t_packed = _time_step(packed, repeats)
+    return {
+        "arch": arch,
+        "max_slots": max_slots,
+        "width": width,
+        "ctx": ctx,
+        "useful_tokens": useful,
+        "dense_token_rows": max_slots * width,
+        "packed_tokens": eng.packed_bucket(
+            useful + (eng.pack_align - 1) * max_slots),
+        "dense_ms": 1e3 * t_dense,
+        "packed_ms": 1e3 * t_packed,
+        "dense_tok_s": useful / t_dense,
+        "packed_tok_s": useful / t_packed,
+        "speedup": t_dense / t_packed,
+    }
+
+
+def smoke(json_path=None):
+    """CI gate: packed fused step must not lose to the dense rectangle on
+    the piggyback shape.  Returns process exit code."""
+    r = fused_step_bench()
+    print(f"fused_step {r['arch']} slots={r['max_slots']} width={r['width']}:"
+          f" dense {r['dense_ms']:.2f} ms ({r['dense_token_rows']} rows)"
+          f" | packed {r['packed_ms']:.2f} ms ({r['packed_tokens']} packed)"
+          f" | speedup {r['speedup']:.2f}x")
+    ok = r["packed_tok_s"] >= r["dense_tok_s"]
+    r["pass"] = bool(ok)
+    if json_path:
+        with open(json_path, "w") as fh:
+            json.dump(r, fh, indent=1)
+        print(f"wrote {json_path}")
+    if not ok:
+        print("FAIL: packed fused step slower than dense on the piggyback "
+              "shape", file=sys.stderr)
+        return 1
+    print("PASS: packed >= dense useful-token throughput")
+    return 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="dense-vs-packed fused-step gate + JSON artifact")
+    ap.add_argument("--json", default=None, help="artifact path for --smoke")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        raise SystemExit(smoke(args.json))
     rows = run()
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -150,6 +150,47 @@ def smoke(json_path=None) -> int:
            (f"proc kv={proc['kv_bytes']}B/{proc['kv_ms']}ms"
             if proc else "unavailable"))
 
+    _section("smoke: Fig. 14 ragged fused megakernel (packed vs dense)")
+    from benchmarks import fig14_ragged
+    t0 = time.time()
+    try:
+        rows = fig14_ragged.run(num_sessions=2)
+    except Exception as e:  # noqa: BLE001 — either arm failing is a gate fail
+        rows = []
+        failures.append(f"fig14 ragged fused arms did not run: {e!r}")
+    by = {r["arm"]: r for r in rows}
+    dense, packed = by.get("dense"), by.get("packed")
+    micro = by.get("microbench")
+    if dense is not None and packed is not None:
+        for r in (dense, packed):
+            if r["completed"] != r["arrived"]:
+                failures.append(
+                    f"fig14 {r['arm']}: {r['completed']}/{r['arrived']} "
+                    "sessions completed (work lost)")
+        # the packed path must be a pure execution-layer swap: same decisions,
+        # same generated tokens, same number of fused steps as dense
+        if packed.pop("tokens", None) != dense.pop("tokens", None):
+            failures.append("fig14 packed arm generated different tokens "
+                            "than the dense arm")
+        if packed["fused_steps"] != dense["fused_steps"]:
+            failures.append(
+                f"fig14 fused-step count diverged (dense "
+                f"{dense['fused_steps']}, packed {packed['fused_steps']})")
+        if packed["tokens_uploaded"] >= dense["tokens_uploaded"]:
+            failures.append(
+                f"fig14 packed arm uploaded no fewer tokens than dense "
+                f"({packed['tokens_uploaded']} >= "
+                f"{dense['tokens_uploaded']})")
+    if micro is not None and micro["speedup"] > micro["roofline_bound"]:
+        failures.append(
+            f"fig14 microbench speedup {micro['speedup']}x exceeds its "
+            f"useful-work roofline bound {micro['roofline_bound']}x")
+    record("fig14_ragged", t0, rows,
+           (f"fused {dense['fused_ms_per_step']}->"
+            f"{packed['fused_ms_per_step']} ms/step, "
+            f"micro {micro['speedup']}x (bound {micro['roofline_bound']}x)"
+            if packed and micro else "unavailable"))
+
     _section("smoke: Fig. 10 joint vs two-stage planning")
     from benchmarks import fig10_joint_plan
     t0 = time.time()
@@ -282,6 +323,16 @@ def main() -> None:
                f"over {proc['kv_transfers']} transfers")
     except Exception as e:  # noqa: BLE001
         record("fig12_transport", t0, f"skipped ({e})")
+
+    _section("Fig. 14: ragged fused megakernel, packed batching (beyond-paper)")
+    from benchmarks import fig14_ragged
+    t0 = time.time()
+    rows = fig14_ragged.main()
+    by = {r["arm"]: r for r in rows}
+    record("fig14_ragged", t0,
+           f"fused {by['dense']['fused_ms_per_step']}->"
+           f"{by['packed']['fused_ms_per_step']} ms/step, "
+           f"micro {by['microbench']['speedup']}x")
 
     _section("Fault tolerance / stragglers (beyond-paper)")
     from benchmarks import fault_tolerance

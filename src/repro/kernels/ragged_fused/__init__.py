@@ -1,0 +1,5 @@
+from repro.kernels.ragged_fused.ops import (  # noqa: F401
+    build_pack,
+    pack_layout,
+    ragged_attention,
+)

@@ -1,0 +1,144 @@
+"""Dispatch + packing layer for the ragged fused chunk+decode attention.
+
+``ragged_attention`` accepts the framework layout — packed queries
+(P, H, hd) plus per-token ``(row, position)`` metadata against a batched
+(B, T, G, hd) cache — pads P/T to block multiples and head_dim to a
+128-lane multiple, and runs the Pallas megakernel on TPU (or under
+``interpret=True`` in tests).  Non-TPU backends fall back to the pure-jnp
+oracle in ``ref.py``, which is also the parity target for the kernel.
+
+``pack_layout`` is the one definition of the packed metadata format
+(DESIGN.md §15): per-sequence ``(seq_id=row, start, length, cache_len)``
+with each sequence's queries aligned to ``align`` so that — on the kernel
+path — a q block never spans two sequences and the scalar-prefetched
+``block_rows`` array is well defined.  The engine uses align=1 on CPU
+(the ref path has no block constraint; no alignment holes) and the kernel
+block size on TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ragged_fused import ref as ref_mod
+from repro.kernels.ragged_fused.ragged_fused import (
+    DEFAULT_BLOCK_KV,
+    DEFAULT_BLOCK_Q,
+    INVALID_POS,
+    ragged_fused_hpd,
+)
+
+
+#: q-block granularity of the ragged megakernel on TPU: packed segments are
+#: aligned to it so a kernel q block never spans two sequences (8 sublanes is
+#: the native MXU tile height, so decode segments pad 1 -> 8 at worst).  On
+#: CPU the pure-jnp oracle has no block constraint and packs are hole-free.
+PACK_ALIGN_TPU = 8
+
+
+def pack_layout(lengths: Sequence[int], align: int = 1) -> Tuple[List[int], int]:
+    """Segment start offsets for a packed stream: each segment starts at a
+    multiple of ``align`` (so kernel q blocks stay single-sequence).
+    Returns (starts, padded_total)."""
+    starts, off = [], 0
+    for n in lengths:
+        starts.append(off)
+        off += ((int(n) + align - 1) // align) * align
+    return starts, off
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "attn_softcap", "scale",
+                     "block_q", "block_kv", "interpret", "force_ref"))
+def ragged_attention(
+    q: jax.Array,                    # (P, H, hd) packed queries
+    k: jax.Array,                    # (B, T, G, hd) batched cache
+    v: jax.Array,
+    *,
+    q_rows: jax.Array,               # (P,) int32, -1 for pad tokens
+    q_positions: jax.Array,          # (P,) int32, INVALID_POS for pads
+    kv_positions: jax.Array,         # (B, T) int32
+    causal: bool = True,
+    window: Optional[int] = None,
+    attn_softcap: Optional[float] = None,
+    scale: float,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_kv: int = DEFAULT_BLOCK_KV,
+    interpret: bool = False,
+    force_ref: bool = False,
+) -> jax.Array:
+    P, H, hd = q.shape
+    B, T = k.shape[0], k.shape[1]
+
+    use_kernel = interpret or jax.default_backend() == "tpu"
+    if force_ref or not use_kernel:
+        return ref_mod.ref_ragged_attention(
+            q, k, v, q_rows, q_positions, kv_positions, scale=scale,
+            causal=causal, window=window, softcap=attn_softcap)
+
+    bq = min(block_q, max(8, P))
+    bkv = min(block_kv, max(8, T))
+
+    qt = _pad_to(_pad_to(jnp.swapaxes(q, 0, 1), 1, bq), 2, 128)   # (H, P', hd')
+    kt = _pad_to(_pad_to(jnp.swapaxes(k, 1, 2), 2, bkv), 3, 128)  # (B, G, T', hd')
+    vt = _pad_to(_pad_to(jnp.swapaxes(v, 1, 2), 2, bkv), 3, 128)
+    qp = _pad_to(q_positions[None, :], 1, bq, value=INVALID_POS)
+    kp = _pad_to(kv_positions, 1, bkv, value=INVALID_POS)
+    rows = _pad_to(q_rows, 0, bq, value=-1)
+
+    # one cache row per q block: pads carry -1, so max() recovers the block's
+    # real row; all-pad blocks clamp to row 0 (their queries mask to zero).
+    # The packing contract (pack_layout with align == block_q) guarantees no
+    # block mixes two sequences.
+    block_rows = jnp.clip(jnp.max(rows.reshape(-1, bq), axis=1), 0, B - 1)
+
+    out = ragged_fused_hpd(
+        qt, kt, vt, qp, kp, block_rows.astype(jnp.int32), scale=scale,
+        causal=causal, window=window, softcap=attn_softcap,
+        block_q=bq, block_kv=bkv, interpret=interpret)
+    return jnp.swapaxes(out[:, :P, :hd], 0, 1)
+
+
+def build_pack(segments: Sequence[Tuple[int, np.ndarray, int]],
+               align: int = 1) -> dict:
+    """Host-side packed metadata from ``(row, tokens, cache_len)`` segments.
+
+    Returns numpy arrays: ``tokens``/``rows``/``offsets``/``positions``
+    (P,) and ``last_idx`` (n_segs,) — the packed index of each segment's
+    final token (where its next-token logits live).  ``positions`` here is
+    the host view (cache_len + offset); the engine recomputes positions
+    device-side from ``cache["length"]`` so the jitted step stays the
+    single source of truth.
+    """
+    lengths = [len(t) for _, t, _ in segments]
+    starts, total = pack_layout(lengths, align)
+    tokens = np.full((total,), -1, np.int32)
+    rows = np.full((total,), -1, np.int32)
+    offsets = np.zeros((total,), np.int32)
+    positions = np.full((total,), INVALID_POS, np.int32)
+    last_idx = np.zeros((len(segments),), np.int32)
+    for i, ((row, toks, cache_len), start) in enumerate(zip(segments, starts)):
+        n = len(toks)
+        tokens[start:start + n] = np.asarray(toks, np.int32)
+        rows[start:start + n] = row
+        offsets[start:start + n] = np.arange(n, dtype=np.int32)
+        positions[start:start + n] = cache_len + np.arange(n, dtype=np.int32)
+        last_idx[i] = start + n - 1
+    return {"tokens": tokens, "rows": rows, "offsets": offsets,
+            "positions": positions, "last_idx": last_idx, "total": total,
+            "starts": np.asarray(starts, np.int32)}

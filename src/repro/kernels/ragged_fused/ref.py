@@ -1,0 +1,69 @@
+"""Pure-JAX oracle for the ragged fused chunk+decode attention.
+
+Contract (shared with the Pallas kernel in ``ragged_fused.py``): a *packed*
+query stream — every row of ``q`` is one token of some sequence, laid out
+back-to-back with optional padding holes — attends over the per-sequence
+rows of a batched KV cache.  Per-token metadata replaces the dense (B, S)
+rectangle:
+
+  q_rows       (P,) int32   cache row (slot) of each packed token; -1 = pad
+  q_positions  (P,) int32   absolute position of each token (INVALID_POS pad)
+  kv_positions (B, T) int32 absolute positions of the cache slots
+
+Masking is identical to the dense path: a key is visible iff its position is
+valid, causal (kp <= qp) and inside the sliding window — plus the ragged
+boundary condition that the key must live in the *query's own* cache row.
+Fully-masked queries (pads) produce zeros, matching the kernel's l-clamp.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+INVALID_POS = -(2 ** 30)
+
+
+def ref_ragged_attention(
+    q: jnp.ndarray,                  # (P, H, hd) packed queries
+    k: jnp.ndarray,                  # (B, T, G, hd) batched cache
+    v: jnp.ndarray,
+    q_rows: jnp.ndarray,             # (P,) int32, -1 for pad tokens
+    q_positions: jnp.ndarray,        # (P,) int32, INVALID_POS for pads
+    kv_positions: jnp.ndarray,       # (B, T) int32
+    *,
+    scale: float,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jnp.ndarray:
+    P, H, hd = q.shape
+    B, T, G, _ = k.shape
+    qpg = H // G
+
+    safe_rows = jnp.clip(q_rows, 0, B - 1)
+    kg = k[safe_rows].astype(jnp.float32)            # (P, T, G, hd)
+    vg = v[safe_rows].astype(jnp.float32)
+    kp = kv_positions[safe_rows]                     # (P, T)
+
+    qf = q.astype(jnp.float32).reshape(P, G, qpg, hd)
+    s = jnp.einsum("pgqd,ptgd->pgqt", qf, kg) * scale      # (P, G, qpg, T)
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+
+    qp = q_positions[:, None]                        # (P, 1)
+    valid = (kp > INVALID_POS // 2) & (q_rows[:, None] >= 0)
+    if causal:
+        valid &= kp <= qp
+    if window is not None:
+        valid &= (qp - kp) < window
+    vm = valid[:, None, None, :]                     # (P, 1, 1, T)
+    s = jnp.where(vm, s, NEG_INF)
+
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(vm, jnp.exp(s - m), 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    probs = p / jnp.where(denom == 0.0, 1.0, denom)
+    out = jnp.einsum("pgqt,ptgd->pgqd", probs, vg)   # (P, G, qpg, hd)
+    return out.reshape(P, H, hd).astype(q.dtype)

@@ -1,0 +1,244 @@
+"""Packed (ragged) cached forward: the model side of the fused megakernel.
+
+``forward_cached`` executes a (B, S) rectangle — one row per cache slot,
+``-1`` padding where a row has nothing to do.  ``forward_packed`` executes a
+flat token stream instead: every query token carries its own ``(row,
+offset-in-segment)`` metadata, so one prefill chunk plus N single-token
+decode rows cost ``chunk + N`` tokens of compute rather than
+``max_slots x width``.  Semantics match the dense path exactly:
+
+  * positions derive from ``cache["length"][row] + offset`` device-side —
+    the cache stays the single source of truth;
+  * K/V of valid tokens scatter into ``(row, position)`` cache slots (full
+    caches) or ``(row, position mod W)`` (ring caches); pad tokens route to
+    a dump row and can never clobber live state;
+  * full-attention layers run the ragged flash kernel (TPU) or its pure-jnp
+    oracle — each packed query attends over *its own row's* cache;
+  * local (sliding-window) layers attend over the pre-write ring gather plus
+    the row-matched packed stream, then commit — the same
+    attend-then-commit ordering that keeps ring eviction exact;
+  * per-row lengths advance by each row's valid-token count.
+
+Recurrent state (SSD/RGLRU) and cross-attention have no ragged attention
+pack — a packed step would have to run each row's recurrence over a
+*gathered* per-token stream, serializing on the segment scan — so configs
+containing them are gated out by ``supports_packed`` and served by the
+dense fallback (DESIGN.md §15).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, LOCAL, ModelConfig
+from repro.models.attention import INVALID_POS, NEG_INF
+from repro.models.common import apply_norm
+from repro.models.transformer import (
+    Cache,
+    Params,
+    _attn_scale,
+    _embed,
+    _ffn_part,
+    _qkv,
+    _residual,
+    _unembed,
+)
+
+_PACKED_KINDS = (ATTN, LOCAL)
+
+
+def supports_packed(cfg: ModelConfig) -> bool:
+    """True iff every layer kind has a ragged attention pack (no recurrent
+    state, no cross-attention — see module docstring)."""
+    return all(k in _PACKED_KINDS for k in cfg.pattern_for_depth())
+
+
+def _scatter_rows(buf: jax.Array, vals: jax.Array, rows: jax.Array,
+                  slots: jax.Array, valid: jax.Array) -> jax.Array:
+    """Scatter per-token values into (row, slot) of a (B, M, ...) buffer.
+    Invalid tokens go to a dump row appended past B."""
+    B, M = buf.shape[0], buf.shape[1]
+    ext = jnp.concatenate([buf, jnp.zeros((1,) + buf.shape[1:], buf.dtype)], 0)
+    r = jnp.where(valid, rows, B)
+    s = jnp.clip(slots, 0, M - 1)
+    ext = ext.at[r, s].set(vals.astype(buf.dtype))
+    return ext[:B]
+
+
+def _ragged_attn(cfg, q, ck, cv, *, q_rows, q_positions, kv_positions,
+                 window, impl):
+    from repro.kernels.ragged_fused.ops import (PACK_ALIGN_TPU,
+                                                ragged_attention)
+    # block_q == the pack alignment: the engine aligns segments to
+    # PACK_ALIGN_TPU on TPU, so any wider q block could span two sequences
+    # and break the scalar-prefetched block_rows indirection.
+    return ragged_attention(
+        q, ck, cv, q_rows=q_rows, q_positions=q_positions,
+        kv_positions=kv_positions, causal=True, window=window,
+        attn_softcap=cfg.attn_logit_softcap, scale=_attn_scale(cfg),
+        block_q=PACK_ALIGN_TPU, force_ref=(impl == "ref"))
+
+
+def _local_packed_attn(cfg, q, ring_k, ring_v, ring_pos, k_new, v_new, *,
+                       q_rows, q_positions, window):
+    """Sliding-window attention for one packed stream: each query sees its
+    row's PRE-write ring plus the row-matched packed keys (both position-
+    masked), under one joint softmax.  Pure jnp on every backend — the ring
+    gather is W-bounded, and local layers are never the fused-step roofline
+    term; the Pallas megakernel covers the full-attention layers."""
+    P, H, hd = q.shape
+    B = ring_k.shape[0]
+    G = ring_k.shape[2]
+    qpg = H // G
+    scale = _attn_scale(cfg)
+    softcap = cfg.attn_logit_softcap
+
+    valid_q = q_rows >= 0
+    safe = jnp.clip(q_rows, 0, B - 1)
+    rk = ring_k[safe].astype(jnp.float32)            # (P, W, G, hd)
+    rv = ring_v[safe].astype(jnp.float32)
+    rp = ring_pos[safe]                              # (P, W)
+
+    qf = q.astype(jnp.float32).reshape(P, G, qpg, hd)
+    s1 = jnp.einsum("pgqd,pwgd->pgqw", qf, rk) * scale
+    s2 = jnp.einsum("pgqd,tgd->pgqt", qf,
+                    k_new.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s1 = jnp.tanh(s1 / softcap) * softcap
+        s2 = jnp.tanh(s2 / softcap) * softcap
+
+    qp = q_positions[:, None]                        # (P, 1)
+    m1 = (rp > INVALID_POS // 2) & (rp <= qp) & ((qp - rp) < window)
+    m1 &= valid_q[:, None]
+    kp = q_positions[None, :]                        # packed keys' positions
+    m2 = (kp > INVALID_POS // 2) & (kp <= qp) & ((qp - kp) < window)
+    m2 &= (q_rows[:, None] == q_rows[None, :]) & valid_q[:, None]
+    s1 = jnp.where(m1[:, None, None, :], s1, NEG_INF)
+    s2 = jnp.where(m2[:, None, None, :], s2, NEG_INF)
+
+    m = jnp.maximum(jnp.max(s1, axis=-1), jnp.max(s2, axis=-1))[..., None]
+    p1 = jnp.where(m1[:, None, None, :], jnp.exp(s1 - m), 0.0)
+    p2 = jnp.where(m2[:, None, None, :], jnp.exp(s2 - m), 0.0)
+    denom = jnp.sum(p1, axis=-1) + jnp.sum(p2, axis=-1)
+    denom = jnp.where(denom == 0.0, 1.0, denom)[..., None]
+    out = (jnp.einsum("pgqw,pwgd->pgqd", p1 / denom, rv)
+           + jnp.einsum("pgqt,tgd->pgqd", p2 / denom,
+                        v_new.astype(jnp.float32)))
+    return out.reshape(P, H, hd).astype(q.dtype)
+
+
+def _packed_block(cfg, kind, p, x, cache, ctx, aux, *, impl, expert_mode):
+    """One ATTN/LOCAL block over the packed stream.  x (1, P, d)."""
+    rows, valid, positions, masked_positions, pos_full, ring_pre = ctx
+    h = apply_norm(cfg, p["norm"], x)
+    q, k_new, v_new = _qkv(cfg, p, h, masked_positions[None, :])
+    q_rows = jnp.where(valid, rows, -1)
+
+    if kind == ATTN:
+        ck = _scatter_rows(cache["k"], k_new[0], rows, positions, valid)
+        cv = _scatter_rows(cache["v"], v_new[0], rows, positions, valid)
+        out = _ragged_attn(cfg, q[0], ck, cv, q_rows=q_rows,
+                           q_positions=masked_positions,
+                           kv_positions=pos_full, window=None, impl=impl)
+    else:  # LOCAL: attend over pre-write ring + packed stream, THEN commit
+        W = cache["k"].shape[1]
+        out = _local_packed_attn(cfg, q[0], cache["k"], cache["v"], ring_pre,
+                                 k_new[0], v_new[0], q_rows=q_rows,
+                                 q_positions=masked_positions,
+                                 window=cfg.sliding_window)
+        ck = _scatter_rows(cache["k"], k_new[0], rows, positions % W, valid)
+        cv = _scatter_rows(cache["v"], v_new[0], rows, positions % W, valid)
+
+    proj = jnp.einsum("bshp,hpd->bsd", out[None], p["wo"])
+    x = _residual(cfg, p, x, proj, "post_attn_norm")
+    x, aux = _ffn_part(cfg, p, x, aux, expert_mode)
+    return x, {"k": ck, "v": cv}, aux
+
+
+def forward_packed(cfg: ModelConfig, params: Params, cache: Cache,
+                   tokens: jax.Array, rows: jax.Array,
+                   seg_offsets: jax.Array, out_idx: jax.Array, *,
+                   impl: str = "auto", expert_mode: str = "tp"
+                   ) -> Tuple[Cache, jax.Array, Dict[str, Any]]:
+    """Run one packed fused step.
+
+    tokens/rows/seg_offsets: (P,) int32 — the flat stream (-1 pads), each
+    token's cache row, and its 0-based offset within its segment.
+    out_idx: (n_out,) int32 packed indices whose next-token logits are
+    returned (each segment's last valid token).
+    Returns (new_cache, logits (n_out, V) fp32, aux).
+    """
+    assert supports_packed(cfg), f"no ragged pack for {cfg.layer_pattern}"
+    B = cache["length"].shape[0]
+    P = tokens.shape[0]
+
+    valid = (tokens >= 0) & (rows >= 0)
+    safe_rows = jnp.where(valid, rows, 0)
+    positions = cache["length"][safe_rows] + seg_offsets       # (P,)
+    masked_positions = jnp.where(valid, positions, INVALID_POS)
+    counts = jnp.zeros((B,), jnp.int32).at[safe_rows].add(
+        valid.astype(jnp.int32))
+
+    pos_full = cache.get("pos_full")
+    if pos_full is not None:
+        pos_full = _scatter_rows(pos_full, masked_positions, rows,
+                                 positions, valid)
+    ring_pre = cache.get("pos_ring")
+    pos_ring = None
+    if ring_pre is not None:
+        W = ring_pre.shape[1]
+        pos_ring = _scatter_rows(ring_pre, masked_positions, rows,
+                                 positions % W, valid)
+
+    x = _embed(cfg, params, jnp.maximum(tokens, 0)[None, :])   # (1, P, d)
+    ctx = (rows, valid, positions, masked_positions, pos_full, ring_pre)
+
+    Pd = len(cfg.layer_pattern)
+    n_per, rest = divmod(cfg.num_layers, Pd)
+    aux: Dict[str, Any] = {}
+
+    if n_per:
+        def period_body(x_c, xs):
+            p_period, c_period = xs
+            a: Dict[str, Any] = {}
+            new_c = {}
+            for j in range(Pd):
+                x_c, nc, a = _packed_block(
+                    cfg, cfg.layer_pattern[j], p_period[str(j)], x_c,
+                    c_period[str(j)], ctx, a, impl=impl,
+                    expert_mode=expert_mode)
+                new_c[str(j)] = nc
+            a = {k: jnp.asarray(v, jnp.float32) for k, v in a.items()}
+            return x_c, (new_c, a)
+
+        x, (new_stacked, aux_stacked) = jax.lax.scan(
+            period_body, x, (params["stacked"], cache["stacked"]))
+        cache = dict(cache)
+        cache["stacked"] = new_stacked
+        for k, v in aux_stacked.items():
+            aux[k] = jnp.sum(v) if v.ndim else v
+
+    if rest:
+        new_rest = {}
+        for i in range(rest):
+            x, nc, aux = _packed_block(
+                cfg, cfg.layer_pattern[i], params["rest"][str(i)], x,
+                cache["rest"][str(i)], ctx, aux, impl=impl,
+                expert_mode=expert_mode)
+            new_rest[str(i)] = nc
+        cache = dict(cache)
+        cache["rest"] = new_rest
+
+    h = x[0][jnp.clip(out_idx, 0, P - 1)]                      # (n_out, d)
+    h = apply_norm(cfg, params["final_norm"], h)
+    logits = _unembed(cfg, params, h)                          # (n_out, V)
+
+    cache = dict(cache)
+    cache["length"] = cache["length"] + counts
+    if pos_full is not None:
+        cache["pos_full"] = pos_full
+    if pos_ring is not None:
+        cache["pos_ring"] = pos_ring
+    return cache, logits, aux

@@ -73,6 +73,10 @@ class LiveResult:
     kv_transfer_bytes: int = 0    # measured bytes over the RPC KV path
     kv_transfer_ms: float = 0.0   # measured wall time of those transfers
     kv_transfers: int = 0
+    packed: bool = False          # §15: ragged packed fused path active
+    fused_steps: int = 0          # fused chunk+decode steps executed
+    fused_ms: float = 0.0         # total wall time of those steps
+    tokens_uploaded: int = 0      # host->device token elements (inproc only)
 
 
 class LiveCluster:
@@ -88,7 +92,8 @@ class LiveCluster:
                  decode_offload: bool = False, offload_guard: float = 1.0,
                  offload_hysteresis: float = 0.5, offload_budget: int = 1,
                  offload_min_profit_s: float = 0.0,
-                 transport: str = "inproc", rpc_timeout_s: float = 180.0):
+                 transport: str = "inproc", rpc_timeout_s: float = 180.0,
+                 packed: Optional[bool] = None):
         if transport not in TRANSPORTS:
             raise ValueError(f"unknown transport {transport!r}; "
                              f"expected one of {TRANSPORTS}")
@@ -109,7 +114,8 @@ class LiveCluster:
             self.kv_path = TransportKVPath()
             self._pool = ProcWorkerPool(
                 cfg, max_len=max_len, max_slots=max_slots, seed=seed,
-                rpc_timeout_s=rpc_timeout_s, kv_path=self.kv_path)
+                rpc_timeout_s=rpc_timeout_s, kv_path=self.kv_path,
+                packed=packed)
             specs = [("prefill", i, 0) for i in range(n_prefill)]
             specs += [("decode", i,
                        decode_chunk_tokens[i]
@@ -135,7 +141,7 @@ class LiveCluster:
                               if i < len(decode_chunk_tokens) else 0)
                 self.decode_workers.append(
                     LiveDecodeWorker(i, eng, max_slots=max_slots,
-                                     chunk_tokens=per_worker))
+                                     chunk_tokens=per_worker, packed=packed))
 
         self.perf = PerfModel(cfg)
         if profile:
@@ -146,7 +152,10 @@ class LiveCluster:
             profile_engine(probe, self.perf, tp=1,
                            prefill_lens=(16, 32, 64), hist_lens=(0, 32),
                            batches=(1, max(2, max_slots // 2)),
-                           fused=adaptive_chunk)
+                           fused=adaptive_chunk,
+                           # fit T_fused on the step the workers will run,
+                           # so tuner/planner/offload inherit the speedup
+                           packed=(packed is not False))
         tuner = None
         if adaptive_chunk:
             # online per-worker chunk sizing from the PROFILED perf model
@@ -266,6 +275,16 @@ class LiveCluster:
             kv_transfer_bytes=kv.bytes_moved if kv else 0,
             kv_transfer_ms=kv.ms if kv else 0.0,
             kv_transfers=kv.transfers if kv else 0,
+            packed=any(getattr(w, "packed", False)
+                       for w in self.decode_workers),
+            fused_steps=sum(getattr(w, "fused_steps", 0)
+                            for w in self.decode_workers),
+            fused_ms=1e3 * sum(getattr(w, "fused_s", 0.0)
+                               for w in self.decode_workers),
+            tokens_uploaded=sum(
+                w.engine.tokens_uploaded for w in
+                (self.prefill_workers + self.decode_workers)
+                if hasattr(w, "engine")),
         )
 
 

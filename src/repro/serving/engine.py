@@ -22,8 +22,10 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.perf_model import PerfModel
+from repro.kernels.ragged_fused.ops import PACK_ALIGN_TPU
 from repro.launch.steps import StepOptions
 from repro.models import Model, build_model
+from repro.models.packed import forward_packed, supports_packed
 from repro.models.transformer import forward_cached, init_cache
 
 
@@ -67,6 +69,18 @@ class Engine:
         self._step = jax.jit(_step, static_argnames=("compute_cross",),
                              donate_argnums=(1,))
 
+        #: token elements shipped host->device by this engine (dense chunk
+        #: matrices, packed streams, decode feeds) — the regression metric
+        #: for the fused-step upload fix (DESIGN.md §15)
+        self.tokens_uploaded = 0
+        #: packed-stream segment alignment (kernel q-block on TPU, 1 on CPU)
+        self.pack_align = (PACK_ALIGN_TPU
+                           if jax.default_backend() == "tpu" else 1)
+        #: explicit jit caches keyed on shape buckets: packed steps by
+        #: (P_bucket, n_out_bucket), dense fused composers by (batch, width)
+        self._packed_fns: Dict[Tuple[int, int], Any] = {}
+        self._compose_fns: Dict[Tuple[int, int], Any] = {}
+
     # ------------------------------------------------------------------
     def new_cache(self, batch: int):
         return init_cache(self.cfg, batch, self.max_len)
@@ -108,6 +122,110 @@ class Engine:
         cache, logits, _ = self.run_chunk(cache, tokens)
         return cache, logits
 
+    # ------------------------------------------------------------------
+    # Packed (ragged) fused path — DESIGN.md §15
+    # ------------------------------------------------------------------
+    @property
+    def supports_packed(self) -> bool:
+        """Whether this config has a ragged attention pack (pure ATTN/LOCAL
+        stacks; recurrent/cross layers fall back to the dense path)."""
+        return supports_packed(self.cfg)
+
+    def packed_bucket(self, n: int) -> int:
+        """Round a packed length up to a geometric shape bucket so the
+        ``run_packed`` jit cache holds O(log max_len) entries, not one per
+        distinct pack."""
+        b = max(self.pack_align, 8)
+        while b < n:
+            b *= 2
+        return b
+
+    @staticmethod
+    def out_bucket(n: int) -> int:
+        return ((n + 3) // 4) * 4
+
+    def _packed_fn(self, p_bucket: int, n_out: int):
+        key = (p_bucket, n_out)
+        fn = self._packed_fns.get(key)
+        if fn is None:
+            cfg, o = self.cfg, self.opts
+
+            def _pstep(params, cache, tokens, rows, offs, out_idx):
+                return forward_packed(cfg, params, cache, tokens, rows, offs,
+                                      out_idx, impl=o.attn_impl,
+                                      expert_mode=o.expert_mode)
+
+            fn = jax.jit(_pstep, donate_argnums=(1,))
+            self._packed_fns[key] = fn
+        return fn
+
+    def run_packed(self, cache, segments: List[Tuple[int, np.ndarray]]):
+        """Execute one packed fused step: ``segments`` is a list of
+        ``(cache_row, tokens)`` — typically one wide prefill chunk plus N
+        single-token decode segments sharing the launch.
+
+        Returns (cache, seg_logits (len(segments), V), aux) where row i of
+        ``seg_logits`` is the next-token logits of segment i's last token.
+        """
+        from repro.kernels.ragged_fused.ops import build_pack
+
+        assert self.supports_packed, \
+            f"no ragged pack for {self.cfg.layer_pattern}"
+        assert segments, "empty pack"
+        rows = [r for r, _ in segments]
+        assert len(set(rows)) == len(rows), f"duplicate cache rows: {rows}"
+        lim = chunk_limit(self.cfg, self.max_len)
+        assert all(1 <= len(t) <= lim for _, t in segments), \
+            "segment exceeds chunk limit (ring exactness)"
+
+        pack = build_pack([(r, np.asarray(t, np.int32), 0)
+                           for r, t in segments], align=self.pack_align)
+        P = self.packed_bucket(pack["total"])
+        n_out = self.out_bucket(len(segments))
+        tokens = np.full((P,), -1, np.int32)
+        prows = np.full((P,), -1, np.int32)
+        offs = np.zeros((P,), np.int32)
+        out_idx = np.zeros((n_out,), np.int32)
+        t = pack["total"]
+        tokens[:t] = pack["tokens"]
+        prows[:t] = pack["rows"]
+        offs[:t] = pack["offsets"]
+        out_idx[:len(segments)] = pack["last_idx"]
+        self.tokens_uploaded += P
+
+        fn = self._packed_fn(P, n_out)
+        cache, logits, aux = fn(self.params, cache, jnp.asarray(tokens),
+                                jnp.asarray(prows), jnp.asarray(offs),
+                                jnp.asarray(out_idx))
+        return cache, logits[:len(segments)], aux
+
+    # ------------------------------------------------------------------
+    # Dense fused-step composer (the packed=False fallback's upload fix)
+    # ------------------------------------------------------------------
+    def compose_fused_chunk(self, row_tokens: np.ndarray, slot: int,
+                            feed: np.ndarray) -> jnp.ndarray:
+        """Build the dense (B, width) fused-step matrix ON DEVICE from the
+        compact uploads: the prefill row (width,) and the decode feed (B,)
+        (-1 = non-advancing).  Sub-chunks after the first ship feed = all
+        ``-1`` so non-advancing rows are masked without re-uploading the
+        ``max_slots x width`` rectangle."""
+        B, W = len(feed), len(row_tokens)
+        key = (B, W)
+        fn = self._compose_fns.get(key)
+        if fn is None:
+            def _compose(row, slot_, feed_):
+                ridx = jnp.arange(B, dtype=jnp.int32)
+                base = jnp.where(ridx[:, None] == slot_,
+                                 jnp.broadcast_to(row[None, :], (B, W)), -1)
+                col0 = jnp.where(ridx == slot_, base[:, 0], feed_)
+                return base.at[:, 0].set(col0)
+
+            fn = jax.jit(_compose)
+            self._compose_fns[key] = fn
+        self.tokens_uploaded += W + B
+        return fn(jnp.asarray(row_tokens, jnp.int32), jnp.int32(slot),
+                  jnp.asarray(feed, jnp.int32))
+
 
 # ---------------------------------------------------------------------------
 # Offline profiler (§3): fit PerfModel coefficients from this engine
@@ -131,13 +249,17 @@ def profile_engine(engine: Engine, perf: PerfModel, tp: int,
                    hist_lens: Tuple[int, ...] = (0, 64),
                    batches: Tuple[int, ...] = (1, 4, 8),
                    fused: bool = False,
+                   packed: bool = False,
                    seed: int = 0) -> PerfModel:
     """Measure the live engine and overwrite perf coefficients for `tp`.
 
     With ``fused=True`` also measures Sarathi-style fused chunk+decode steps
     (one row prefilling a chunk while ``b`` rows each decode one token) and
     fits the T_fused family (``fit_fused``) — otherwise T_fused re-derives
-    from the fitted prefill/decode coefficients."""
+    from the fitted prefill/decode coefficients.  ``packed=True`` measures
+    the fused samples on the ragged packed step (``run_packed``) instead of
+    the dense rectangle, so the fitted T_fused absorbs the megakernel
+    speedup and the tuner/planner/offload guard inherit it."""
     rng = np.random.default_rng(seed)
     cfg = engine.cfg
     V = cfg.vocab_size
@@ -179,6 +301,7 @@ def profile_engine(engine: Engine, perf: PerfModel, tp: int,
     perf.fit_decode(tp, dec_samples)
 
     if fused:
+        packed = packed and engine.supports_packed
         fused_samples = []
         for ctx in (16, 48):
             for b in sorted({max(1, min(b, 3)) for b in batches}):
@@ -191,15 +314,25 @@ def profile_engine(engine: Engine, perf: PerfModel, tp: int,
                 for n in prefill_lens:
                     if ctx + n + 8 > engine.max_len:
                         continue
-                    m = engine.pad_mult
-                    width = ((n + m - 1) // m) * m
-                    chunk = np.full((rows, width), -1, np.int32)
-                    chunk[0, :n] = rng.integers(0, V, n)
-                    chunk[1:, 0] = rng.integers(0, V, b)  # decoding rows
+                    if packed:
+                        ptoks = rng.integers(0, V, n).astype(np.int32)
+                        dtoks = rng.integers(0, V, b).astype(np.int32)
+                        segs = [(0, ptoks)] + [
+                            (i + 1, dtoks[i:i + 1]) for i in range(b)]
 
-                    def call(c=cache, t=jnp.asarray(chunk)):
-                        c2 = jax.tree.map(jnp.copy, c)
-                        return engine.run_chunk(c2, t)
+                        def call(c=cache, s=segs):
+                            c2 = jax.tree.map(jnp.copy, c)
+                            return engine.run_packed(c2, s)
+                    else:
+                        m = engine.pad_mult
+                        width = ((n + m - 1) // m) * m
+                        chunk = np.full((rows, width), -1, np.int32)
+                        chunk[0, :n] = rng.integers(0, V, n)
+                        chunk[1:, 0] = rng.integers(0, V, b)  # decoding rows
+
+                        def call(c=cache, t=jnp.asarray(chunk)):
+                            c2 = jax.tree.map(jnp.copy, c)
+                            return engine.run_chunk(c2, t)
 
                     dt, _ = _time_call(call)
                     fused_samples.append((ctx, n, b, float(ctx), dt))

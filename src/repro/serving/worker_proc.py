@@ -211,6 +211,8 @@ def main(argv: Optional[List[str]] = None) -> None:  # pragma: no cover — the
     ap.add_argument("--max-len", type=int, required=True)
     ap.add_argument("--max-slots", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--packed", type=int, default=-1,
+                    help="ragged packed fused path: 1=on, 0=off, -1=auto")
     args = ap.parse_args(argv)
 
     sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
@@ -232,7 +234,9 @@ def main(argv: Optional[List[str]] = None) -> None:  # pragma: no cover — the
         worker = LivePrefillWorker(args.idx, engine)
         handlers = _prefill_handlers(worker)
     else:
-        worker = LiveDecodeWorker(args.idx, engine, max_slots=args.max_slots)
+        worker = LiveDecodeWorker(args.idx, engine, max_slots=args.max_slots,
+                                  packed=(None if args.packed < 0
+                                          else bool(args.packed)))
         handlers = _decode_handlers(worker)
     handlers["ping"] = lambda: {"ok": True, "pid": os.getpid(),
                                 "kind": args.kind, "idx": args.idx}
@@ -361,13 +365,18 @@ class ProcDecodeWorker(_ProcWorkerBase, SlotBookkeeping):
     def __init__(self, idx: int, client: rpc.RpcClient,
                  proc: subprocess.Popen, cfg: ModelConfig, max_len: int,
                  kv_path: TransportKVPath, max_slots: int, tp: int = 1,
-                 window_s: float = 10.0, chunk_tokens: int = 0):
+                 window_s: float = 10.0, chunk_tokens: int = 0,
+                 packed: bool = False):
         super().__init__(idx, client, proc, cfg, max_len, kv_path, tp,
                          window_s)
         self.max_slots = max_slots
         self.chunk_tokens = chunk_tokens
         self.slots: List[Optional[object]] = [None] * max_slots
         self.mem_tokens = 0
+        #: mirrors the child LiveDecodeWorker's resolved packed flag
+        self.packed = packed
+        self.fused_steps = 0
+        self.fused_s = 0.0
 
     # -- slot management (free/occupancy/allocate/detach: SlotBookkeeping;
     #    bookkeeping is coordinator-side, the cache row lives worker-side) --
@@ -408,6 +417,8 @@ class ProcDecodeWorker(_ProcWorkerBase, SlotBookkeeping):
         out = self._call("fused_step", slot=int(session.slot), tokens=tokens,
                          feed=feed)
         dt = time.perf_counter() - t0
+        self.fused_steps += 1
+        self.fused_s += dt
         by_slot = {int(k): int(v) for k, v in out["toks"].items()}
         toks = {b.session_id: by_slot[b.slot] for b in batch
                 if b.slot in by_slot}
@@ -430,10 +441,12 @@ class ProcWorkerPool:
     def __init__(self, cfg: ModelConfig, *, max_len: int, max_slots: int = 4,
                  seed: int = 0, rpc_timeout_s: float = 180.0,
                  spawn_timeout_s: float = 120.0,
-                 kv_path: Optional[TransportKVPath] = None):
+                 kv_path: Optional[TransportKVPath] = None,
+                 packed: Optional[bool] = None):
         self.cfg = cfg
         self.max_len = max_len
         self.max_slots = max_slots
+        self.packed = packed
         self.seed = seed
         self.rpc_timeout_s = rpc_timeout_s
         self.spawn_timeout_s = spawn_timeout_s
@@ -461,7 +474,9 @@ class ProcWorkerPool:
                "--socket", self._sock_path, "--kind", kind,
                "--idx", str(idx), "--cfg", config_to_json(self.cfg),
                "--max-len", str(self.max_len),
-               "--max-slots", str(self.max_slots), "--seed", str(self.seed)]
+               "--max-slots", str(self.max_slots), "--seed", str(self.seed),
+               "--packed",
+               str(-1 if self.packed is None else int(self.packed))]
         try:
             return subprocess.Popen(cmd, env=env, stdout=log,
                                     stderr=subprocess.STDOUT)
@@ -510,10 +525,14 @@ class ProcWorkerPool:
                 w = ProcPrefillWorker(idx, client, proc, self.cfg,
                                       self.max_len, self.kv_path)
             else:
+                from repro.models.packed import supports_packed
+                resolved = (self.packed is not False
+                            and supports_packed(self.cfg))
                 w = ProcDecodeWorker(idx, client, proc, self.cfg,
                                      self.max_len, self.kv_path,
                                      max_slots=self.max_slots,
-                                     chunk_tokens=chunks[(kind, idx)])
+                                     chunk_tokens=chunks[(kind, idx)],
+                                     packed=resolved)
             out[(kind, idx)] = w
             self.workers.append(w)
         return [out[(k, i)] for k, i, _ in specs]

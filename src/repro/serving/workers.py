@@ -178,7 +178,8 @@ class LiveDecodeWorker(WorkerSchedState, SlotBookkeeping):
     kind = "decode"
 
     def __init__(self, idx: int, engine: Engine, max_slots: int, tp: int = 1,
-                 window_s: float = 10.0, chunk_tokens: int = 0):
+                 window_s: float = 10.0, chunk_tokens: int = 0,
+                 packed: Optional[bool] = None):
         self._init_sched_state(idx, tp, window_s)
         self.engine = engine
         #: planner-chosen per-worker sub-chunk size (0 = runtime default);
@@ -188,6 +189,14 @@ class LiveDecodeWorker(WorkerSchedState, SlotBookkeeping):
         self.cache = engine.new_cache(max_slots)
         self.slots: List[Optional[LiveSession]] = [None] * max_slots
         self.mem_tokens = 0
+        #: ragged packed fused path (DESIGN.md §15): None = auto (on when the
+        #: arch has a ragged pack); explicitly requesting packed on an
+        #: unsupported arch silently falls back to dense.
+        self.packed = (engine.supports_packed if packed is None
+                       else bool(packed) and engine.supports_packed)
+        #: fused-step telemetry for LiveResult / fig14
+        self.fused_steps = 0
+        self.fused_s = 0.0
 
     # -- slot management (free/occupancy/allocate/detach: SlotBookkeeping) --
     def reset_slot(self, slot: int) -> None:
@@ -223,9 +232,31 @@ class LiveDecodeWorker(WorkerSchedState, SlotBookkeeping):
         occupied = [i for i, s in enumerate(self.slots) if s is not None]
         if not occupied:
             return 0.0, {}
+
+        # the (B, 1) decode rectangle is only worth packing when occupancy is
+        # low enough that the shape-bucketed stream is strictly smaller —
+        # at full occupancy the rectangle is already waste-free, while a
+        # pack pays bucket padding plus the per-token row gather
+        eng = self.engine
+        if self.packed:
+            from repro.kernels.ragged_fused.ops import pack_layout
+            _, total = pack_layout([1] * len(occupied), eng.pack_align)
+            if eng.packed_bucket(total) < self.max_slots:
+                segs = [(i, np.asarray([self.slots[i].last_token], np.int32))
+                        for i in occupied]
+
+                def pcall():
+                    return eng.run_packed(self.cache, segs)
+
+                dt, (self.cache, seg_logits, _) = timed(pcall)
+                nxt = np.asarray(jnp.argmax(seg_logits, axis=-1))
+                return dt, {slot: int(nxt[j])
+                            for j, slot in enumerate(occupied)}
+
         tokens = np.full((self.max_slots, 1), -1, np.int32)
         for i in occupied:
             tokens[i, 0] = self.slots[i].last_token
+        self.engine.tokens_uploaded += self.max_slots
 
         def call():
             cache, logits = self.engine.decode_step(self.cache, jnp.asarray(tokens))
@@ -254,19 +285,51 @@ class LiveDecodeWorker(WorkerSchedState, SlotBookkeeping):
         tokens = chunk_tokens_of(task, session)
         lim = chunk_limit(eng.cfg, eng.max_len)
         total_dt = 0.0
-        logits = None
         toks: Dict[int, int] = {}
+
+        if self.packed:
+            # ragged path: the sub-chunk and the decode rows pack into one
+            # flat stream — chunk + batch tokens of compute, no rectangle.
+            last_logits = None
+            for lo in range(0, len(tokens), lim):
+                sub = np.asarray(tokens[lo:lo + lim], np.int32)
+                segs = [(session.slot, sub)]
+                if lo == 0:      # decode rows advance once per fused step
+                    segs += [(s.slot, np.asarray([s.last_token], np.int32))
+                             for s in batch]
+
+                def pcall(sg=segs):
+                    return eng.run_packed(self.cache, sg)
+
+                dt, (self.cache, seg_logits, _) = timed(pcall)
+                total_dt += dt
+                if lo == 0 and batch:
+                    nxt = np.asarray(jnp.argmax(seg_logits[1:], axis=-1))
+                    toks = {s.session_id: int(nxt[j])
+                            for j, s in enumerate(batch)}
+                last_logits = seg_logits[0]
+            self.fused_steps += 1
+            self.fused_s += total_dt
+            return (total_dt,
+                    int(np.asarray(jnp.argmax(last_logits))), toks)
+
+        logits = None
         for lo in range(0, len(tokens), lim):
             sub = tokens[lo:lo + lim]
             m = eng.pad_mult
             width = ((len(sub) + m - 1) // m) * m
-            chunk = np.full((self.max_slots, width), -1, np.int32)
-            chunk[session.slot, :len(sub)] = sub
+            row = np.full((width,), -1, np.int32)
+            row[:len(sub)] = sub
+            feed = np.full((self.max_slots,), -1, np.int32)
             if lo == 0:          # decode rows advance once per fused step
                 for s in batch:
-                    chunk[s.slot, 0] = s.last_token
+                    feed[s.slot] = s.last_token
+            # non-advancing rows stay -1 in every sub-chunk: the matrix is
+            # composed on device from width + max_slots uploaded elements,
+            # never the max_slots x width rectangle (DESIGN.md §15).
 
-            def call(c=jnp.asarray(chunk)):
+            def call(r=row, f=feed):
+                c = eng.compose_fused_chunk(r, session.slot, f)
                 return eng.run_chunk(self.cache, c)
 
             dt, (self.cache, logits, _) = timed(call)
@@ -274,5 +337,7 @@ class LiveDecodeWorker(WorkerSchedState, SlotBookkeeping):
             if lo == 0:
                 nxt = np.asarray(jnp.argmax(logits, axis=-1))
                 toks = {s.session_id: int(nxt[s.slot]) for s in batch}
+        self.fused_steps += 1
+        self.fused_s += total_dt
         return (total_dt,
                 int(np.asarray(jnp.argmax(logits[session.slot]))), toks)

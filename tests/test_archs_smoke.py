@@ -74,3 +74,60 @@ def test_decode_step_shapes(arch, key):
     assert logits2.shape == (2, cfg.vocab_size)
     assert bool(jnp.all(jnp.isfinite(logits2)))
     assert list(map(int, cache["length"])) == [33, 33]
+
+
+# ---------------------------------------------------------------------------
+# ragged packed fused step (DESIGN.md §15) across architecture families
+# ---------------------------------------------------------------------------
+
+#: mixtral = MoE routing under a packed stream; llama3.1 = GQA long-context;
+#: mamba2 = SSM, which has NO ragged pack (the recurrence would serialize
+#: over a gathered per-token stream) — supports_packed gates it to the dense
+#: fallback and the test documents the skip.
+PACKED_ARCHS = ["mixtral-8x7b", "llama3.1-70b", "mamba2-130m"]
+
+
+@pytest.mark.parametrize("arch", PACKED_ARCHS)
+def test_packed_fused_step(arch, key):
+    import numpy as np
+    from repro.serving.engine import Engine, chunk_limit
+    from repro.models.packed import supports_packed
+
+    cfg = get_config(arch).reduced()
+    if not supports_packed(cfg):
+        assert cfg.ssm_state, "only SSM archs lack a ragged pack here"
+        pytest.skip(f"{arch}: SSM recurrence has no ragged attention pack; "
+                    "served by the dense fused fallback (DESIGN.md §15)")
+
+    eng = Engine(cfg, max_len=128, key=key)
+    # the packing contract the engine relies on, per-arch:
+    lim = chunk_limit(cfg, eng.max_len)
+    assert lim >= eng.pad_mult, (arch, lim, eng.pad_mult)
+    assert eng.pack_align in (1, 8)
+
+    rng = np.random.default_rng(0)
+    V = cfg.vocab_size
+    B = 3
+    cache_d = eng.new_cache(B)
+    seed = jnp.asarray(rng.integers(0, V, (B, 8)), jnp.int32)
+    cache_d, _, _ = eng.run_chunk(cache_d, seed)
+    cache_p = jax.tree.map(jnp.copy, cache_d)
+
+    n = min(20, lim)
+    ptoks = rng.integers(0, V, n).astype(np.int32)
+    dtoks = rng.integers(0, V, 2).astype(np.int32)
+
+    width = ((n + eng.pad_mult - 1) // eng.pad_mult) * eng.pad_mult
+    chunk = np.full((B, width), -1, np.int32)
+    chunk[0, :n] = ptoks
+    chunk[1, 0], chunk[2, 0] = dtoks
+    cache_d, logits_d, _ = eng.run_chunk(cache_d, jnp.asarray(chunk))
+
+    segs = [(0, ptoks), (1, dtoks[:1]), (2, dtoks[1:])]
+    cache_p, seg_logits, _ = eng.run_packed(cache_p, segs)
+
+    assert (np.asarray(cache_d["length"])
+            == np.asarray(cache_p["length"])).all()
+    d, p = np.asarray(logits_d, np.float32), np.asarray(seg_logits, np.float32)
+    assert np.isfinite(p).all()
+    np.testing.assert_allclose(p, d, atol=2e-4, rtol=2e-4)

@@ -116,3 +116,101 @@ def test_chunked_attention_vs_dense():
     b = chunked_ref_attention(q, k, v, q_positions=qpos, kv_positions=kpos,
                               scale=hd ** -0.5, kv_chunk=16)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ragged fused chunk+decode megakernel (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+def _mk_ragged(segments, B, T, H, G, hd, dtype, align):
+    """Build a packed query stream + batched KV cache from
+    ``(row, length, cache_len)`` segment specs."""
+    from repro.kernels.ragged_fused.ops import build_pack
+
+    pack = build_pack([(r, np.zeros(n, np.int32), c)
+                       for r, n, c in segments], align=align)
+    P = pack["total"]
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (P, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, T, G, hd), dtype)
+    v = jax.random.normal(ks[2], (B, T, G, hd), dtype)
+    kpos = np.full((B, T), -(2 ** 30), np.int32)
+    for r, n, c in segments:
+        kpos[r, :c + n] = np.arange(c + n)
+    return (q, k, v, jnp.asarray(pack["rows"]),
+            jnp.asarray(pack["positions"]), jnp.asarray(kpos), pack)
+
+
+RAGGED_SWEEP = [
+    # segments [(row, len, cache_len)], B, T, H, G, hd, window, softcap, dtype
+    # standard piggyback: one chunk + decode rows
+    ([(0, 32, 8), (1, 1, 20), (2, 1, 5), (3, 1, 40)],
+     4, 64, 4, 2, 64, None, None, jnp.float32),
+    # odd lengths / not multiples of the pad multiple
+    ([(0, 17, 3), (1, 7, 11), (2, 1, 29)],
+     3, 48, 4, 2, 64, None, None, jnp.float32),
+    # single-token-only pack (pure continuous-batching decode)
+    ([(0, 1, 30), (1, 1, 12), (2, 1, 47), (3, 1, 3)],
+     4, 48, 8, 2, 64, None, None, jnp.float32),
+    # prefill-only pack (no piggybackers)
+    ([(1, 48, 0)], 2, 48, 4, 4, 64, None, None, jnp.float32),
+    # mixed + sliding window + softcap (gemma2-style)
+    ([(0, 19, 10), (2, 1, 33), (3, 5, 0)],
+     4, 64, 8, 4, 64, 16, 50.0, jnp.float32),
+    # bf16 mixed pack
+    ([(0, 23, 5), (1, 1, 31), (3, 1, 9)],
+     4, 64, 4, 2, 64, None, None, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("segments,B,T,H,G,hd,window,softcap,dtype",
+                         RAGGED_SWEEP)
+def test_ragged_fused_vs_oracle(segments, B, T, H, G, hd, window, softcap,
+                                dtype):
+    """Interpret-mode megakernel vs the pure-jnp oracle across ragged packs.
+    align == block_q so no kernel q block spans two sequences."""
+    from repro.kernels.ragged_fused.ops import ragged_attention
+
+    bq = 16
+    q, k, v, rows, qpos, kpos, _ = _mk_ragged(segments, B, T, H, G, hd,
+                                              dtype, align=bq)
+    scale = hd ** -0.5
+    out_k = ragged_attention(q, k, v, q_rows=rows, q_positions=qpos,
+                             kv_positions=kpos, causal=True, window=window,
+                             attn_softcap=softcap, scale=scale, block_q=bq,
+                             block_kv=16, interpret=True)
+    out_r = ragged_attention(q, k, v, q_rows=rows, q_positions=qpos,
+                             kv_positions=kpos, causal=True, window=window,
+                             attn_softcap=softcap, scale=scale,
+                             force_ref=True)
+    tol = 5e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32),
+                               atol=tol, rtol=tol)
+    # alignment holes and pad tail must produce exactly-zero rows on both
+    pad = np.asarray(rows) < 0
+    if pad.any():
+        assert np.abs(np.asarray(out_k, np.float32)[pad]).max() == 0.0
+        assert np.abs(np.asarray(out_r, np.float32)[pad]).max() == 0.0
+
+
+def test_ragged_vs_flash_per_sequence():
+    """Each packed segment must equal a standalone flash_attention call on
+    its own sequence — raggedness is layout, not semantics."""
+    from repro.kernels.ragged_fused.ops import ragged_attention
+
+    segments = [(0, 24, 6), (1, 1, 17), (2, 9, 0)]
+    B, T, H, G, hd = 3, 48, 4, 2, 64
+    q, k, v, rows, qpos, kpos, pack = _mk_ragged(
+        segments, B, T, H, G, hd, jnp.float32, align=1)
+    out = ragged_attention(q, k, v, q_rows=rows, q_positions=qpos,
+                           kv_positions=kpos, causal=True, scale=hd ** -0.5,
+                           force_ref=True)
+    for (r, n, c), start in zip(segments, np.asarray(pack["starts"])):
+        ref = flash_attention(
+            q[None, start:start + n], k[r:r + 1], v[r:r + 1],
+            q_positions=qpos[None, start:start + n],
+            kv_positions=kpos[r:r + 1], causal=True, scale=hd ** -0.5,
+            force_ref=True)
+        np.testing.assert_allclose(np.asarray(out[start:start + n]),
+                                   np.asarray(ref[0]), atol=2e-5, rtol=2e-5)

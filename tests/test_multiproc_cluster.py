@@ -67,9 +67,16 @@ def _check_golden(path, got, regen, note):
 #: the contention test below with order-insensitive assertions.
 PARITY = dict(num_sessions=3, rounds=2, prefill_len=24, decode_len=3,
               arrival_gap=100.0)
+#: packed=False: this suite pins the TRANSPORT-parity contract, so it runs
+#: on the dense execution path the golden log was sealed on — adaptive
+#: routing consults measured windowed TTFT, and sub-chunk routing within a
+#: round races the previous chunk's completion, so swapping in a step
+#: family with different wall times can flip the prefill-worker choice
+#: under load.  Packed-vs-dense decision parity has its own gate
+#: (tests/test_packed_engine.py::test_cluster_decision_log_parity).
 PARITY_CLUSTER = dict(n_prefill=2, n_decode=1, max_slots=4, max_len=128,
                       scheduler="ampd", seed=0, profile=False,
-                      chunk_tokens=16)
+                      chunk_tokens=16, packed=False)
 
 
 @pytest.fixture(scope="module")
