@@ -1,20 +1,25 @@
 """Fig. 12 (beyond-paper): measured KV-transfer cost — in-process copies vs
-real per-worker OS processes over the RPC path (DESIGN.md §13).
+real per-worker OS processes over the RPC path (DESIGN.md §13/§16).
 
 DistServe (arXiv:2401.09670) and NVIDIA's disaggregation study
 (arXiv:2506.05508) both argue that PD-disaggregation conclusions stand or
 fall on *measured* inter-instance KV-transfer behaviour.  The in-process
-live cluster can only model it; ``LiveCluster(transport="proc")`` moves the
-actual cache bytes between worker processes and measures the wall time on
-the :class:`~repro.serving.kv_transfer.TransportKVPath`.
+live cluster can only model it; ``LiveCluster(transport="proc"|"tcp")``
+moves the actual cache bytes between worker processes and measures the wall
+time on the :class:`~repro.serving.kv_transfer.TransportKVPath`.
 
 This benchmark replays the SAME small GAIA-shaped slice (reduced model,
-lengths clipped to the CPU engine's window) through both transports under
-pure disaggregation (``dynamo`` routing — every increment crosses the
+lengths clipped to the CPU engine's window) through all three transports
+under pure disaggregation (``dynamo`` routing — every increment crosses the
 prefill/decode boundary) and reports per-transport: completed sessions,
 measured KV bytes + milliseconds, bytes/transfer, effective bandwidth, and
-latency stats.  The ``--smoke`` gate in ``benchmarks/run.py`` asserts the
-proc transport completes the trace and reports NONZERO measured kv_ms.
+latency stats.  It then fits the per-link-class ``t_kv`` coefficients
+(§16): ``intra-process`` from in-engine extract/insert round-trips
+(``profile_engine(kv=True)``), ``intra-host`` from the proc/tcp transport
+samples (``fit_kv_from_bytes``), monotone-clamped.  The ``--smoke`` gate in
+``benchmarks/run.py`` asserts the proc AND tcp transports complete the
+trace with NONZERO measured kv bytes/ms and that the fitted per-class
+coefficients satisfy intra-process <= intra-host <= cross-host.
 """
 import math
 
@@ -57,16 +62,17 @@ def live_sessions_from_trace(cfg, *, trace="gaia", num_sessions=3,
 
 
 def _run_one(cfg, transport, sessions, *, n_prefill, n_decode, seed):
-    from repro.serving import LiveCluster
-    cl = LiveCluster(cfg, n_prefill=n_prefill, n_decode=n_decode,
-                     max_slots=4, max_len=128, scheduler="dynamo",
-                     slo=SLOSpec(10.0, 10.0), seed=seed, profile=False,
-                     transport=transport)
+    from repro.serving import ClusterSpec, LiveCluster
+    cl = LiveCluster(cfg,
+                     spec=ClusterSpec(n_prefill=n_prefill, n_decode=n_decode,
+                                      max_slots=4, max_len=128),
+                     transport=transport, policy=_dynamo_policy(),
+                     slo=SLOSpec(10.0, 10.0), seed=seed, profile=False)
     try:
         r = cl.run_trace(sessions)
         completed = sum(1 for s in sessions if s.finish_time is not None)
         kv_mib = r.kv_transfer_bytes / 2**20
-        return {
+        row = {
             "transport": transport,
             "arrived": len(sessions),
             "completed": completed,
@@ -82,12 +88,62 @@ def _run_one(cfg, transport, sessions, *, n_prefill, n_decode, seed):
             "avg_itl_ms": round(r.avg_itl * 1e3, 1),
             "wall_s": round(r.wall_time, 2),
         }
+        # carry the raw transport samples out for the per-class t_kv fit
+        row["_kv_samples"] = (dict(cl.kv_path.samples) if cl.kv_path
+                              else {})
+        return row
     finally:
         cl.close()
 
 
+def _dynamo_policy():
+    from repro.serving import SchedPolicy
+    return SchedPolicy(scheduler="dynamo")
+
+
+def fit_link_classes(cfg, rows, *, seed=0):
+    """Fit the §16 per-link-class KV coefficients from this run's measured
+    data and return them as comparable ``(alpha_ms, GiB_per_s)`` rows.
+
+    ``intra-process`` comes from in-engine ``extract_range``/``insert_range``
+    round-trips (``profile_engine(kv=True)``); ``intra-host`` from the
+    proc/tcp transports' socket samples; ``cross-host`` keeps its analytic
+    prior unless a genuinely off-host worker contributed samples.  The
+    monotone clamp then enforces the physical ordering the scheduler relies
+    on (a socket hop is never priced below a device copy)."""
+    import jax
+    from repro.core.perf_model import LINK_CLASSES, PerfModel
+    from repro.serving.engine import Engine, profile_engine
+
+    perf = PerfModel(cfg)
+    eng = Engine(cfg, max_len=128, key=jax.random.PRNGKey(seed))
+    profile_engine(eng, perf, tp=1, prefill_lens=(16,), hist_lens=(0,),
+                   batches=(1,), kv=True, kv_lens=(16, 48, 96), seed=seed)
+    merged = {}
+    for row in rows:
+        for link, samples in row.get("_kv_samples", {}).items():
+            merged.setdefault(link, []).extend(samples)
+    for link, samples in merged.items():
+        perf.fit_kv_from_bytes(samples, link=link)
+    perf.ensure_link_monotone()
+    out = []
+    for link in LINK_CLASSES:
+        c = perf.kv[link]
+        out.append({"link": link,
+                    "alpha_ms": round(c.alpha * 1e3, 4),
+                    "GiB_per_s": (round(1.0 / (c.inv_bw * 2**30), 3)
+                                  if c.inv_bw > 0 else math.inf),
+                    # raw Hockney coefficients for downstream gates — the
+                    # display fields above round (a CPU-smoke socket fit can
+                    # round to 0.0 GiB/s)
+                    "alpha_s": c.alpha,
+                    "inv_bw": c.inv_bw,
+                    "fitted": link in merged or link == "intra-process"})
+    return out
+
+
 def run(model="qwen2.5-14b", num_sessions=3, n_prefill=1, n_decode=1,
-        seed=0, transports=("inproc", "proc")):
+        seed=0, transports=("inproc", "proc", "tcp")):
     cfg = get_config(model).reduced()
     rows = []
     for transport in transports:
@@ -96,18 +152,26 @@ def run(model="qwen2.5-14b", num_sessions=3, n_prefill=1, n_decode=1,
                                             seed=seed)
         rows.append(_run_one(cfg, transport, sessions, n_prefill=n_prefill,
                              n_decode=n_decode, seed=seed))
-    return rows
+    links = fit_link_classes(cfg, rows, seed=seed)
+    for r in rows:
+        r.pop("_kv_samples", None)
+    return rows, links
 
 
 def main():
-    rows = run()
+    rows, links = run()
     cols = ["transport", "arrived", "completed", "kv_bytes", "kv_ms",
             "kv_transfers", "bytes_per_transfer", "kv_MiB_per_s",
             "avg_ttft_ms", "avg_itl_ms", "wall_s"]
     print(",".join(cols))
     for r in rows:
         print(",".join(str(r[c]) for c in cols))
-    return rows
+    print()
+    print("link_class,alpha_ms,GiB_per_s,fitted")
+    for li in links:
+        print(f"{li['link']},{li['alpha_ms']},{li['GiB_per_s']},"
+              f"{li['fitted']}")
+    return rows, links
 
 
 if __name__ == "__main__":

@@ -43,16 +43,19 @@ def microbench(model="qwen3-32b", max_slots=8, width=64, ctx=32, seed=0):
 
 
 def _run_arm(cfg, packed, sessions, *, n_prefill, n_decode, seed):
-    from repro.serving import LiveCluster
+    from repro.serving import ClusterSpec, LiveCluster, SchedPolicy
 
     # colocated scheduling: EVERY prefill chunk is a fused step on the
     # decode worker — deterministic routing puts the same fused work on
     # both arms, so fused_ms_per_step compares like-for-like (adaptive
     # routing would let the arms' different timing profiles diverge)
-    cl = LiveCluster(cfg, n_prefill=n_prefill, n_decode=n_decode,
-                     max_slots=8, max_len=128, scheduler="vllm",
-                     slo=SLOSpec(2.0, 0.2), seed=seed, profile=False,
-                     chunk_tokens=16, packed=packed)
+    cl = LiveCluster(cfg,
+                     spec=ClusterSpec(n_prefill=n_prefill,
+                                      n_decode=n_decode, max_slots=8,
+                                      max_len=128),
+                     policy=SchedPolicy(scheduler="vllm", chunk_tokens=16,
+                                        packed=packed),
+                     slo=SLOSpec(2.0, 0.2), seed=seed, profile=False)
     try:
         # warm the jit caches of whichever step family this arm uses —
         # otherwise first-occurrence compiles (seconds on CPU) dominate the

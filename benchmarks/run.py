@@ -132,23 +132,43 @@ def smoke(json_path=None) -> int:
     from benchmarks import fig12_transport
     t0 = time.time()
     try:
-        rows = fig12_transport.run(num_sessions=2)
+        rows, links = fig12_transport.run(num_sessions=2)
     except Exception as e:  # noqa: BLE001 — spawn failure is a gate failure
-        rows = []
-        failures.append(f"fig12 proc transport did not run: {e!r}")
+        rows, links = [], []
+        failures.append(f"fig12 multiprocess transports did not run: {e!r}")
+    for kind in ("proc", "tcp"):
+        arm = next((r for r in rows if r["transport"] == kind), None)
+        if arm is None:
+            continue
+        if arm["completed"] != arm["arrived"]:
+            failures.append(
+                f"fig12 {kind} transport lost work "
+                f"({arm['completed']}/{arm['arrived']} completed)")
+        if not arm["kv_ms"] > 0 or not arm["kv_bytes"] > 0:
+            failures.append(
+                f"fig12 {kind} transport reported no measured KV transfer "
+                f"(kv_ms={arm['kv_ms']}, kv_bytes={arm['kv_bytes']})")
+    # §16: the fitted per-link-class t_kv must respect the physical ordering
+    # intra-process <= intra-host <= cross-host at a representative payload
+    if links:
+        by_link = {li["link"]: li for li in links}
+        order = ("intra-process", "intra-host", "cross-host")
+        # price a representative 8 MiB payload from the RAW Hockney
+        # coefficients (the display fields round — a CPU-smoke socket fit
+        # can legitimately round to 0.0 GiB/s)
+        cost = {k: by_link[k]["alpha_s"] + (8 << 20) * by_link[k]["inv_bw"]
+                for k in order}
+        for a, b in zip(order, order[1:]):
+            if cost[a] > cost[b] + 1e-12:
+                failures.append(
+                    f"fig12 per-link t_kv fit not monotone: {a}={cost[a]} "
+                    f"> {b}={cost[b]}")
     proc = next((r for r in rows if r["transport"] == "proc"), None)
-    if proc is not None:
-        if proc["completed"] != proc["arrived"]:
-            failures.append(
-                f"fig12 proc transport lost work "
-                f"({proc['completed']}/{proc['arrived']} completed)")
-        if not proc["kv_ms"] > 0 or not proc["kv_bytes"] > 0:
-            failures.append(
-                "fig12 proc transport reported no measured KV transfer "
-                f"(kv_ms={proc['kv_ms']}, kv_bytes={proc['kv_bytes']})")
-    record("fig12_transport", t0, rows,
-           (f"proc kv={proc['kv_bytes']}B/{proc['kv_ms']}ms"
-            if proc else "unavailable"))
+    tcp = next((r for r in rows if r["transport"] == "tcp"), None)
+    record("fig12_transport", t0, {"rows": rows, "links": links},
+           (f"proc kv={proc['kv_bytes']}B/{proc['kv_ms']}ms "
+            f"tcp kv={tcp['kv_bytes']}B/{tcp['kv_ms']}ms"
+            if proc and tcp else "unavailable"))
 
     _section("smoke: Fig. 14 ragged fused megakernel (packed vs dense)")
     from benchmarks import fig14_ragged
@@ -316,7 +336,7 @@ def main() -> None:
     from benchmarks import fig12_transport
     t0 = time.time()
     try:
-        rows = fig12_transport.main()
+        rows, _links = fig12_transport.main()
         proc = next(r for r in rows if r["transport"] == "proc")
         record("fig12_transport", t0,
                f"kv={proc['kv_bytes']}B in {proc['kv_ms']}ms "

@@ -16,15 +16,16 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import get_config
 from repro.core.types import SLOSpec
-from repro.serving import LiveCluster, make_live_sessions
+from repro.serving import ClusterSpec, LiveCluster, make_live_sessions
 
 
 def main():
     cfg = get_config("qwen2.5-14b").reduced()   # same family, CPU-sized
     print(f"model: {cfg.name} (reduced: {cfg.num_layers}L d={cfg.d_model})")
 
-    cluster = LiveCluster(cfg, n_prefill=1, n_decode=1, max_slots=4,
-                          max_len=192, scheduler="ampd",
+    cluster = LiveCluster(cfg,
+                          spec=ClusterSpec(n_prefill=1, n_decode=1,
+                                           max_slots=4, max_len=192),
                           slo=SLOSpec(ttft_thres=5.0, itl_thres=1.0),
                           seed=0)
     print("profiled perf model:",

@@ -10,9 +10,13 @@ worker's mesh slice):
       floor models the latency-bound small-chunk regime.
   T_dec(b; theta[, l_ctx])      — one decode step of a batch of b sessions.
       Weight-read floor + per-sequence KV-read slope (memory-bound).
-  T_kv(l_ctx; theta_src, theta_dst) — Hockney alpha-beta session-state
-      transfer across worker slices, with a resharding penalty when the
-      source/destination layouts differ.
+  T_kv(l_ctx; theta_src, theta_dst[, link]) — Hockney alpha-beta
+      session-state transfer across worker slices, with a resharding penalty
+      when the source/destination layouts differ.  Heterogeneous topology
+      (DESIGN.md §16): coefficients are PER LINK CLASS (intra-process /
+      intra-host / cross-host) and an optional :class:`LinkTopology` maps a
+      (src, dst) worker pair to its class, so the router, the §12/§14
+      steal/offload profit gates, and the planner price the real links.
   T_fused(chunk, b; theta)      — one Sarathi-style fused step: prefill a
       chunk of l_incr tokens WHILE advancing a batch of b decoding sessions
       by one token under a single dispatch (DESIGN.md §7/§11).  One alpha
@@ -30,13 +34,20 @@ term fits to ~0 automatically — AMPD's scheduling needs no special-casing
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
+
+
+#: KV link classes in increasing-cost order (DESIGN.md §16): same process
+#: (device copies), same host (AF_UNIX / loopback sockets), different hosts
+#: (the NIC).  ``PerfModel.kv`` carries one KvCoeffs per class.
+LINK_CLASSES: Tuple[str, ...] = ("intra-process", "intra-host", "cross-host")
 
 
 @dataclass(frozen=True)
@@ -73,6 +84,29 @@ class KvCoeffs:
     inv_bw: float      # s / byte
 
 
+@dataclass(frozen=True)
+class LinkTopology:
+    """Maps a (kind, idx) worker pair to its KV link class (DESIGN.md §16).
+
+    ``hosts`` labels each worker with the machine it runs on (from the
+    worker hello under the proc/tcp transports); an unknown worker gets
+    ``default_host`` — the coordinator's machine.  ``colocated`` marks
+    transports whose same-host workers also share one process/device space
+    (the inproc transport), where a same-host hop is a device copy rather
+    than a socket round-trip."""
+    hosts: Mapping[Tuple[str, int], str] = dataclasses.field(
+        default_factory=dict)
+    colocated: bool = True
+    default_host: str = "local"
+
+    def link(self, src: Tuple[str, int], dst: Tuple[str, int]) -> str:
+        h_src = self.hosts.get(src, self.default_host)
+        h_dst = self.hosts.get(dst, self.default_host)
+        if h_src != h_dst:
+            return "cross-host"
+        return "intra-process" if self.colocated else "intra-host"
+
+
 @dataclass
 class FusedCoeffs:
     """One fused chunk+decode step (T_fused, DESIGN.md §11)."""
@@ -92,7 +126,15 @@ class PerfModel:
         self.pre: Dict[int, PrefillCoeffs] = {}
         self.dec: Dict[int, DecodeCoeffs] = {}
         self.fused: Dict[int, FusedCoeffs] = {}
-        self.kv: KvCoeffs = self._analytic_kv()
+        # one KvCoeffs per link class, all equal by default: with no
+        # profiling and no explicit heterogeneity, every transport prices
+        # KV identically — the decision-log parity contract across
+        # transports (DESIGN.md §13) holds by construction
+        self.kv: Dict[str, KvCoeffs] = {
+            c: self._analytic_kv() for c in LINK_CLASSES}
+        #: worker-pair -> link class map; None = price default_link always
+        self.topology: Optional[LinkTopology] = None
+        self.default_link: str = LINK_CLASSES[0]
         self._fused_fitted: set = set()
         for tp in self.tp_degrees:
             self.pre[tp] = self._analytic_prefill(tp)
@@ -178,13 +220,32 @@ class PerfModel:
              + c.gamma_dec * batch * avg_ctx)
         return t / speed
 
-    def t_kv(self, l_ctx: int, tp_src: int, tp_dst: int) -> float:
+    def t_kv(self, l_ctx: int, tp_src: int, tp_dst: int,
+             link: Optional[str] = None) -> float:
+        c = self.kv[link or self.default_link]
         nbytes = self.cfg.session_state_bytes(l_ctx, self.hw.dtype_bytes)
         links = min(self._tp(tp_src), self._tp(tp_dst))
-        t = self.kv.alpha + nbytes * self.kv.inv_bw / max(links, 1)
+        t = c.alpha + nbytes * c.inv_bw / max(links, 1)
         if tp_src != tp_dst:
             t *= self.hw.reshard_penalty
         return t
+
+    def link_between(self, src_worker, dst_worker) -> Optional[str]:
+        """Link class of the (src -> dst) worker pair under the configured
+        topology (None -> ``default_link``)."""
+        if self.topology is None:
+            return None
+        return self.topology.link((src_worker.kind, src_worker.idx),
+                                  (dst_worker.kind, dst_worker.idx))
+
+    def t_kv_between(self, l_ctx: int, src_worker, dst_worker) -> float:
+        """T_kv priced for a concrete worker pair: tp degrees from the
+        workers, link class from the topology.  The single entry point for
+        every scheduling-time KV price — routing Eq. (2), the §12 steal and
+        §14 offload profit gates, and the modeled backend's lazy-read /
+        write-back delays all come through here."""
+        return self.t_kv(l_ctx, src_worker.tp, dst_worker.tp,
+                         link=self.link_between(src_worker, dst_worker))
 
     # ------------------------------------------------------------------
     # Profiler fits (§3 offline stage)
@@ -231,15 +292,48 @@ class PerfModel:
                                      beta_dec=bd, gamma_dec=gd)
         self._fused_fitted.add(tp)
 
-    def fit_kv(self, samples: Iterable[Tuple[int, float]]) -> None:
-        """samples: (l_ctx, seconds) at equal src/dst layouts."""
+    def fit_kv(self, samples: Iterable[Tuple[int, float]],
+               link: Optional[str] = None) -> None:
+        """samples: (l_ctx, seconds) at equal src/dst layouts, fitted for
+        one link class (default: ``default_link``)."""
         rows, ys = [], []
         for l_ctx, t in samples:
             rows.append([1.0, float(self.cfg.session_state_bytes(l_ctx))])
             ys.append(t)
         coef, *_ = np.linalg.lstsq(np.asarray(rows), np.asarray(ys), rcond=None)
-        self.kv = KvCoeffs(alpha=max(float(coef[0]), 0.0),
-                           inv_bw=max(float(coef[1]), 0.0))
+        self.kv[link or self.default_link] = KvCoeffs(
+            alpha=max(float(coef[0]), 0.0),
+            inv_bw=max(float(coef[1]), 0.0))
+
+    def fit_kv_from_bytes(self, samples: Iterable[Tuple[int, float]],
+                          link: Optional[str] = None) -> None:
+        """samples: (payload_bytes, seconds) — the form the transport path
+        (``TransportKVPath.samples``) records, fitted for one link class.
+
+        A degenerate sample set (all transfers the same size, as a uniform
+        smoke trace produces) would make the Hockney lstsq rank-deficient;
+        anchor it with the (0 bytes, 0 s) origin so the slope is still the
+        measured bytes/s."""
+        rows, ys = [[1.0, 0.0]], [0.0]
+        for nbytes, t in samples:
+            rows.append([1.0, float(nbytes)])
+            ys.append(t)
+        if len(ys) < 2:
+            return
+        coef, *_ = np.linalg.lstsq(np.asarray(rows), np.asarray(ys), rcond=None)
+        self.kv[link or self.default_link] = KvCoeffs(
+            alpha=max(float(coef[0]), 0.0),
+            inv_bw=max(float(coef[1]), 0.0))
+
+    def ensure_link_monotone(self) -> None:
+        """Clamp per-class KV coefficients to the physical ordering
+        intra-process <= intra-host <= cross-host.  Independent fits on a
+        noisy host (CI) can momentarily invert neighbouring classes; the
+        scheduler must never price a socket hop cheaper than a device copy."""
+        for prev, cur in zip(LINK_CLASSES, LINK_CLASSES[1:]):
+            p, c = self.kv[prev], self.kv[cur]
+            self.kv[cur] = KvCoeffs(alpha=max(c.alpha, p.alpha),
+                                    inv_bw=max(c.inv_bw, p.inv_bw))
 
     # ------------------------------------------------------------------
     # Eq. (1) / Eq. (2) — scheduling cost estimates
@@ -253,13 +347,15 @@ class PerfModel:
         return t
 
     def remote_cost(self, task, decode_worker, prefill_worker) -> float:
-        """Eq. (2): prefill + KV back-and-forth + queueing."""
+        """Eq. (2): prefill + KV back-and-forth + queueing, priced on the
+        actual (decode <-> prefill) link class."""
         tp_p = prefill_worker.tp
-        tp_d = decode_worker.tp
         speed = getattr(prefill_worker, "speed", 1.0)
         t_pre = self.t_pre(task.l_hist, task.l_incr, tp_p, speed)
-        t_kv = (self.t_kv(task.l_hist, tp_d, tp_p)       # lazy history read
-                + self.t_kv(task.l_incr, tp_p, tp_d))    # incremental KV back
+        # lazy history read + incremental KV write-back
+        t_kv = (self.t_kv_between(task.l_hist, decode_worker, prefill_worker)
+                + self.t_kv_between(task.l_incr, prefill_worker,
+                                    decode_worker))
         t_queue = sum(self.t_pre(k.l_hist, k.l_incr, tp_p, speed)
                       for k in prefill_worker.prefill_queue)
         return t_pre + t_kv + t_queue

@@ -171,7 +171,7 @@ class ModeledBackend(ExecutionBackend):
                            hist_len) -> float:
         if hist_len <= 0:
             return 0.0
-        t_read = self.perf.t_kv(hist_len, decode_worker.tp, worker.tp)
+        t_read = self.perf.t_kv_between(hist_len, decode_worker, worker)
         if self.kv_overlap:
             return max(0.0, t_read - waited)   # lazy read overlap (§6)
         return t_read
@@ -183,7 +183,7 @@ class ModeledBackend(ExecutionBackend):
 
     def writeback_delay(self, worker, task, decode_worker) -> float:
         if worker.kind == "prefill":
-            return self.perf.t_kv(task.l_incr, worker.tp, decode_worker.tp)
+            return self.perf.t_kv_between(task.l_incr, worker, decode_worker)
         return 0.0
 
     def on_join(self, decode_worker, session, task, payload) -> None:
@@ -273,9 +273,10 @@ class LiveBackend(ExecutionBackend):
                             history_extract=hist)
             dt /= worker.speed
             if self.model_kv_time:
-                dt += (self.perf.t_kv(task.l_hist, decode_worker.tp, worker.tp)
-                       + self.perf.t_kv(task.l_incr, worker.tp,
-                                        decode_worker.tp))
+                dt += (self.perf.t_kv_between(task.l_hist, decode_worker,
+                                              worker)
+                       + self.perf.t_kv_between(task.l_incr, worker,
+                                                decode_worker))
             payload = ("remote", out["increment"],
                        int(np.argmax(out["logits"])))
         else:

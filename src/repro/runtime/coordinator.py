@@ -303,7 +303,7 @@ class Coordinator:
                     # position (clusters may add/kill workers mid-run)
                     d = next(w for w in decode_workers
                              if w.idx == s.decode_worker)
-                    move_read = self.perf.t_kv(k.l_hist, d.tp, thief.tp)
+                    move_read = self.perf.t_kv_between(k.l_hist, d, thief)
                 move = t_self + move_read + self.perf.t_pre(
                     k.l_hist, k.l_incr, thief.tp, thief.speed)
                 profit = (ahead + stay_run) - move
@@ -422,11 +422,11 @@ class Coordinator:
                 move_read = 0.0
                 if (k.l_hist > 0 and getattr(s, "_rt_chain_worker", None)
                         != ("prefill", w.idx)):
-                    move_read = self.perf.t_kv(k.l_hist, decode_worker.tp,
-                                               w.tp)
+                    move_read = self.perf.t_kv_between(k.l_hist,
+                                                       decode_worker, w)
                 move = (drain + move_read
                         + self.perf.t_pre(k.l_hist, k.l_incr, w.tp, w.speed)
-                        + self.perf.t_kv(k.l_incr, w.tp, decode_worker.tp))
+                        + self.perf.t_kv_between(k.l_incr, w, decode_worker))
                 profit = stay - move
                 if profit > off.min_profit_s and (
                         best is None or profit > best[0]):

@@ -1,4 +1,12 @@
 from repro.serving.cluster import LiveCluster, LiveResult, make_live_sessions  # noqa: F401
+from repro.serving.config import (  # noqa: F401
+    TRANSPORT_REGISTRY,
+    ClusterSpec,
+    SchedPolicy,
+    TransportConfig,
+    register_transport,
+    resolve_transport,
+)
 from repro.serving.coordinator import Coordinator  # noqa: F401
 from repro.serving.engine import Engine, profile_engine  # noqa: F401
 from repro.serving.kv_transfer import TransportKVPath  # noqa: F401

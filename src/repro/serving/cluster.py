@@ -8,27 +8,38 @@ engine as the discrete-event simulator — with a :class:`LiveBackend` whose
 every duration is *measured* from the actual engine call rather than
 predicted: the CPU-scale twin of a TPU deployment.
 
-Two transports (DESIGN.md §13) behind one contract:
+Three transports (DESIGN.md §13/§16) behind one contract:
 
   * ``transport="inproc"`` (default): workers execute logically in parallel
     inside this process — cheap, CI-friendly, KV moves as device copies.
   * ``transport="proc"``: every worker is a real OS process owning its own
-    JAX engine; KV bytes move over RPC sockets
+    JAX engine; KV bytes move over AF_UNIX RPC sockets
     (:class:`~repro.serving.kv_transfer.TransportKVPath` measures them) and
-    ``fail_worker`` delivers a real ``SIGKILL``.  Decision logs and token
-    accounting must match ``inproc`` on the same seeded trace — the parity
-    contract held by ``tests/test_multiproc_cluster.py``.
+    ``fail_worker`` delivers a real ``SIGKILL``.
+  * ``transport="tcp"``: the same worker processes over TCP stream sockets,
+    so children can live on other machines (``TransportConfig.advertise``);
+    the coordinator prices each link by its measured class
+    (:class:`~repro.core.perf_model.LinkTopology`).
+
+Decision logs and token accounting must match ``inproc`` on the same seeded
+trace for every transport — the parity contract held by
+``tests/test_multiproc_cluster.py``.
+
+Configuration is three grouped objects (:class:`ClusterSpec`,
+:class:`TransportConfig`, :class:`SchedPolicy` — ``repro.serving.config``);
+the old ~25 flat kwargs keep working through a deprecation shim.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import List, Optional
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.perf_model import PerfModel
+from repro.core.perf_model import LinkTopology, PerfModel
 from repro.core.routing import RoutingConfig
 from repro.core.types import RoundSpec, SLOSpec
 from repro.runtime import (
@@ -41,6 +52,13 @@ from repro.runtime import (
     mean,
     p95,
 )
+from repro.serving.config import (
+    TRANSPORT_REGISTRY,
+    ClusterSpec,
+    SchedPolicy,
+    TransportConfig,
+    resolve_transport,
+)
 from repro.serving.engine import Engine, profile_engine
 from repro.serving.workers import (
     LiveDecodeWorker,
@@ -48,7 +66,14 @@ from repro.serving.workers import (
     LiveSession,
 )
 
-TRANSPORTS = ("inproc", "proc")
+# legacy flat kwargs -> which config object each one folds into
+_LEGACY_SPEC = ("n_prefill", "n_decode", "tp", "max_slots", "max_len")
+_LEGACY_POLICY = (
+    "scheduler", "chunk_tokens", "adaptive_chunk", "chunk_headroom",
+    "decode_chunk_tokens", "work_stealing", "steal_watermark",
+    "steal_min_profit_s", "preemption", "decode_offload", "offload_guard",
+    "offload_hysteresis", "offload_budget", "offload_min_profit_s", "packed")
+_LEGACY_TRANSPORT = ("rpc_timeout_s",)
 
 
 @dataclass
@@ -79,115 +104,176 @@ class LiveResult:
     tokens_uploaded: int = 0      # host->device token elements (inproc only)
 
 
+def _shim_legacy_kwargs(spec, transport, policy, legacy):
+    """Normalize the config objects and fold pre-§16 flat kwargs into them.
+
+    A bare kind string for ``transport`` is supported shorthand (no
+    warning); any flat kwarg (``n_prefill=...``, ``chunk_tokens=...``,
+    ``rpc_timeout_s=...``) warns ``DeprecationWarning`` and maps onto the
+    matching config object.  Unknown kwargs raise ``TypeError`` exactly as
+    a real signature would."""
+    unknown = [k for k in legacy
+               if k not in _LEGACY_SPEC + _LEGACY_POLICY + _LEGACY_TRANSPORT]
+    if unknown:
+        raise TypeError(
+            f"LiveCluster() got unexpected keyword arguments {unknown}")
+    if legacy:
+        warnings.warn(
+            "flat LiveCluster kwargs are deprecated; pass "
+            "spec=ClusterSpec(...), transport=TransportConfig(...), "
+            "policy=SchedPolicy(...) instead "
+            f"(got {sorted(legacy)})",
+            DeprecationWarning, stacklevel=3)
+    spec = spec or ClusterSpec()
+    policy = policy or SchedPolicy()
+    tcfg = resolve_transport(transport)
+    spec_kw = {k: legacy[k] for k in _LEGACY_SPEC if k in legacy}
+    if spec_kw:
+        spec = spec.replace(**spec_kw)
+    pol_kw = {k: legacy[k] for k in _LEGACY_POLICY if k in legacy}
+    if "decode_chunk_tokens" in pol_kw:     # SchedPolicy is tuple-typed
+        pol_kw["decode_chunk_tokens"] = tuple(pol_kw["decode_chunk_tokens"])
+    if pol_kw:
+        policy = policy.replace(**pol_kw)
+    if "rpc_timeout_s" in legacy:
+        tcfg = tcfg.replace(rpc_timeout_s=legacy["rpc_timeout_s"])
+    return spec, tcfg, policy
+
+
 class LiveCluster:
-    def __init__(self, cfg: ModelConfig, *, n_prefill: int = 1,
-                 n_decode: int = 1, max_slots: int = 4, max_len: int = 256,
-                 scheduler: str = "ampd", slo: Optional[SLOSpec] = None,
-                 seed: int = 0, model_kv_time: bool = False,
-                 profile: bool = True, chunk_tokens: int = 0,
-                 adaptive_chunk: bool = False, chunk_headroom: float = 0.85,
-                 decode_chunk_tokens: Sequence[int] = (),
-                 work_stealing: bool = False, steal_watermark: int = 0,
-                 steal_min_profit_s: float = 0.0, preemption: bool = True,
-                 decode_offload: bool = False, offload_guard: float = 1.0,
-                 offload_hysteresis: float = 0.5, offload_budget: int = 1,
-                 offload_min_profit_s: float = 0.0,
-                 transport: str = "inproc", rpc_timeout_s: float = 180.0,
-                 packed: Optional[bool] = None):
-        if transport not in TRANSPORTS:
-            raise ValueError(f"unknown transport {transport!r}; "
-                             f"expected one of {TRANSPORTS}")
+    """Live serving cluster.
+
+    New-style construction (DESIGN.md §16)::
+
+        LiveCluster(cfg, spec=ClusterSpec(n_prefill=2, tp=2),
+                    transport=TransportConfig(kind="tcp"),
+                    policy=SchedPolicy(work_stealing=True))
+
+    ``transport`` also accepts a bare kind string (``"inproc"``, ``"proc"``,
+    ``"tcp"``) as shorthand.  The pre-§16 flat keyword arguments
+    (``n_prefill=...``, ``chunk_tokens=...``, ...) keep working through a
+    deprecation shim that warns and folds them into these objects.
+    """
+
+    def __init__(self, cfg: ModelConfig, *, spec: Optional[ClusterSpec] = None,
+                 transport=None, policy: Optional[SchedPolicy] = None,
+                 slo: Optional[SLOSpec] = None, seed: int = 0,
+                 model_kv_time: bool = False, profile: bool = True,
+                 **legacy):
+        spec, tcfg, policy = _shim_legacy_kwargs(spec, transport, policy,
+                                                 legacy)
+        entry = TRANSPORT_REGISTRY[tcfg.kind]
         self.cfg = cfg
-        self.transport = transport
+        self.spec = spec
+        self.transport = tcfg.kind
+        self.transport_config = tcfg
+        self.policy = policy
         self.slo = slo or SLOSpec(ttft_thres=2.0, itl_thres=0.2)
         self._seed = seed
-        self._max_len = max_len
-        self._max_slots = max_slots
+        self._max_len = spec.max_len
+        self._max_slots = spec.max_slots
         self._pool = None
         self.kv_path = None
 
         self.prefill_workers: List = []
         self.decode_workers: List = []
-        if transport == "proc":
+        if entry.multiprocess:
             from repro.serving.kv_transfer import TransportKVPath
             from repro.serving.worker_proc import ProcWorkerPool
-            self.kv_path = TransportKVPath()
+            self.kv_path = TransportKVPath(default_class=entry.link_class)
             self._pool = ProcWorkerPool(
-                cfg, max_len=max_len, max_slots=max_slots, seed=seed,
-                rpc_timeout_s=rpc_timeout_s, kv_path=self.kv_path,
-                packed=packed)
-            specs = [("prefill", i, 0) for i in range(n_prefill)]
+                cfg, max_len=spec.max_len, max_slots=spec.max_slots,
+                seed=seed, kv_path=self.kv_path, packed=policy.packed,
+                transport=tcfg, tp=spec.tp)
+            specs = [("prefill", i, 0) for i in range(spec.n_prefill)]
             specs += [("decode", i,
-                       decode_chunk_tokens[i]
-                       if i < len(decode_chunk_tokens) else 0)
-                      for i in range(n_decode)]
+                       policy.decode_chunk_tokens[i]
+                       if i < len(policy.decode_chunk_tokens) else 0)
+                      for i in range(spec.n_decode)]
             workers = self._pool.spawn_many(specs)
-            self.prefill_workers = workers[:n_prefill]
-            self.decode_workers = workers[n_prefill:]
+            self.prefill_workers = workers[:spec.n_prefill]
+            self.decode_workers = workers[spec.n_prefill:]
         else:
             key = __import__("jax").random.PRNGKey(seed)
             shared_engine_params = None
-            for i in range(n_prefill):
-                eng = Engine(cfg, max_len=max_len, key=key,
-                             params=shared_engine_params)
+            for i in range(spec.n_prefill):
+                eng = Engine(cfg, max_len=spec.max_len, key=key,
+                             params=shared_engine_params, tp=spec.tp)
                 shared_engine_params = eng.params
-                self.prefill_workers.append(LivePrefillWorker(i, eng))
-            for i in range(n_decode):
-                eng = Engine(cfg, max_len=max_len, key=key,
-                             params=shared_engine_params)
+                self.prefill_workers.append(
+                    LivePrefillWorker(i, eng, tp=spec.tp))
+            for i in range(spec.n_decode):
+                eng = Engine(cfg, max_len=spec.max_len, key=key,
+                             params=shared_engine_params, tp=spec.tp)
                 shared_engine_params = eng.params
                 # planner-chosen per-worker chunk size (Deployment.decode_chunks())
-                per_worker = (decode_chunk_tokens[i]
-                              if i < len(decode_chunk_tokens) else 0)
+                per_worker = (policy.decode_chunk_tokens[i]
+                              if i < len(policy.decode_chunk_tokens) else 0)
                 self.decode_workers.append(
-                    LiveDecodeWorker(i, eng, max_slots=max_slots,
-                                     chunk_tokens=per_worker, packed=packed))
+                    LiveDecodeWorker(i, eng, max_slots=spec.max_slots,
+                                     tp=spec.tp, chunk_tokens=per_worker,
+                                     packed=policy.packed))
 
         self.perf = PerfModel(cfg)
+        self.perf.topology = self._link_topology()
         if profile:
-            # proc transport: profile a coordinator-side probe engine —
-            # identical params/config as the children (deterministic init
-            # from the shared seed), so the fitted coefficients transfer
+            # multiprocess transports: profile a coordinator-side probe
+            # engine — identical params/config as the children
+            # (deterministic init from the shared seed), so the fitted
+            # coefficients transfer
             probe = self._probe_engine()
-            profile_engine(probe, self.perf, tp=1,
+            profile_engine(probe, self.perf, tp=spec.tp,
                            prefill_lens=(16, 32, 64), hist_lens=(0, 32),
-                           batches=(1, max(2, max_slots // 2)),
-                           fused=adaptive_chunk,
+                           batches=(1, max(2, spec.max_slots // 2)),
+                           fused=policy.adaptive_chunk,
                            # fit T_fused on the step the workers will run,
                            # so tuner/planner/offload inherit the speedup
-                           packed=(packed is not False))
+                           packed=(policy.packed is not False))
         tuner = None
-        if adaptive_chunk:
+        if policy.adaptive_chunk:
             # online per-worker chunk sizing from the PROFILED perf model
             # (fused coefficients re-derive from the measured fits above)
             tuner = ChunkTuner(self.perf, itl_slo=self.slo.itl_thres,
-                               headroom=chunk_headroom)
-        stealing = (StealingConfig(watermark=steal_watermark,
-                                   min_profit_s=steal_min_profit_s,
-                                   preemption=preemption)
-                    if work_stealing else None)
-        offload = (OffloadConfig(guard=offload_guard,
-                                 hysteresis=offload_hysteresis,
-                                 budget=offload_budget,
-                                 min_profit_s=offload_min_profit_s)
-                   if decode_offload else None)
+                               headroom=policy.chunk_headroom)
+        stealing = (StealingConfig(watermark=policy.steal_watermark,
+                                   min_profit_s=policy.steal_min_profit_s,
+                                   preemption=policy.preemption)
+                    if policy.work_stealing else None)
+        offload = (OffloadConfig(guard=policy.offload_guard,
+                                 hysteresis=policy.offload_hysteresis,
+                                 budget=policy.offload_budget,
+                                 min_profit_s=policy.offload_min_profit_s)
+                   if policy.decode_offload else None)
         self.coordinator = Coordinator(
             perf=self.perf,
             routing=RoutingConfig(ttft_thres=self.slo.ttft_thres,
                                   itl_thres=self.slo.itl_thres),
-            scheduler=scheduler, seed=seed, chunk_tuner=tuner,
+            scheduler=policy.scheduler, seed=seed, chunk_tuner=tuner,
             stealing=stealing, offload=offload)
         self.runtime = ServingRuntime(
             LiveBackend(self.perf, model_kv_time=model_kv_time),
             self.coordinator, self.prefill_workers, self.decode_workers,
-            chunk_tokens=chunk_tokens)
+            chunk_tokens=policy.chunk_tokens)
+
+    def _link_topology(self) -> LinkTopology:
+        """The measured topology the scheduler prices (DESIGN.md §16).
+
+        In-process workers share one address space (every KV move is a
+        device copy -> ``intra-process``); pool workers are separate
+        processes whose hello-reported hosts distinguish ``intra-host``
+        links from genuine ``cross-host`` ones."""
+        if self._pool is None:
+            return LinkTopology(colocated=True)
+        return LinkTopology(hosts=dict(self._pool.worker_hosts),
+                            colocated=False, default_host=self._pool.host)
 
     def _probe_engine(self) -> Engine:
-        if self.transport != "proc":
+        if self._pool is None:
             return (self.prefill_workers[0].engine if self.prefill_workers
                     else self.decode_workers[0].engine)
         key = __import__("jax").random.PRNGKey(self._seed)
-        return Engine(self.cfg, max_len=self._max_len, key=key)
+        return Engine(self.cfg, max_len=self._max_len, key=key,
+                      tp=self.spec.tp)
 
     # -- lifecycle ---------------------------------------------------------
     def close(self) -> None:
@@ -223,14 +309,16 @@ class LiveCluster:
 
     def add_prefill_worker(self):
         next_id = max((w.idx for w in self.prefill_workers), default=-1) + 1
-        if self.transport == "proc":
+        if self._pool is not None:
             w = self._pool.spawn("prefill", next_id)
+            # keep the priced topology in step with the elastic scale-out
+            self.perf.topology = self._link_topology()
         else:
             ref = (self.prefill_workers[0] if self.prefill_workers
                    else self.decode_workers[0])
             eng = Engine(self.cfg, max_len=ref.engine.max_len,
-                         params=ref.engine.params)
-            w = LivePrefillWorker(next_id, eng)
+                         params=ref.engine.params, tp=self.spec.tp)
+            w = LivePrefillWorker(next_id, eng, tp=self.spec.tp)
         self.runtime.register_worker(w, "prefill")
         return w
 

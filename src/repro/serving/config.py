@@ -1,0 +1,181 @@
+"""Grouped configuration objects for the live cluster (DESIGN.md §16).
+
+``LiveCluster`` used to take ~25 flat keyword arguments; they are now three
+orthogonal objects mirroring how a deployment is actually specified:
+
+  * :class:`ClusterSpec`      — topology: how many workers, what mesh slice
+    each owns (tp), batch capacity.
+  * :class:`TransportConfig`  — how workers execute and talk: in-process,
+    per-worker OS processes over AF_UNIX, or processes over TCP (possibly
+    on other machines), plus the stream-socket knobs.
+  * :class:`SchedPolicy`      — every scheduling knob (scheduler family,
+    chunking, work stealing, preemption, decode-local offload, packed
+    path), field-for-field mirrored with :class:`~repro.core.simulator.
+    SimConfig` so one policy object drives both the modeled and live runs.
+
+The old flat kwargs keep working through a deprecation shim on
+``LiveCluster.__init__`` that warns and maps them onto these objects.
+
+The transport *registry* below replaces the old string-tuple check: each
+entry knows how to build the coordinator's listen address and which KV link
+class (DESIGN.md §16) connects two of its workers, so ``ProcWorkerPool``
+spawn/hello/teardown is transport-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from dataclasses import dataclass
+from typing import Callable, ClassVar, Dict, Optional, Tuple
+
+from repro.serving.rpc import Address, TcpAddress, UnixAddress
+
+__all__ = [
+    "ClusterSpec", "TransportConfig", "SchedPolicy",
+    "TransportEntry", "TRANSPORT_REGISTRY", "register_transport",
+    "resolve_transport",
+]
+
+
+# ---------------------------------------------------------------------------
+# config objects
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    """Cluster topology: worker counts and the mesh slice each owns."""
+    n_prefill: int = 1
+    n_decode: int = 1
+    tp: int = 1                 # tensor-parallel degree of each worker's mesh
+    max_slots: int = 4          # decode continuous-batching slots per worker
+    max_len: int = 256          # KV capacity (tokens) per slot
+
+    def replace(self, **kw) -> "ClusterSpec":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class TransportConfig:
+    """How workers execute and how their bytes move (DESIGN.md §13/§16)."""
+    kind: str = "inproc"        # a key of TRANSPORT_REGISTRY
+    host: str = "127.0.0.1"     # tcp: coordinator bind host (loopback default)
+    port: int = 0               # tcp: 0 = ephemeral
+    advertise: Optional[str] = None   # tcp: dial address for off-host workers
+                                      # (defaults to the bound host:port)
+    rpc_timeout_s: float = 180.0      # per-call deadline; timeout = death
+    spawn_timeout_s: float = 120.0
+    nodelay: bool = True        # TCP_NODELAY (Nagle off for RPC round-trips)
+    keepalive_s: float = 15.0   # TCP keepalive probe idle/interval; 0 = off
+
+    def replace(self, **kw) -> "TransportConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class SchedPolicy:
+    """Every scheduling knob, shared verbatim between the live cluster and
+    the discrete-event simulator (``sim_config()`` below).  Field names and
+    defaults are mirror-tested against ``SimConfig`` so the two can never
+    drift."""
+    scheduler: str = "ampd"
+    # -- chunked incremental prefill (DESIGN.md §9/§11) -------------------
+    chunk_tokens: int = 0            # 0 -> whole-task prefill
+    adaptive_chunk: bool = False     # ChunkTuner re-derives chunk sizes online
+    chunk_headroom: float = 0.85     # fused-step budget fraction of ITL SLO
+    decode_chunk_tokens: Tuple[int, ...] = ()  # planner per-worker overrides
+    # -- global scheduling layer (DESIGN.md §12) --------------------------
+    work_stealing: bool = False
+    steal_watermark: int = 0
+    steal_min_profit_s: float = 0.0
+    preemption: bool = True
+    # -- decode-local offload (DESIGN.md §14) -----------------------------
+    decode_offload: bool = False
+    offload_guard: float = 1.0
+    offload_hysteresis: float = 0.5
+    offload_budget: int = 1
+    offload_min_profit_s: float = 0.0
+    # -- ragged packed fused path (DESIGN.md §15) -------------------------
+    packed: Optional[bool] = None    # None = auto (on when arch supports it)
+
+    #: fields that exist on SimConfig under the same name + default — the
+    #: mirror contract (tests/test_cluster_config.py)
+    MIRRORED: ClassVar[Tuple[str, ...]] = (
+        "scheduler", "chunk_tokens", "adaptive_chunk", "chunk_headroom",
+        "work_stealing", "steal_watermark", "steal_min_profit_s",
+        "preemption", "decode_offload", "offload_guard",
+        "offload_hysteresis", "offload_budget", "offload_min_profit_s")
+
+    def replace(self, **kw) -> "SchedPolicy":
+        return dataclasses.replace(self, **kw)
+
+    def sim_config(self, **overrides):
+        """The equivalent :class:`~repro.core.simulator.SimConfig` — modeled
+        and live runs of one experiment share this single policy object."""
+        from repro.core.simulator import SimConfig
+        kw = {name: getattr(self, name) for name in self.MIRRORED}
+        kw.update(overrides)
+        return SimConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# transport registry
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TransportEntry:
+    """One execution transport: how the cluster spawns/talks to workers.
+
+    ``make_address`` builds the coordinator's listen address (``None`` for
+    in-process transports — there is no socket).  ``link_class`` is the KV
+    link class (DESIGN.md §16) between two workers of this transport on the
+    same host; cross-host pairs are always ``"cross-host"`` regardless of
+    transport (resolved by :class:`~repro.core.perf_model.LinkTopology`)."""
+    kind: str
+    multiprocess: bool
+    link_class: str
+    make_address: Optional[Callable[[TransportConfig, str], Address]] = None
+
+
+def _unix_address(tcfg: TransportConfig, scratch_dir: str) -> Address:
+    return UnixAddress(os.path.join(scratch_dir, "coordinator.sock"))
+
+
+def _tcp_address(tcfg: TransportConfig, scratch_dir: str) -> Address:
+    return TcpAddress(tcfg.host, tcfg.port)
+
+
+TRANSPORT_REGISTRY: Dict[str, TransportEntry] = {}
+
+
+def register_transport(entry: TransportEntry) -> TransportEntry:
+    TRANSPORT_REGISTRY[entry.kind] = entry
+    return entry
+
+
+register_transport(TransportEntry(
+    kind="inproc", multiprocess=False, link_class="intra-process"))
+register_transport(TransportEntry(
+    kind="proc", multiprocess=True, link_class="intra-host",
+    make_address=_unix_address))
+register_transport(TransportEntry(
+    kind="tcp", multiprocess=True, link_class="intra-host",
+    make_address=_tcp_address))
+
+
+def resolve_transport(transport) -> TransportConfig:
+    """Normalize a ``TransportConfig`` | kind-string | ``None`` and validate
+    the kind against the registry."""
+    if transport is None:
+        tcfg = TransportConfig()
+    elif isinstance(transport, str):
+        tcfg = TransportConfig(kind=transport)
+    elif isinstance(transport, TransportConfig):
+        tcfg = transport
+    else:
+        raise TypeError(f"transport must be a TransportConfig or str, "
+                        f"got {type(transport).__name__}")
+    if tcfg.kind not in TRANSPORT_REGISTRY:
+        raise ValueError(
+            f"unknown transport {tcfg.kind!r}; expected one of "
+            f"{tuple(sorted(TRANSPORT_REGISTRY))}")
+    return tcfg

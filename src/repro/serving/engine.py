@@ -3,16 +3,31 @@
 An ``Engine`` owns params plus three jitted entry points (fresh-cache
 prefill, incremental prefill into an existing cache, single-token decode) —
 the same builders the dry-run lowers at production scale, here executed for
-real (CPU tests/examples run reduced configs on a 1x1 mesh; a TPU deployment
-would hand each worker its mesh slice).
+real.
+
+tp>1 (DESIGN.md §16): an engine can own a tp-way mesh slice — it builds a
+``make_worker_mesh(tp)`` mesh and a prefill-mode :class:`ShardingEnv`
+(shape-aware logical-axis rules, so decode steps with seq=1 automatically
+fall through to context-parallel KV sharding) and traces every step under
+``axis_rules``, activating the ``shard()`` annotations in the model code.
+Params and fresh caches are placed replicated on the mesh; activation
+constraints shard the compute.  When the process has fewer than ``tp``
+devices the engine falls back to an unsharded 1x1 layout (the declared
+``tp`` is still what the scheduler prices) — worker child processes get
+their device count forced by the pool so the fallback never triggers there.
 
 ``profile_engine`` measures the engine across a small grid of shapes and
 fits the AMPD perf-model coefficients (§3 offline profiler): the scheduler
-is then driven by *measured* numbers, not analytic constants.
+is then driven by *measured* numbers, not analytic constants.  With
+``kv=True`` it also times intra-process KV extract/insert round-trips and
+fits the ``"intra-process"`` link-class T_kv coefficients (§16); the
+socket-borne classes are fitted from ``TransportKVPath`` samples by the
+cluster/benchmarks.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -47,15 +62,41 @@ def chunk_limit(cfg: ModelConfig, max_len: int) -> int:
 class Engine:
     def __init__(self, model_or_cfg, *, max_len: int, key: Optional[jax.Array] = None,
                  params: Optional[Any] = None, opts: Optional[StepOptions] = None,
-                 impl: str = "auto"):
+                 impl: str = "auto", tp: int = 1):
         self.model: Model = (model_or_cfg if isinstance(model_or_cfg, Model)
                              else build_model(model_or_cfg))
         self.cfg = self.model.cfg
         self.max_len = max_len
         self.opts = opts or StepOptions(attn_impl=impl, fsdp=False, remat=False)
         self.pad_mult = _pad_mult(self.cfg)
+
+        #: requested tp degree (what the scheduler prices); mesh_tp is what
+        #: this process could actually build (§16)
+        self.tp = tp
+        self.mesh = None
+        self.sharding_env = None
+        self.mesh_tp = 1
+        if tp > 1:
+            if jax.device_count() >= tp:
+                from repro.distributed.sharding import ShardingEnv, make_rules
+                from repro.launch.mesh import make_worker_mesh
+                self.mesh = make_worker_mesh(tp)
+                # prefill-mode rules serve both phases: the shape-aware
+                # assignment drops seq-sharding for seq=1 decode steps and
+                # falls through to kv_seq context parallelism
+                self.sharding_env = ShardingEnv(self.mesh,
+                                                make_rules(mode="prefill"))
+                self.mesh_tp = tp
+            else:
+                warnings.warn(
+                    f"tp={tp} requested but only {jax.device_count()} "
+                    f"device(s) visible; engine runs unsharded (scheduler "
+                    f"still prices tp={tp})", RuntimeWarning, stacklevel=2)
+
         self.params = params if params is not None else self.model.init(
             key if key is not None else jax.random.PRNGKey(0))
+        if self.sharding_env is not None:
+            self.params = jax.device_put(self.params, self._replicated())
 
         cfg = self.cfg
         o = self.opts
@@ -82,8 +123,21 @@ class Engine:
         self._compose_fns: Dict[Tuple[int, int], Any] = {}
 
     # ------------------------------------------------------------------
+    def _replicated(self):
+        from jax.sharding import NamedSharding, PartitionSpec
+        return NamedSharding(self.mesh, PartitionSpec())
+
+    def _env(self):
+        """Context activating this engine's sharding rules for a step call
+        (a no-op ``axis_rules(None)`` for unsharded engines)."""
+        from repro.distributed.sharding import axis_rules
+        return axis_rules(self.sharding_env)
+
     def new_cache(self, batch: int):
-        return init_cache(self.cfg, batch, self.max_len)
+        cache = init_cache(self.cfg, batch, self.max_len)
+        if self.sharding_env is not None:
+            cache = jax.device_put(cache, self._replicated())
+        return cache
 
     def pad_chunk(self, tokens: np.ndarray, batch: int = 1) -> jnp.ndarray:
         """Right-pad a token chunk to the engine's padding multiple."""
@@ -96,8 +150,9 @@ class Engine:
     def run_chunk(self, cache, tokens: jnp.ndarray,
                   cross_embeds=None, compute_cross: bool = False):
         """Execute one (possibly padded) chunk; returns (cache, logits, aux)."""
-        return self._step(self.params, cache, tokens, cross_embeds,
-                          compute_cross=compute_cross)
+        with self._env():
+            return self._step(self.params, cache, tokens, cross_embeds,
+                              compute_cross=compute_cross)
 
     def prefill(self, token_ids: np.ndarray, *, cross_embeds=None):
         """Fresh single-request prefill; chunks per window constraints.
@@ -194,9 +249,10 @@ class Engine:
         self.tokens_uploaded += P
 
         fn = self._packed_fn(P, n_out)
-        cache, logits, aux = fn(self.params, cache, jnp.asarray(tokens),
-                                jnp.asarray(prows), jnp.asarray(offs),
-                                jnp.asarray(out_idx))
+        with self._env():
+            cache, logits, aux = fn(self.params, cache, jnp.asarray(tokens),
+                                    jnp.asarray(prows), jnp.asarray(offs),
+                                    jnp.asarray(out_idx))
         return cache, logits[:len(segments)], aux
 
     # ------------------------------------------------------------------
@@ -250,6 +306,8 @@ def profile_engine(engine: Engine, perf: PerfModel, tp: int,
                    batches: Tuple[int, ...] = (1, 4, 8),
                    fused: bool = False,
                    packed: bool = False,
+                   kv: bool = False,
+                   kv_lens: Tuple[int, ...] = (16, 48, 96),
                    seed: int = 0) -> PerfModel:
     """Measure the live engine and overwrite perf coefficients for `tp`.
 
@@ -259,7 +317,13 @@ def profile_engine(engine: Engine, perf: PerfModel, tp: int,
     from the fitted prefill/decode coefficients.  ``packed=True`` measures
     the fused samples on the ragged packed step (``run_packed``) instead of
     the dense rectangle, so the fitted T_fused absorbs the megakernel
-    speedup and the tuner/planner/offload guard inherit it."""
+    speedup and the tuner/planner/offload guard inherit it.
+
+    ``kv=True`` (§16) additionally times ``extract_range``+``insert_range``
+    round-trips — the in-process KV move the inproc transport performs on a
+    remote placement — and fits the ``"intra-process"`` link-class T_kv
+    coefficients.  Socket-borne classes (intra-host / cross-host) are
+    fitted from measured ``TransportKVPath`` samples by the cluster."""
     rng = np.random.default_rng(seed)
     cfg = engine.cfg
     V = cfg.vocab_size
@@ -338,4 +402,26 @@ def profile_engine(engine: Engine, perf: PerfModel, tp: int,
                     fused_samples.append((ctx, n, b, float(ctx), dt))
         if len(fused_samples) >= 5:
             perf.fit_fused(tp, fused_samples)
+
+    if kv:
+        from repro.serving.kv_transfer import (
+            extract_range, insert_range, reshard)
+        lens = [l for l in kv_lens if l + 8 <= engine.max_len]
+        if lens:
+            src = engine.new_cache(1)
+            htok = rng.integers(0, V, max(lens))
+            src, _, _ = engine.run_chunk(src, engine.pad_chunk(htok))
+            dst = engine.new_cache(1)
+            kv_samples = []
+            for l in lens:
+                def call(lo=0, hi=l):
+                    ext = extract_range(src, cfg, engine.max_len, lo, hi)
+                    return insert_range(dst, reshard(ext), cfg,
+                                        engine.max_len, lo, 0,
+                                        replace_state=True)
+
+                dt, _ = _time_call(call)
+                kv_samples.append((l, dt))
+            perf.fit_kv(kv_samples, link="intra-process")
+            perf.ensure_link_monotone()
     return perf

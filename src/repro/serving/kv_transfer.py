@@ -20,7 +20,7 @@ Cache layout note: leaves under ``stacked`` carry a leading layer-period dim
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -148,32 +148,64 @@ def migrate_handoff(cfg: ModelConfig, task, session, src_worker,
 
 
 class TransportKVPath:
-    """Measured KV movement between worker *processes* (DESIGN.md §13).
+    """Measured KV movement between worker *processes* (DESIGN.md §13/§16).
 
-    Under ``LiveCluster(transport="proc")`` every KV hop is real bytes over
-    the RPC socket — the incremental write-back (prefill -> decode), the
-    lazy history read (decode -> prefill), and the coordinator relay leg in
-    between — and this object is the single account of them: exact payload
-    bytes (``transfer_bytes`` of the tree that moved) and wall-clock
+    Under ``LiveCluster(transport="proc"|"tcp")`` every KV hop is real bytes
+    over the RPC socket — the incremental write-back (prefill -> decode),
+    the lazy history read (decode -> prefill), and the coordinator relay leg
+    in between — and this object is the single account of them: exact
+    payload bytes (``transfer_bytes`` of the tree that moved) and wall-clock
     seconds, measured around the blocking RPC, not modeled.  The in-process
     transport keeps the same protocol with ``jax.device_put`` copies; there
     the path stays unused and the modeled/measured T_kv comparison of
     ``benchmarks/fig12_transport.py`` is the reproduction target.
+
+    Heterogeneous topology (§16): each worker's coordinator link carries a
+    link class (``tag``, from the transport registry + the worker's hello
+    host), every transfer is attributed to its class, and the per-class
+    ``(payload bytes, seconds)`` samples feed
+    ``PerfModel.fit_kv_from_bytes`` — the measured side of the per-class
+    ``t_kv`` coefficients the scheduler prices.
     """
 
-    def __init__(self):
+    def __init__(self, default_class: str = "intra-host"):
         self.bytes_moved = 0
         self.seconds = 0.0
         self.transfers = 0
+        self.default_class = default_class
+        #: (kind, idx) -> link class of that worker's coordinator link
+        self.link_classes: Dict[Tuple[str, int], str] = {}
+        #: per-class accounting mirror of the three totals above
+        self.by_class: Dict[str, Dict[str, float]] = {}
+        #: per-class (payload bytes, seconds) fit samples
+        self.samples: Dict[str, list] = {}
 
     @property
     def ms(self) -> float:
         return self.seconds * 1e3
 
-    def account(self, nbytes: int, seconds: float) -> None:
+    def tag(self, kind: str, idx: int, link_class: str) -> None:
+        """Record the measured link class of one worker's coordinator link."""
+        self.link_classes[(kind, idx)] = link_class
+
+    def class_of(self, client) -> str:
+        """Link class of a worker RPC client (kind/idx-tagged)."""
+        return self.link_classes.get(
+            (getattr(client, "kind", None), getattr(client, "idx", None)),
+            self.default_class)
+
+    def account(self, nbytes: int, seconds: float,
+                link: Optional[str] = None) -> None:
         self.bytes_moved += int(nbytes)
         self.seconds += float(seconds)
         self.transfers += 1
+        c = link or self.default_class
+        agg = self.by_class.setdefault(
+            c, {"bytes": 0, "seconds": 0.0, "transfers": 0})
+        agg["bytes"] += int(nbytes)
+        agg["seconds"] += float(seconds)
+        agg["transfers"] += 1
+        self.samples.setdefault(c, []).append((int(nbytes), float(seconds)))
 
     def put(self, client, slot: int, lo: int, tree: Cache) -> float:
         """Incremental KV write-back into a decode worker's cache slot
@@ -182,7 +214,7 @@ class TransportKVPath:
         t0 = time.perf_counter()
         client.call("kv_put", slot=slot, lo=lo, tree=_numpy_tree(tree))
         dt = time.perf_counter() - t0
-        self.account(transfer_bytes(tree), dt)
+        self.account(transfer_bytes(tree), dt, link=self.class_of(client))
         return dt
 
     def get(self, client, slot: int, lo: int, hi: int) -> Cache:
@@ -190,7 +222,8 @@ class TransportKVPath:
         import time
         t0 = time.perf_counter()
         tree = client.call("kv_get", slot=slot, lo=lo, hi=hi)
-        self.account(transfer_bytes(tree), time.perf_counter() - t0)
+        self.account(transfer_bytes(tree), time.perf_counter() - t0,
+                     link=self.class_of(client))
         return tree
 
 

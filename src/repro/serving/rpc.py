@@ -1,14 +1,15 @@
 """Lightweight RPC layer between the coordinator and per-worker processes
-(DESIGN.md §13).
+(DESIGN.md §13/§16).
 
-Wire format — length-prefixed frames over a stream socket (AF_UNIX locally;
-the framing is transport-agnostic so a TCP deployment changes only the
-address family):
+Wire format — length-prefixed frames over a stream socket.  The framing is
+transport-agnostic: :class:`UnixAddress` (AF_UNIX, same-host workers) and
+:class:`TcpAddress` (host:port, cross-machine workers) produce the same
+byte stream, so a TCP deployment changes only the address family:
 
     [u32 header_len][header JSON][blob 0][blob 1]...
 
 The header is UTF-8 JSON; ``numpy`` arrays anywhere in the payload tree are
-hoisted out as raw binary blobs (zero re-encoding of KV bytes — the paylod
+hoisted out as raw binary blobs (zero re-encoding of KV bytes — the payload
 cost of a KV transfer IS the array bytes) and referenced from the JSON as
 ``{"__nd__": k, "dtype": ..., "shape": ...}``.  Dicts with non-string keys
 (slot -> token maps) encode as ``{"__kv__": [[k, v], ...]}``.
@@ -36,6 +37,7 @@ import json
 import socket
 import struct
 import traceback
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -43,7 +45,8 @@ import numpy as np
 from repro.runtime.backend import WorkerDiedError
 
 __all__ = ["RemoteError", "WorkerDiedError", "RpcConn", "RpcClient", "serve",
-           "pack", "unpack"]
+           "pack", "unpack", "Address", "UnixAddress", "TcpAddress",
+           "parse_address", "tune_socket"]
 
 _U32 = struct.Struct(">I")
 MAX_FRAME_BYTES = 1 << 31        # sanity bound on a single frame
@@ -51,6 +54,106 @@ MAX_FRAME_BYTES = 1 << 31        # sanity bound on a single frame
 
 class RemoteError(RuntimeError):
     """The worker raised while executing a request (it is still alive)."""
+
+
+# ---------------------------------------------------------------------------
+# addresses (DESIGN.md §16) — the only transport-specific code in the stack
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class UnixAddress:
+    """AF_UNIX stream socket: same-host workers (the proc transport)."""
+    path: str
+
+    @property
+    def spec(self) -> str:
+        """Wire form handed to a worker child (``--socket``)."""
+        return f"unix:{self.path}"
+
+    def listen(self, backlog: int = 64) -> socket.socket:
+        sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        sock.bind(self.path)
+        sock.listen(backlog)
+        return sock
+
+    def connect(self, timeout_s: Optional[float] = None) -> socket.socket:
+        sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        if timeout_s is not None:
+            sock.settimeout(timeout_s)
+        sock.connect(self.path)
+        return sock
+
+
+@dataclass(frozen=True)
+class TcpAddress:
+    """TCP stream socket: workers on other machines (the tcp transport).
+
+    ``port=0`` binds an ephemeral port; ``bound()`` of the listening socket
+    yields the address the children must actually dial."""
+    host: str = "127.0.0.1"
+    port: int = 0
+
+    @property
+    def spec(self) -> str:
+        return f"tcp:{self.host}:{self.port}"
+
+    def listen(self, backlog: int = 64) -> socket.socket:
+        sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        sock.bind((self.host, self.port))
+        sock.listen(backlog)
+        return sock
+
+    def bound(self, listener: socket.socket) -> "TcpAddress":
+        """The concrete address after binding (resolves ``port=0``)."""
+        _, port = listener.getsockname()[:2]
+        return TcpAddress(self.host, port)
+
+    def connect(self, timeout_s: Optional[float] = None) -> socket.socket:
+        sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        if timeout_s is not None:
+            sock.settimeout(timeout_s)
+        sock.connect((self.host, self.port))
+        return sock
+
+
+Address = Any  # UnixAddress | TcpAddress (duck-typed: spec/listen/connect)
+
+
+def parse_address(spec: str) -> Address:
+    """Inverse of ``Address.spec``; a bare path (no scheme) stays AF_UNIX
+    for compatibility with pre-§16 worker command lines."""
+    if spec.startswith("unix:"):
+        return UnixAddress(spec[len("unix:"):])
+    if spec.startswith("tcp:"):
+        host, _, port = spec[len("tcp:"):].rpartition(":")
+        return TcpAddress(host or "127.0.0.1", int(port))
+    return UnixAddress(spec)
+
+
+def tune_socket(sock: socket.socket, *, nodelay: bool = True,
+                keepalive_s: float = 0.0) -> None:
+    """Apply the §16 stream options to a connected socket.
+
+    ``TCP_NODELAY`` matters for the request/response RPC pattern (a delayed
+    ACK + Nagle interaction would add ~40ms to every small call);
+    ``keepalive`` bounds how long a silently-dead peer looks alive between
+    calls.  No-op for AF_UNIX sockets (they have neither)."""
+    if sock.family != socket.AF_INET and sock.family != getattr(
+            socket, "AF_INET6", object()):
+        return
+    try:
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY,
+                        1 if nodelay else 0)
+        if keepalive_s > 0:
+            sock.setsockopt(socket.SOL_SOCKET, socket.SO_KEEPALIVE, 1)
+            idle = max(1, int(keepalive_s))
+            for opt in ("TCP_KEEPIDLE", "TCP_KEEPINTVL"):
+                if hasattr(socket, opt):
+                    sock.setsockopt(socket.IPPROTO_TCP,
+                                    getattr(socket, opt), idle)
+    except OSError:     # pragma: no cover — platform without these options
+        pass
 
 
 # ---------------------------------------------------------------------------
@@ -96,7 +199,11 @@ def unpack(enc: Any, blobs: List[memoryview]) -> Any:
             a = np.frombuffer(blobs[enc["__nd__"]], dtype=np.dtype(enc["dtype"]))
             return a.reshape(enc["shape"]).copy()
         if "__kv__" in enc:
-            return {unpack(k, blobs): unpack(v, blobs) for k, v in enc["__kv__"]}
+            # a key decoded as a list must have been a tuple — lists are
+            # unhashable, so they cannot occur in key position
+            return {(tuple(k) if isinstance(k := unpack(k_enc, blobs), list)
+                     else k): unpack(v, blobs)
+                    for k_enc, v in enc["__kv__"]}
         return {k: unpack(v, blobs) for k, v in enc.items()}
     if isinstance(enc, list):
         return [unpack(v, blobs) for v in enc]
@@ -131,8 +238,12 @@ class RpcConn:
         enc, blobs = pack(msg)
         enc["blobs"] = [len(b) for b in blobs]
         header = json.dumps(enc, separators=(",", ":")).encode()
-        if len(header) > MAX_FRAME_BYTES:
-            raise ValueError("oversized RPC header")
+        total = len(header) + sum(len(b) for b in blobs)
+        if total > MAX_FRAME_BYTES:
+            # bound the SEND path too: a single over-large KV tree must fail
+            # loudly here, not as a corrupt-frame death on the receiver
+            raise ValueError(
+                f"oversized RPC frame ({total} bytes > {MAX_FRAME_BYTES})")
         parts = [_U32.pack(len(header)), header, *blobs]
         data = b"".join(parts)
         self.sock.sendall(data)
@@ -145,6 +256,9 @@ class RpcConn:
             raise ConnectionError(f"corrupt frame (header {hlen} bytes)")
         header = json.loads(bytes(_recv_exact(self.sock, hlen)))
         sizes = header.pop("blobs", [])
+        if hlen + sum(sizes) > MAX_FRAME_BYTES:
+            raise ConnectionError(
+                f"corrupt frame ({hlen + sum(sizes)} bytes total)")
         blobs: List[memoryview] = []
         total = 4 + hlen
         for n in sizes:

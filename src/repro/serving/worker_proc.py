@@ -1,8 +1,9 @@
-"""Per-worker OS processes for the live cluster (DESIGN.md §13).
+"""Per-worker OS processes for the live cluster (DESIGN.md §13/§16).
 
-Under ``LiveCluster(transport="proc")`` every prefill/decode worker is a
-real child process owning its own JAX engine (its mesh slice), serving the
-engine surface over the RPC layer in ``repro.serving.rpc``:
+Under ``LiveCluster(transport="proc"|"tcp")`` every prefill/decode worker is
+a real child process owning its own JAX engine (its mesh slice — tp>1
+children force their host-platform device count and build a tp-way mesh),
+serving the engine surface over the RPC layer in ``repro.serving.rpc``:
 
     prefill_chunk   run one prefill chunk (optionally seeded with a
                     shipped history extract); returns the KV increment
@@ -32,6 +33,15 @@ This module has both halves of the process boundary:
     repro.serving.worker_proc``), matches their hellos, and owns teardown;
     ``kill()`` on a handle is a real ``SIGKILL`` — the failure-injection
     path of ``LiveCluster.fail_worker`` under the proc transport.
+
+The pool is transport-agnostic (§16): the transport registry
+(``repro.serving.config``) supplies the coordinator's listen address
+(AF_UNIX path vs TCP host:port) and each worker's hello carries its
+hostname, so spawn/hello/teardown — and the KV link-class tagging on
+``TransportKVPath`` — are shared verbatim between the proc and tcp
+transports.  Off-host workers simply dial the advertised ``tcp:`` address;
+anything the pool did not spawn itself can still be adopted by running the
+child by hand with the same ``--socket`` spec.
 """
 from __future__ import annotations
 
@@ -87,11 +97,19 @@ def config_from_json(text: str) -> ModelConfig:
     return ModelConfig(**d)
 
 
-def transport_available() -> bool:
-    """Whether this host can run the proc transport (subprocess spawn +
-    AF_UNIX sockets) — tests skip gracefully when it cannot."""
-    if not hasattr(socket, "AF_UNIX"):
+def transport_available(kind: str = "proc") -> bool:
+    """Whether this host can run a multiprocess transport (subprocess spawn
+    + the transport's socket family) — tests skip gracefully when it
+    cannot."""
+    if kind == "proc" and not hasattr(socket, "AF_UNIX"):
         return False
+    if kind == "tcp":
+        try:
+            s = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+            s.bind(("127.0.0.1", 0))
+            s.close()
+        except OSError:
+            return False
     try:
         subprocess.run([sys.executable, "-c", "pass"], timeout=60, check=True,
                        stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
@@ -204,22 +222,30 @@ def main(argv: Optional[List[str]] = None) -> None:  # pragma: no cover — the
     # child entry point is exercised end-to-end by tests/test_multiproc_*
     # in real subprocesses, which the coverage tracer does not follow.
     ap = argparse.ArgumentParser()
-    ap.add_argument("--socket", required=True)
+    ap.add_argument("--socket", required=True,
+                    help="coordinator address spec: unix:<path>, "
+                         "tcp:<host>:<port>, or a bare AF_UNIX path")
     ap.add_argument("--kind", choices=("prefill", "decode"), required=True)
     ap.add_argument("--idx", type=int, required=True)
     ap.add_argument("--cfg", required=True, help="ModelConfig as JSON")
     ap.add_argument("--max-len", type=int, required=True)
     ap.add_argument("--max-slots", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree of this worker's mesh slice")
+    ap.add_argument("--nodelay", type=int, default=1)
+    ap.add_argument("--keepalive-s", type=float, default=0.0)
     ap.add_argument("--packed", type=int, default=-1,
                     help="ragged packed fused path: 1=on, 0=off, -1=auto")
     args = ap.parse_args(argv)
 
-    sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
-    sock.connect(args.socket)
+    sock = rpc.parse_address(args.socket).connect()
+    rpc.tune_socket(sock, nodelay=bool(args.nodelay),
+                    keepalive_s=args.keepalive_s)
     conn = rpc.RpcConn(sock)
     conn.send_msg({"hello": {"kind": args.kind, "idx": args.idx,
-                             "pid": os.getpid()}})
+                             "pid": os.getpid(),
+                             "host": socket.gethostname()}})
 
     import jax
     from repro.serving.engine import Engine
@@ -229,12 +255,13 @@ def main(argv: Optional[List[str]] = None) -> None:  # pragma: no cover — the
     # deterministic params from the shared seed: every worker process holds
     # byte-identical weights (the cross-process form of param sharing)
     engine = Engine(cfg, max_len=args.max_len,
-                    key=jax.random.PRNGKey(args.seed))
+                    key=jax.random.PRNGKey(args.seed), tp=args.tp)
     if args.kind == "prefill":
-        worker = LivePrefillWorker(args.idx, engine)
+        worker = LivePrefillWorker(args.idx, engine, tp=args.tp)
         handlers = _prefill_handlers(worker)
     else:
         worker = LiveDecodeWorker(args.idx, engine, max_slots=args.max_slots,
+                                  tp=args.tp,
                                   packed=(None if args.packed < 0
                                           else bool(args.packed)))
         handlers = _decode_handlers(worker)
@@ -339,7 +366,8 @@ class ProcPrefillWorker(_ProcWorkerBase):
         self.kv_bytes_moved += moved
         # the KV share of this call's wall time: round trip minus the
         # engine's own compute (reported by the child)
-        self.kv_path.account(moved, max(0.0, round_trip - out["eng_s"]))
+        self.kv_path.account(moved, max(0.0, round_trip - out["eng_s"]),
+                             link=self.kv_path.class_of(self.client))
         return {"increment": out["increment"], "logits": out["logits"]}
 
     def steal_handoff(self, task: PrefillTask, session=None) -> int:
@@ -436,28 +464,57 @@ def _src_root() -> str:
 
 
 class ProcWorkerPool:
-    """Owns the coordinator socket and every spawned worker process."""
+    """Owns the coordinator socket and every spawned worker process.
+
+    Transport-agnostic (§16): the listen address comes from the transport
+    registry (AF_UNIX path for ``proc``, host:port for ``tcp``), children
+    get the dial spec on their command line, and everything else — hello
+    matching, RPC clients, SIGKILL/teardown — is shared."""
 
     def __init__(self, cfg: ModelConfig, *, max_len: int, max_slots: int = 4,
-                 seed: int = 0, rpc_timeout_s: float = 180.0,
-                 spawn_timeout_s: float = 120.0,
+                 seed: int = 0, rpc_timeout_s: Optional[float] = None,
+                 spawn_timeout_s: Optional[float] = None,
                  kv_path: Optional[TransportKVPath] = None,
-                 packed: Optional[bool] = None):
+                 packed: Optional[bool] = None,
+                 transport: Optional[object] = None, tp: int = 1):
+        from repro.serving.config import (
+            TRANSPORT_REGISTRY, resolve_transport)
+        tcfg = resolve_transport(transport if transport is not None
+                                 else "proc")
+        if rpc_timeout_s is not None:
+            tcfg = tcfg.replace(rpc_timeout_s=rpc_timeout_s)
+        if spawn_timeout_s is not None:
+            tcfg = tcfg.replace(spawn_timeout_s=spawn_timeout_s)
+        entry = TRANSPORT_REGISTRY[tcfg.kind]
+        if not entry.multiprocess:
+            raise ValueError(
+                f"transport {tcfg.kind!r} does not spawn worker processes")
         self.cfg = cfg
         self.max_len = max_len
         self.max_slots = max_slots
         self.packed = packed
         self.seed = seed
-        self.rpc_timeout_s = rpc_timeout_s
-        self.spawn_timeout_s = spawn_timeout_s
+        self.tp = tp
+        self.transport = tcfg
+        self._entry = entry
+        self.rpc_timeout_s = tcfg.rpc_timeout_s
+        self.spawn_timeout_s = tcfg.spawn_timeout_s
         self.kv_path = kv_path or TransportKVPath()
+        self.kv_path.default_class = entry.link_class
+        self.host = socket.gethostname()
+        #: (kind, idx) -> hello-reported hostname, for LinkTopology
+        self.worker_hosts: Dict[Tuple[str, int], str] = {}
         self.workers: List[_ProcWorkerBase] = []
         self._dir = tempfile.mkdtemp(prefix="repro-cluster-")
-        self._sock_path = os.path.join(self._dir, "coordinator.sock")
-        self._listener = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
-        self._listener.bind(self._sock_path)
-        self._listener.listen(64)
-        self._listener.settimeout(spawn_timeout_s)
+        addr = entry.make_address(tcfg, self._dir)
+        self._listener = addr.listen(64)
+        if isinstance(addr, rpc.TcpAddress):
+            addr = addr.bound(self._listener)    # resolve ephemeral port
+        self.address = addr
+        #: the spec children dial — an operator can advertise a routable
+        #: host for genuinely off-host workers
+        self.dial_spec = tcfg.advertise or addr.spec
+        self._listener.settimeout(self.spawn_timeout_s)
         self._closed = False
         atexit.register(self.close)
 
@@ -469,12 +526,21 @@ class ProcWorkerPool:
         # device; an operator who pins JAX_PLATFORMS explicitly (e.g. to
         # hand each worker its own accelerator) keeps their setting
         env.setdefault("JAX_PLATFORMS", "cpu")
+        if self.tp > 1:
+            # a tp-way mesh needs tp devices; on the CPU platform force the
+            # host device count BEFORE the child imports jax (the same trick
+            # the dry-run entrypoint uses for production-scale meshes)
+            flag = f"--xla_force_host_platform_device_count={self.tp}"
+            env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + flag).strip()
         log = open(os.path.join(self._dir, f"{kind}{idx}.log"), "wb")
         cmd = [sys.executable, "-m", "repro.serving.worker_proc",
-               "--socket", self._sock_path, "--kind", kind,
+               "--socket", self.dial_spec, "--kind", kind,
                "--idx", str(idx), "--cfg", config_to_json(self.cfg),
                "--max-len", str(self.max_len),
                "--max-slots", str(self.max_slots), "--seed", str(self.seed),
+               "--tp", str(self.tp),
+               "--nodelay", str(int(self.transport.nodelay)),
+               "--keepalive-s", str(self.transport.keepalive_s),
                "--packed",
                str(-1 if self.packed is None else int(self.packed))]
         try:
@@ -512,6 +578,8 @@ class ProcWorkerPool:
             # the hello read too, or a child wedged between connect() and
             # its hello would hang the spawn past the deadline
             conn.settimeout(max(1.0, deadline - time.monotonic()))
+            rpc.tune_socket(conn, nodelay=self.transport.nodelay,
+                            keepalive_s=self.transport.keepalive_s)
             client_probe = rpc.RpcConn(conn)
             try:
                 hello, _ = client_probe.recv_msg()
@@ -519,20 +587,30 @@ class ProcWorkerPool:
                 client_probe.close()
                 continue            # count against the spawn deadline
             kind, idx = hello["hello"]["kind"], hello["hello"]["idx"]
+            worker_host = hello["hello"].get("host", self.host)
             proc = procs[(kind, idx)]
             client = rpc.RpcClient(conn, kind, idx, timeout_s=self.rpc_timeout_s)
+            # link class of this worker's coordinator link: the registry's
+            # class for same-host children, cross-host for a worker whose
+            # hello names another machine (it dialed the advertised address)
+            link = (self._entry.link_class if worker_host == self.host
+                    else "cross-host")
+            self.worker_hosts[(kind, idx)] = worker_host
+            self.kv_path.tag(kind, idx, link)
             if kind == "prefill":
                 w = ProcPrefillWorker(idx, client, proc, self.cfg,
-                                      self.max_len, self.kv_path)
+                                      self.max_len, self.kv_path, tp=self.tp)
             else:
                 from repro.models.packed import supports_packed
                 resolved = (self.packed is not False
                             and supports_packed(self.cfg))
                 w = ProcDecodeWorker(idx, client, proc, self.cfg,
                                      self.max_len, self.kv_path,
-                                     max_slots=self.max_slots,
+                                     max_slots=self.max_slots, tp=self.tp,
                                      chunk_tokens=chunks[(kind, idx)],
                                      packed=resolved)
+            w.host = worker_host
+            w.link_class = link
             out[(kind, idx)] = w
             self.workers.append(w)
         return [out[(k, i)] for k, i, _ in specs]

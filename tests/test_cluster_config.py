@@ -1,0 +1,193 @@
+"""The §16 config-object API: SchedPolicy <-> SimConfig mirror contract,
+the transport registry, and the LiveCluster deprecation shim for the old
+flat-kwarg surface.
+
+The mirror test is the drift guard: SchedPolicy drives the LIVE cluster and
+``SchedPolicy.sim_config()`` drives the MODELED runs, so a field that is
+renamed or re-defaulted on one side but not the other would silently price
+the two runs differently.  Everything here is pure-config — no engines — so
+it stays in the fast tier-1 lane, except one real ``LiveCluster``
+construction that pins the shim's warn-and-map behaviour end to end.
+"""
+import dataclasses
+import warnings
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.simulator import SimConfig
+from repro.core.types import SLOSpec
+from repro.serving import (
+    ClusterSpec,
+    LiveCluster,
+    SchedPolicy,
+    TRANSPORT_REGISTRY,
+    TransportConfig,
+    register_transport,
+    resolve_transport,
+)
+from repro.serving.config import TransportEntry
+
+
+# ---------------------------------------------------------------------------
+# SchedPolicy <-> SimConfig mirror contract
+# ---------------------------------------------------------------------------
+
+def _defaults(cls):
+    out = {}
+    for f in dataclasses.fields(cls):
+        if f.default is not dataclasses.MISSING:
+            out[f.name] = f.default
+    return out
+
+
+def test_mirrored_fields_exist_with_equal_defaults():
+    sim, pol = _defaults(SimConfig), _defaults(SchedPolicy)
+    for name in SchedPolicy.MIRRORED:
+        assert name in sim, f"SimConfig lost mirrored field {name!r}"
+        assert name in pol, f"SchedPolicy lost mirrored field {name!r}"
+        assert pol[name] == sim[name], (
+            f"default drift on {name!r}: SchedPolicy={pol[name]!r} "
+            f"SimConfig={sim[name]!r}")
+
+
+def test_mirror_list_covers_all_shared_scheduling_fields():
+    """Any field name present on BOTH dataclasses must be in MIRRORED —
+    otherwise a shared knob exists that sim_config() silently drops."""
+    sim_names = {f.name for f in dataclasses.fields(SimConfig)}
+    pol_names = {f.name for f in dataclasses.fields(SchedPolicy)}
+    shared = sim_names & pol_names
+    assert shared == set(SchedPolicy.MIRRORED)
+
+
+def test_sim_config_carries_policy_values_and_overrides():
+    pol = SchedPolicy(scheduler="vllm", chunk_tokens=32, work_stealing=True,
+                      offload_budget=3)
+    cfg = pol.sim_config(seed=7)
+    for name in SchedPolicy.MIRRORED:
+        assert getattr(cfg, name) == getattr(pol, name)
+    assert cfg.seed == 7
+    # live-only fields never leak into the simulator config
+    assert not hasattr(cfg, "packed")
+    assert not hasattr(cfg, "decode_chunk_tokens")
+
+
+# ---------------------------------------------------------------------------
+# config objects
+# ---------------------------------------------------------------------------
+
+def test_config_objects_are_frozen_with_replace():
+    spec = ClusterSpec()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        spec.n_prefill = 2
+    assert spec.replace(n_prefill=2, tp=4) == ClusterSpec(n_prefill=2, tp=4)
+    assert spec == ClusterSpec()                      # original untouched
+
+    tcfg = TransportConfig(kind="tcp")
+    assert tcfg.replace(port=9000).port == 9000
+    assert tcfg.port == 0
+
+    pol = SchedPolicy()
+    assert pol.replace(chunk_tokens=16).chunk_tokens == 16
+
+
+# ---------------------------------------------------------------------------
+# transport registry
+# ---------------------------------------------------------------------------
+
+def test_registry_builtin_entries():
+    assert set(TRANSPORT_REGISTRY) >= {"inproc", "proc", "tcp"}
+    assert TRANSPORT_REGISTRY["inproc"].multiprocess is False
+    assert TRANSPORT_REGISTRY["inproc"].link_class == "intra-process"
+    for kind in ("proc", "tcp"):
+        e = TRANSPORT_REGISTRY[kind]
+        assert e.multiprocess is True
+        assert e.link_class == "intra-host"
+        assert e.make_address is not None
+
+
+def test_resolve_transport_normalizes():
+    assert resolve_transport(None) == TransportConfig()
+    assert resolve_transport("tcp") == TransportConfig(kind="tcp")
+    tcfg = TransportConfig(kind="proc", rpc_timeout_s=5.0)
+    assert resolve_transport(tcfg) is tcfg
+
+
+def test_resolve_transport_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="transport"):
+        resolve_transport("carrier-pigeon")
+    with pytest.raises(ValueError, match="transport"):
+        resolve_transport(TransportConfig(kind="smoke-signals"))
+
+
+def test_resolve_transport_rejects_wrong_type():
+    with pytest.raises(TypeError, match="TransportConfig or str"):
+        resolve_transport(42)
+
+
+def test_register_transport_round_trip():
+    entry = TransportEntry(kind="test-null", multiprocess=False,
+                           link_class="intra-process")
+    try:
+        register_transport(entry)
+        assert resolve_transport("test-null").kind == "test-null"
+    finally:
+        TRANSPORT_REGISTRY.pop("test-null", None)
+
+
+# ---------------------------------------------------------------------------
+# LiveCluster deprecation shim
+# ---------------------------------------------------------------------------
+
+def test_unknown_kwarg_rejected_before_construction():
+    cfg = get_config("qwen2.5-14b").reduced()
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        LiveCluster(cfg, definitely_not_a_knob=1)
+
+
+def test_legacy_kwargs_warn_and_map():
+    cfg = get_config("qwen2.5-14b").reduced()
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        cl = LiveCluster(cfg, n_prefill=1, n_decode=1, max_slots=2,
+                         max_len=64, scheduler="vllm", chunk_tokens=16,
+                         slo=SLOSpec(10.0, 10.0), profile=False)
+    try:
+        assert cl.spec == ClusterSpec(n_prefill=1, n_decode=1, max_slots=2,
+                                      max_len=64)
+        assert cl.policy.scheduler == "vllm"
+        assert cl.policy.chunk_tokens == 16
+        assert cl.transport == "inproc"
+    finally:
+        cl.close()
+
+
+def test_legacy_kwargs_fold_onto_explicit_objects():
+    """Mixing styles: explicit objects win as the base, legacy kwargs
+    overlay onto them (still with a warning)."""
+    cfg = get_config("qwen2.5-14b").reduced()
+    with pytest.warns(DeprecationWarning):
+        cl = LiveCluster(cfg,
+                         spec=ClusterSpec(n_prefill=1, n_decode=1,
+                                          max_slots=4, max_len=64),
+                         policy=SchedPolicy(scheduler="vllm"),
+                         chunk_tokens=8,          # legacy overlay
+                         slo=SLOSpec(10.0, 10.0), profile=False)
+    try:
+        assert cl.policy.scheduler == "vllm"      # from the object
+        assert cl.policy.chunk_tokens == 8        # from the overlay
+        assert cl.spec.max_slots == 4
+    finally:
+        cl.close()
+
+
+def test_string_transport_shorthand_does_not_warn():
+    """transport="inproc" is shorthand, not a legacy kwarg — no warning."""
+    cfg = get_config("qwen2.5-14b").reduced()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        cl = LiveCluster(cfg,
+                         spec=ClusterSpec(n_prefill=1, n_decode=1,
+                                          max_slots=2, max_len=64),
+                         transport="inproc", slo=SLOSpec(10.0, 10.0),
+                         profile=False)
+    cl.close()

@@ -11,6 +11,7 @@ from repro.core.types import PrefillTask, RoundSpec, SLOSpec
 from repro.models.packed import supports_packed
 from repro.runtime.chunk_tuner import ChunkTuner
 from repro.serving.cluster import LiveCluster, make_live_sessions
+from repro.serving.config import ClusterSpec, SchedPolicy
 from repro.serving.engine import Engine, chunk_limit, profile_engine
 from repro.serving.workers import LiveDecodeWorker, LiveSession
 
@@ -179,9 +180,11 @@ def test_packed_vs_dense_worker_tokens():
 # ---------------------------------------------------------------------------
 
 def _run_cluster(cfg, packed):
-    cl = LiveCluster(cfg, n_prefill=1, n_decode=1, max_slots=4, max_len=128,
-                     profile=False, packed=packed, chunk_tokens=16,
-                     slo=SLOSpec(10.0, 10.0))
+    cl = LiveCluster(cfg,
+                     spec=ClusterSpec(n_prefill=1, n_decode=1, max_slots=4,
+                                      max_len=128),
+                     policy=SchedPolicy(packed=packed, chunk_tokens=16),
+                     profile=False, slo=SLOSpec(10.0, 10.0))
     cl.coordinator.record_decisions = True
     # arrival gap >> any engine duration: event order (hence the decision
     # log) is protocol-determined, not timing-determined — the same device

@@ -198,17 +198,15 @@ def test_decode_chunks_expansion_for_live_cluster():
 def test_per_group_chunk_tokens_reach_live_workers():
     from repro.configs import get_config as gc
     from repro.serving.cluster import LiveCluster
+    from repro.serving.config import ClusterSpec, SchedPolicy
 
     cfg = gc("qwen2.5-14b").reduced()
     cl = LiveCluster(
         cfg,
-        n_prefill=1,
-        n_decode=2,
-        max_slots=1,
-        max_len=64,
-        scheduler="ampd-chunked",
+        spec=ClusterSpec(n_prefill=1, n_decode=2, max_slots=1, max_len=64),
+        policy=SchedPolicy(scheduler="ampd-chunked",
+                           decode_chunk_tokens=(16, 8)),
         profile=False,
-        decode_chunk_tokens=(16, 8),
     )
     assert [w.chunk_tokens for w in cl.decode_workers] == [16, 8]
     assert cl.runtime._chunked

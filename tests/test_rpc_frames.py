@@ -1,0 +1,301 @@
+"""Unit tests for the RPC wire layer (DESIGN.md §13/§16): framing bounds,
+address abstraction, socket tuning, and the TCP-loopback client/server
+round-trip.
+
+These run against plain socketpairs and an in-thread ``serve()`` loop — no
+worker subprocesses — so they exercise exactly the layer below
+tests/test_multiproc_cluster.py: pack/unpack fidelity, the MAX_FRAME_BYTES
+bound on BOTH the send path (loud ValueError at the producer) and the recv
+path (corrupt-frame ConnectionError), and the death/remote-error semantics
+of :class:`~repro.serving.rpc.RpcClient`.
+"""
+import socket
+import threading
+
+import numpy as np
+import pytest
+
+from repro.serving import rpc
+from repro.serving.rpc import (
+    RemoteError,
+    RpcClient,
+    RpcConn,
+    TcpAddress,
+    UnixAddress,
+    WorkerDiedError,
+    pack,
+    parse_address,
+    serve,
+    tune_socket,
+    unpack,
+)
+
+
+# ---------------------------------------------------------------------------
+# address abstraction
+# ---------------------------------------------------------------------------
+
+def test_parse_address_round_trips():
+    for spec, expect in [
+        ("unix:/tmp/x.sock", UnixAddress("/tmp/x.sock")),
+        ("tcp:127.0.0.1:8471", TcpAddress("127.0.0.1", 8471)),
+        ("tcp:[::1]:8471", TcpAddress("[::1]", 8471)),
+    ]:
+        addr = parse_address(spec)
+        assert addr == expect
+        assert addr.spec == spec
+        assert parse_address(addr.spec) == addr
+
+
+def test_bare_path_stays_af_unix():
+    # pre-§16 worker command lines pass a raw socket path
+    addr = parse_address("/tmp/coordinator.sock")
+    assert addr == UnixAddress("/tmp/coordinator.sock")
+
+
+def test_tcp_port_defaults_host():
+    assert parse_address("tcp::9000") == TcpAddress("127.0.0.1", 9000)
+
+
+def test_tcp_listen_resolves_ephemeral_port():
+    addr = TcpAddress("127.0.0.1", 0)
+    listener = addr.listen()
+    try:
+        bound = addr.bound(listener)
+        assert bound.host == "127.0.0.1"
+        assert bound.port > 0
+        assert bound.spec == f"tcp:127.0.0.1:{bound.port}"
+    finally:
+        listener.close()
+
+
+def test_tune_socket_sets_nodelay_on_tcp():
+    a = TcpAddress("127.0.0.1", 0)
+    listener = a.listen()
+    try:
+        bound = a.bound(listener)
+        client = bound.connect(timeout_s=5.0)
+        server, _ = listener.accept()
+        try:
+            tune_socket(client, nodelay=True, keepalive_s=7.0)
+            assert client.getsockopt(socket.IPPROTO_TCP,
+                                     socket.TCP_NODELAY) != 0
+            assert client.getsockopt(socket.SOL_SOCKET,
+                                     socket.SO_KEEPALIVE) != 0
+            tune_socket(server, nodelay=False)
+            assert server.getsockopt(socket.IPPROTO_TCP,
+                                     socket.TCP_NODELAY) == 0
+        finally:
+            client.close()
+            server.close()
+    finally:
+        listener.close()
+
+
+def test_tune_socket_noop_on_af_unix():
+    a, b = socket.socketpair()
+    try:
+        tune_socket(a, nodelay=True, keepalive_s=30.0)   # must not raise
+        assert a.getsockopt(socket.SOL_SOCKET, socket.SO_KEEPALIVE) == 0
+    finally:
+        a.close()
+        b.close()
+
+
+# ---------------------------------------------------------------------------
+# payload encoding
+# ---------------------------------------------------------------------------
+
+def test_pack_unpack_round_trip():
+    payload = {
+        "arr": np.arange(12, dtype=np.int32).reshape(3, 4),
+        "f16": np.ones((2, 2), dtype=np.float16) * 0.5,
+        "nested": [1, 2.5, "s", None, True, {"k": np.float32(3.0)}],
+        "kv": {(0, 1): np.zeros(3, dtype=np.int8), 2: "v"},
+    }
+    enc, blobs = pack(payload)
+    out = unpack(enc, [memoryview(b) for b in blobs])
+    np.testing.assert_array_equal(out["arr"], payload["arr"])
+    np.testing.assert_array_equal(out["f16"], payload["f16"])
+    assert out["nested"] == [1, 2.5, "s", None, True, {"k": 3.0}]
+    # non-string dict keys travel through the __kv__ escape; tuple keys
+    # survive (JSON turns them into lists, unpack restores the tuple)
+    np.testing.assert_array_equal(out["kv"][(0, 1)], payload["kv"][(0, 1)])
+    assert out["kv"][2] == "v"
+
+
+def test_pack_rejects_unencodable():
+    with pytest.raises(TypeError, match="cannot encode"):
+        pack({"bad": object()})
+
+
+# ---------------------------------------------------------------------------
+# framing bounds
+# ---------------------------------------------------------------------------
+
+def _conn_pair():
+    a, b = socket.socketpair()
+    return RpcConn(a), RpcConn(b)
+
+
+def test_send_msg_round_trip_over_socketpair():
+    tx, rx = _conn_pair()
+    try:
+        msg = {"id": 1, "m": "echo",
+               "p": {"x": np.arange(5, dtype=np.int64)}}
+        sent = tx.send_msg(msg)
+        out, received = rx.recv_msg()
+        assert sent == received           # same frame, both sides count it
+        assert out["id"] == 1 and out["m"] == "echo"
+        np.testing.assert_array_equal(out["p"]["x"], msg["p"]["x"])
+        assert tx.bytes_sent == sent
+        assert rx.bytes_received == received
+    finally:
+        tx.close()
+        rx.close()
+
+
+def test_oversized_frame_rejected_on_send(monkeypatch):
+    """§16: a single over-large KV tree must fail loudly at the producer,
+    not as a corrupt-frame death on the receiver."""
+    monkeypatch.setattr(rpc, "MAX_FRAME_BYTES", 4096)
+    tx, rx = _conn_pair()
+    try:
+        with pytest.raises(ValueError, match="oversized RPC frame"):
+            tx.send_msg({"m": "put", "p": np.zeros(8192, dtype=np.uint8)})
+        assert tx.bytes_sent == 0          # nothing hit the wire
+    finally:
+        tx.close()
+        rx.close()
+
+
+def test_corrupt_header_length_rejected_on_recv():
+    tx, rx = _conn_pair()
+    try:
+        # u32 header length beyond MAX_FRAME_BYTES: a desynchronised or
+        # corrupted stream, not a real frame
+        tx.sock.sendall(rpc._U32.pack(rpc.MAX_FRAME_BYTES + 1))
+        with pytest.raises(ConnectionError, match="corrupt frame"):
+            rx.recv_msg()
+    finally:
+        tx.close()
+        rx.close()
+
+
+def test_corrupt_blob_total_rejected_on_recv(monkeypatch):
+    tx, rx = _conn_pair()
+    try:
+        import json
+        header = json.dumps({"m": "x", "blobs": [4096]}).encode()
+        tx.sock.sendall(rpc._U32.pack(len(header)) + header)
+        monkeypatch.setattr(rpc, "MAX_FRAME_BYTES", 1024)
+        with pytest.raises(ConnectionError, match="corrupt frame"):
+            rx.recv_msg()
+    finally:
+        tx.close()
+        rx.close()
+
+
+def test_recv_on_closed_peer_raises_connection_error():
+    tx, rx = _conn_pair()
+    tx.close()
+    try:
+        with pytest.raises(ConnectionError, match="peer closed"):
+            rx.recv_msg()
+    finally:
+        rx.close()
+
+
+# ---------------------------------------------------------------------------
+# TCP loopback client/server round-trip
+# ---------------------------------------------------------------------------
+
+def _serve_tcp(handlers):
+    """Spin ``serve()`` on a loopback listener in a daemon thread; return
+    the connected client socket."""
+    addr = TcpAddress("127.0.0.1", 0)
+    listener = addr.listen()
+    bound = addr.bound(listener)
+
+    def _run():
+        conn_sock, _ = listener.accept()
+        tune_socket(conn_sock)
+        serve(RpcConn(conn_sock), handlers)
+        conn_sock.close()
+
+    t = threading.Thread(target=_run, daemon=True)
+    t.start()
+    client_sock = bound.connect(timeout_s=5.0)
+    tune_socket(client_sock)
+    return client_sock, listener, t
+
+
+def test_tcp_loopback_call_and_remote_error():
+    def echo(**params):
+        return {"got": params["x"] * 2}
+
+    def boom(**_params):
+        raise RuntimeError("handler exploded")
+
+    def bye(**_params):
+        raise SystemExit
+
+    sock, listener, thread = _serve_tcp(
+        {"echo": echo, "boom": boom, "shutdown": bye})
+    client = RpcClient(sock, "prefill", 0, timeout_s=10.0)
+    try:
+        out = client.call("echo", x=np.arange(4, dtype=np.int32))
+        np.testing.assert_array_equal(out["got"],
+                                      np.arange(4, dtype=np.int32) * 2)
+        # a handler exception ships back as RemoteError; the worker stays up
+        with pytest.raises(RemoteError, match="handler exploded"):
+            client.call("boom")
+        with pytest.raises(RemoteError, match="unknown RPC method"):
+            client.call("nope")
+        assert not client.dead
+        assert client.call("shutdown") is None      # clean SystemExit path
+        thread.join(timeout=5.0)
+        assert not thread.is_alive()
+    finally:
+        client.close()
+        listener.close()
+
+
+def test_tcp_loopback_eof_is_worker_death():
+    def bye(**_params):
+        raise SystemExit
+
+    sock, listener, thread = _serve_tcp({"shutdown": bye})
+    client = RpcClient(sock, "decode", 3, timeout_s=10.0)
+    try:
+        client.call("shutdown")
+        thread.join(timeout=5.0)
+        with pytest.raises(WorkerDiedError) as ei:
+            client.call("echo")
+        assert ei.value.kind == "decode" and ei.value.idx == 3
+        assert client.dead
+        # and once dead, every later call fails fast without touching I/O
+        with pytest.raises(WorkerDiedError):
+            client.call("echo")
+    finally:
+        client.close()
+        listener.close()
+
+
+def test_tcp_loopback_timeout_is_worker_death():
+    started = threading.Event()
+
+    def hang(**_params):
+        started.set()
+        threading.Event().wait(30.0)       # never answers
+
+    sock, listener, thread = _serve_tcp({"hang": hang})
+    client = RpcClient(sock, "prefill", 1, timeout_s=0.3)
+    try:
+        with pytest.raises(WorkerDiedError, match="rpc 'hang' failed"):
+            client.call("hang")
+        assert started.wait(5.0)
+        assert client.dead
+    finally:
+        client.close()
+        listener.close()

@@ -322,12 +322,15 @@ def test_migrate_handoff_death_recovers_and_pins_budget(live_cfg):
     (re-routed, prefilled exactly once, no double-join), and with the only
     prefill worker dead no further migrations may be planned."""
     from repro.runtime.backend import WorkerDiedError
-    from repro.serving import LiveCluster, make_live_sessions
+    from repro.serving import (ClusterSpec, LiveCluster, SchedPolicy,
+                               make_live_sessions)
 
-    cl = LiveCluster(live_cfg, n_prefill=1, n_decode=1, max_slots=8,
-                     max_len=128, scheduler="ampd", slo=SLOSpec(10.0, 1e-3),
-                     seed=0, profile=False, chunk_tokens=32,
-                     decode_offload=True)
+    cl = LiveCluster(live_cfg,
+                     spec=ClusterSpec(n_prefill=1, n_decode=1, max_slots=8,
+                                      max_len=128),
+                     policy=SchedPolicy(scheduler="ampd", chunk_tokens=32,
+                                        decode_offload=True),
+                     slo=SLOSpec(10.0, 1e-3), seed=0, profile=False)
     cl.coordinator.routing = local_first_routing(ttft_thres=10.0,
                                                  itl_thres=1e-3)
     cl.coordinator.record_decisions = True
@@ -393,18 +396,22 @@ def test_offload_beats_local_always_under_saturation():
 
 @pytest.mark.parametrize("seed", [0, 1, 2])
 def test_live_conservation_under_interleavings(seed, live_cfg):
-    from repro.serving import LiveCluster, make_live_sessions
+    from repro.serving import (ClusterSpec, LiveCluster, SchedPolicy,
+                               make_live_sessions)
     rng = random.Random(seed)
     chunk = rng.choice([0, 8])
     # offload guard in absolute terms: the loose SLO (10 s) keeps routing
     # permissive, so trigger at guard * itl_thres = 2 ms — within reach of
     # the reduced engines' fused estimates, exercising §14 live
-    cl = LiveCluster(live_cfg, n_prefill=2, n_decode=2, max_slots=4,
-                     max_len=128, scheduler="ampd",
-                     slo=SLOSpec(10.0, 10.0), seed=seed, profile=False,
-                     chunk_tokens=chunk, work_stealing=True,
-                     steal_watermark=rng.randint(0, 1),
-                     decode_offload=True, offload_guard=2e-4)
+    cl = LiveCluster(live_cfg,
+                     spec=ClusterSpec(n_prefill=2, n_decode=2, max_slots=4,
+                                      max_len=128),
+                     policy=SchedPolicy(scheduler="ampd", chunk_tokens=chunk,
+                                        work_stealing=True,
+                                        steal_watermark=rng.randint(0, 1),
+                                        decode_offload=True,
+                                        offload_guard=2e-4),
+                     slo=SLOSpec(10.0, 10.0), seed=seed, profile=False)
     audit = AuditLiveBackend(cl.perf, model_kv_time=False)
     audit.audit_init()
     cl.runtime.backend = audit

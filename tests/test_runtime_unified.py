@@ -189,12 +189,13 @@ def live_cfg():
 
 
 def _live_cluster(live_cfg, **kw):
-    from repro.serving import LiveCluster
-    base = dict(n_prefill=1, n_decode=1, max_slots=4, max_len=128,
-                scheduler="ampd", slo=SLOSpec(10.0, 10.0), seed=0,
-                profile=False)
-    base.update(kw)
-    return LiveCluster(live_cfg, **base)
+    from repro.serving import ClusterSpec, LiveCluster, SchedPolicy
+    spec_kw = dict(n_prefill=1, n_decode=1, max_slots=4, max_len=128)
+    spec_kw.update({k: kw.pop(k) for k in tuple(kw)
+                    if k in ("n_prefill", "n_decode", "max_slots", "max_len")})
+    policy = SchedPolicy(scheduler="ampd").replace(**kw)
+    return LiveCluster(live_cfg, spec=ClusterSpec(**spec_kw), policy=policy,
+                       slo=SLOSpec(10.0, 10.0), seed=0, profile=False)
 
 
 def test_live_mem_tokens_return_to_zero(live_cfg):
@@ -333,10 +334,13 @@ def test_backend_preempt_event_parity(live_cfg):
     # chunks whose laxity is lower than A's small remainder
     specs = [(0, 0.0, chunk + 8), (1, 1e-9, chunk), (2, 2e-9, chunk)]
 
-    cl = LiveCluster(live_cfg, n_prefill=0, n_decode=1, max_slots=4,
-                     max_len=128, scheduler="vllm", slo=SLOSpec(10.0, 10.0),
-                     seed=0, profile=False, chunk_tokens=chunk,
-                     work_stealing=True)
+    from repro.serving import ClusterSpec, SchedPolicy
+    cl = LiveCluster(live_cfg,
+                     spec=ClusterSpec(n_prefill=0, n_decode=1, max_slots=4,
+                                      max_len=128),
+                     policy=SchedPolicy(scheduler="vllm", chunk_tokens=chunk,
+                                        work_stealing=True),
+                     slo=SLOSpec(10.0, 10.0), seed=0, profile=False)
     cl.coordinator.record_decisions = True
     rng = np.random.default_rng(0)
     live_sessions = [LiveSession(
@@ -382,9 +386,13 @@ def test_backend_migrate_event_parity(live_cfg):
     slo = SLOSpec(10.0, 1e-3)
     routing = local_first_routing(ttft_thres=10.0, itl_thres=1e-3)
 
-    cl = LiveCluster(live_cfg, n_prefill=n_pre, n_decode=1, max_slots=8,
-                     max_len=128, scheduler="ampd", slo=slo, seed=0,
-                     profile=False, chunk_tokens=32, decode_offload=True)
+    from repro.serving import ClusterSpec, SchedPolicy
+    cl = LiveCluster(live_cfg,
+                     spec=ClusterSpec(n_prefill=n_pre, n_decode=1,
+                                      max_slots=8, max_len=128),
+                     policy=SchedPolicy(scheduler="ampd", chunk_tokens=32,
+                                        decode_offload=True),
+                     slo=slo, seed=0, profile=False)
     cl.coordinator.routing = routing
     cl.coordinator.record_decisions = True
     for i in range(n_pre):

@@ -8,7 +8,8 @@ import pytest
 
 from repro.configs import get_config
 from repro.core.types import SLOSpec
-from repro.serving import Engine, LiveCluster, make_live_sessions
+from repro.serving import (ClusterSpec, Engine, LiveCluster, SchedPolicy,
+                           make_live_sessions)
 from repro.serving.kv_transfer import extract_range, insert_range, transfer_bytes
 
 
@@ -43,9 +44,11 @@ def _reference_generate(cfg, params, session):
 def test_cluster_dynamo_matches_reference(cfg):
     """Disaggregated serving (remote prefill + KV transfer + lazy history
     reads) must produce exactly the tokens of sequential generation."""
-    cl = LiveCluster(cfg, n_prefill=1, n_decode=1, max_slots=1, max_len=128,
-                     scheduler="dynamo", slo=SLOSpec(10.0, 10.0), seed=0,
-                     profile=False)
+    cl = LiveCluster(cfg,
+                     spec=ClusterSpec(n_prefill=1, n_decode=1, max_slots=1,
+                                      max_len=128),
+                     policy=SchedPolicy(scheduler="dynamo"),
+                     slo=SLOSpec(10.0, 10.0), seed=0, profile=False)
     sessions = make_live_sessions(cfg, num_sessions=1, rounds=3,
                                   prefill_len=16, decode_len=4)
     params = cl.decode_workers[0].engine.params
@@ -60,8 +63,9 @@ def test_cluster_multi_session_isolation(cfg):
     SAME session served alone under identical batch shapes (slots/widths) —
     scheduling and shared caches must not leak state across sessions."""
     def serve(sessions, n_sessions_note):
-        cl = LiveCluster(cfg, n_prefill=1, n_decode=1, max_slots=4,
-                         max_len=128, scheduler="ampd",
+        cl = LiveCluster(cfg,
+                         spec=ClusterSpec(n_prefill=1, n_decode=1,
+                                          max_slots=4, max_len=128),
                          slo=SLOSpec(10.0, 10.0), seed=0, profile=False)
         cl.run_trace(sessions)
         return cl
@@ -75,17 +79,19 @@ def test_cluster_multi_session_isolation(cfg):
                                    prefill_len=16, decode_len=4)[sid]
         alone.session_id = 0
         alone.arrival_time = 0.0
-        cl = LiveCluster(cfg, n_prefill=1, n_decode=1, max_slots=4,
-                         max_len=128, scheduler="ampd",
+        cl = LiveCluster(cfg,
+                         spec=ClusterSpec(n_prefill=1, n_decode=1,
+                                          max_slots=4, max_len=128),
                          slo=SLOSpec(10.0, 10.0), seed=0, profile=False)
         cl.run_trace([alone])
         assert together[sid].generated == alone.generated, sid
 
 
 def test_decode_worker_failure_recovery(cfg):
-    cl = LiveCluster(cfg, n_prefill=1, n_decode=2, max_slots=4, max_len=128,
-                     scheduler="ampd", slo=SLOSpec(10.0, 10.0), seed=0,
-                     profile=False)
+    cl = LiveCluster(cfg,
+                     spec=ClusterSpec(n_prefill=1, n_decode=2, max_slots=4,
+                                      max_len=128),
+                     slo=SLOSpec(10.0, 10.0), seed=0, profile=False)
     sessions = make_live_sessions(cfg, num_sessions=3, rounds=2,
                                   prefill_len=16, decode_len=4)
     cl.fail_worker("decode", 0, at=0.5)
