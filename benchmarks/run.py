@@ -128,6 +128,28 @@ def smoke(json_path=None) -> int:
            f"slo local={loc['slo']} ship={ship['slo']} offload={off['slo']} "
            f"migrations={off['migrations']}")
 
+    _section("smoke: Fig. 15 global KV pool (cross-session reuse)")
+    from benchmarks import fig15_kv_reuse
+    t0 = time.time()
+    rows = fig15_kv_reuse.run(num_sessions=SMOKE["num_sessions"],
+                              seeds=SMOKE["seeds"])
+    by = {r["arm"]: r for r in rows}
+    pool, priv = by["kv-pool"], by["private"]
+    if pool["cache_hits"] < 1 or pool["hit_tokens"] < 1:
+        failures.append("kv-pool shared-prefix run recorded no cache hits")
+    for r in rows:
+        if r["completed"] != r["arrived"]:
+            failures.append(
+                f"fig15 {r['arm']}: {r['completed']}/{r['arrived']} "
+                "sessions completed (work lost)")
+    if pool["slo"] < priv["slo"]:
+        failures.append(
+            f"kv-pool lost to the private-cache baseline "
+            f"({pool['slo']:.3f} < {priv['slo']:.3f})")
+    record("fig15_kv_reuse", t0, rows,
+           f"slo private={priv['slo']} pool={pool['slo']} "
+           f"hits={pool['cache_hits']}")
+
     _section("smoke: Fig. 12 multi-process transport (measured KV path)")
     from benchmarks import fig12_transport
     t0 = time.time()
@@ -331,6 +353,16 @@ def main() -> None:
            f"slo: local={by['local-always']['slo']} "
            f"ship={by['ship-always']['slo']} "
            f"offload={by['decode-offload']['slo']}")
+
+    _section("Fig. 15: global KV pool, cross-session reuse (beyond-paper)")
+    from benchmarks import fig15_kv_reuse
+    t0 = time.time()
+    rows = fig15_kv_reuse.main()
+    by = {r["arm"]: r for r in rows}
+    record("fig15_kv_reuse", t0,
+           f"slo: private={by['private']['slo']} "
+           f"blind={by['pool-blind']['slo']} pool={by['kv-pool']['slo']} "
+           f"hit_tokens={by['kv-pool']['hit_tokens']}")
 
     _section("Fig. 12: multi-process transport, measured KV path (beyond-paper)")
     from benchmarks import fig12_transport

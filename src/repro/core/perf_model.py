@@ -62,6 +62,7 @@ class Hardware:
     kv_setup: float = 0.5e-3            # s, per transfer (lazy-read metadata)
     reshard_penalty: float = 1.2        # theta_src != theta_dst factor
     dtype_bytes: int = 2
+    host_dram_bw: float = 100.0e9       # bytes/s, host tier <-> HBM (PCIe/DMA)
 
 
 @dataclass
@@ -132,6 +133,11 @@ class PerfModel:
         # transports (DESIGN.md §13) holds by construction
         self.kv: Dict[str, KvCoeffs] = {
             c: self._analytic_kv() for c in LINK_CLASSES}
+        # host-tier promote (DESIGN.md §17): reading a spilled page back
+        # into HBM is a local DMA, not a network hop — its own coefficients,
+        # fitted from measured spill/promote copies when profiling
+        self.kv_promote = KvCoeffs(alpha=hw.kv_setup,
+                                   inv_bw=1.0 / hw.host_dram_bw)
         #: worker-pair -> link class map; None = price default_link always
         self.topology: Optional[LinkTopology] = None
         self.default_link: str = LINK_CLASSES[0]
@@ -230,6 +236,30 @@ class PerfModel:
             t *= self.hw.reshard_penalty
         return t
 
+    def t_promote(self, tokens: int) -> float:
+        """Host tier -> HBM read-back of ``tokens`` of spilled KV
+        (DESIGN.md §17 tiering)."""
+        if tokens <= 0:
+            return 0.0
+        nbytes = self.cfg.session_state_bytes(tokens, self.hw.dtype_bytes)
+        return self.kv_promote.alpha + nbytes * self.kv_promote.inv_bw
+
+    def t_kv_read(self, l_hist: int, src_worker, dst_worker,
+                  plan=None) -> float:
+        """The history-read price, cache-plan-aware (DESIGN.md §17): the
+        miss suffix crosses the (src -> dst) link, host-tier pages pay the
+        promote DMA, and HBM-resident pages are free.  ``plan=None`` is the
+        pre-pool behaviour — the full history is a miss."""
+        if plan is None:
+            # pre-pool price (incl. the alpha at l_hist == 0 — keeping the
+            # no-pool decision logs bit-identical to earlier revisions)
+            return self.t_kv_between(l_hist, src_worker, dst_worker)
+        t = 0.0
+        if plan.miss_tokens > 0:
+            t += self.t_kv_between(plan.miss_tokens, src_worker, dst_worker)
+        t += self.t_promote(plan.spilled_tokens)
+        return t
+
     def link_between(self, src_worker, dst_worker) -> Optional[str]:
         """Link class of the (src -> dst) worker pair under the configured
         topology (None -> ``default_link``)."""
@@ -325,6 +355,21 @@ class PerfModel:
             alpha=max(float(coef[0]), 0.0),
             inv_bw=max(float(coef[1]), 0.0))
 
+    def fit_promote_from_bytes(self,
+                               samples: Iterable[Tuple[int, float]]) -> None:
+        """samples: (payload_bytes, seconds) from measured host-tier
+        spill/promote copies (the material store records both directions —
+        same DMA path).  Origin-anchored like ``fit_kv_from_bytes``."""
+        rows, ys = [[1.0, 0.0]], [0.0]
+        for nbytes, t in samples:
+            rows.append([1.0, float(nbytes)])
+            ys.append(t)
+        if len(ys) < 2:
+            return
+        coef, *_ = np.linalg.lstsq(np.asarray(rows), np.asarray(ys), rcond=None)
+        self.kv_promote = KvCoeffs(alpha=max(float(coef[0]), 0.0),
+                                   inv_bw=max(float(coef[1]), 0.0))
+
     def ensure_link_monotone(self) -> None:
         """Clamp per-class KV coefficients to the physical ordering
         intra-process <= intra-host <= cross-host.  Independent fits on a
@@ -346,14 +391,18 @@ class PerfModel:
             t += self.t_pre(k.l_hist, k.l_incr, tp, speed)
         return t
 
-    def remote_cost(self, task, decode_worker, prefill_worker) -> float:
+    def remote_cost(self, task, decode_worker, prefill_worker,
+                    plan=None) -> float:
         """Eq. (2): prefill + KV back-and-forth + queueing, priced on the
-        actual (decode <-> prefill) link class."""
+        actual (decode <-> prefill) link class.  ``plan`` (a CachePlan for
+        this candidate, DESIGN.md §17) discounts the history read by what
+        is already resident on the prefill worker."""
         tp_p = prefill_worker.tp
         speed = getattr(prefill_worker, "speed", 1.0)
         t_pre = self.t_pre(task.l_hist, task.l_incr, tp_p, speed)
-        # lazy history read + incremental KV write-back
-        t_kv = (self.t_kv_between(task.l_hist, decode_worker, prefill_worker)
+        # lazy history read (cache-discounted) + incremental KV write-back
+        t_kv = (self.t_kv_read(task.l_hist, decode_worker, prefill_worker,
+                               plan)
                 + self.t_kv_between(task.l_incr, prefill_worker,
                                     decode_worker))
         t_queue = sum(self.t_pre(k.l_hist, k.l_incr, tp_p, speed)

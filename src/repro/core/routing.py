@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import random
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.perf_model import PerfModel
 from repro.core.types import PrefillTask
@@ -60,8 +60,12 @@ def route_prefill(
     perf: PerfModel,
     cfg: RoutingConfig,
     rng: random.Random,
+    plans: Optional[Dict[int, object]] = None,
 ) -> RouteDecision:
-    """Algorithm 1."""
+    """Algorithm 1.  ``plans`` (worker idx -> CachePlan, DESIGN.md §17)
+    discounts each candidate's Eq. (2) history read by its resident pages —
+    absent (or for workers missing from it), the read is priced as a full
+    miss, the pre-pool behaviour."""
     # lines 1-3: slack on the prefill side (random probe order)
     if prefill_workers:
         order = list(range(len(prefill_workers)))
@@ -83,7 +87,8 @@ def route_prefill(
     for i, w in enumerate(prefill_workers):
         if not getattr(w, "alive", True):
             continue
-        t_r = perf.remote_cost(task, decode_worker, w)
+        plan = plans.get(w.idx) if plans else None
+        t_r = perf.remote_cost(task, decode_worker, w, plan=plan)
         if t_r < best.est_cost:
             best = RouteDecision("remote", i, est_cost=t_r, reason="cost")
     return best
@@ -96,6 +101,7 @@ def always_remote(
     perf: PerfModel,
     cfg: RoutingConfig,
     rng: random.Random,
+    plans: Optional[Dict[int, object]] = None,
 ) -> RouteDecision:
     """Dynamo-style baseline: every prefill goes to the least-loaded prefill
     worker (pure disaggregation, no local execution)."""
@@ -103,5 +109,7 @@ def always_remote(
              if getattr(w, "alive", True)]
     if not alive:
         return RouteDecision("local", reason="no-prefill-workers")
-    i, _ = min(alive, key=lambda iw: perf.remote_cost(task, decode_worker, iw[1]))
+    i, _ = min(alive, key=lambda iw: perf.remote_cost(
+        task, decode_worker, iw[1],
+        plan=plans.get(iw[1].idx) if plans else None))
     return RouteDecision("remote", i, reason="always-remote")

@@ -39,8 +39,10 @@ from repro.runtime import (
     COLOCATED,
     ChunkTuner,
     Coordinator,
+    KVPoolConfig,
     ModeledBackend,
     OffloadConfig,
+    PoolManager,
     ServingRuntime,
     StealingConfig,
     WindowStat,
@@ -99,6 +101,12 @@ class SimConfig:
     offload_hysteresis: float = 0.5   # low-water fraction of the trigger
     offload_budget: int = 1       # max migrations per chunk per round
     offload_min_profit_s: float = 0.0  # required net ETA gain per migration
+    # -- global KV pool (DESIGN.md §17) -----------------------------------
+    kv_pool: bool = False         # content-addressed paged KV + tiering
+    kv_page_tokens: int = 8       # tokens per content-addressed page
+    kv_hbm_pages: int = 64        # per-worker device tier capacity
+    kv_host_pages: int = 64       # per-worker host spill tier capacity
+    kv_cache_aware: bool = True   # False = pool runs but pricing is blind
     seed: int = 0
     max_time: float = 1.0e7
 
@@ -121,6 +129,10 @@ class SimResult:
     steals: int = 0               # §12 counters (0 when stealing disabled)
     preempts: int = 0
     migrations: int = 0           # §14 counter (0 when offload disabled)
+    cache_hits: int = 0           # §17 counters (0 when kv_pool disabled)
+    cache_hit_tokens: int = 0
+    kv_spills: int = 0
+    kv_promotes: int = 0
 
 
 class Simulation:
@@ -185,11 +197,20 @@ class Simulation:
                 hysteresis=self.cfg.offload_hysteresis,
                 budget=self.cfg.offload_budget,
                 min_profit_s=self.cfg.offload_min_profit_s)
+        pool_mgr = None
+        if self.cfg.kv_pool:
+            pool_mgr = PoolManager(KVPoolConfig(
+                page_tokens=self.cfg.kv_page_tokens,
+                hbm_pages=self.cfg.kv_hbm_pages,
+                host_pages=self.cfg.kv_host_pages))
         self.coordinator = Coordinator(
             perf=perf, routing=self.cfg.routing,
             scheduler=self.cfg.scheduler, reorder_w=self.cfg.reorder_w,
             seed=self.cfg.seed, chunk_tuner=tuner, stealing=stealing,
-            offload=offload)
+            offload=offload, pool_mgr=pool_mgr,
+            cache_aware=self.cfg.kv_cache_aware)
+        if pool_mgr is not None:
+            pool_mgr.emit = self.coordinator.note_cache
         self.runtime = ServingRuntime(
             ModeledBackend(perf, kv_overlap=self.cfg.kv_overlap),
             self.coordinator, self.prefill_workers, self.decode_workers,
@@ -265,6 +286,10 @@ class Simulation:
             steals=self.coordinator.sched.steals,
             preempts=self.coordinator.sched.preempts,
             migrations=self.coordinator.sched.migrations,
+            cache_hits=self.coordinator.sched.cache_hits,
+            cache_hit_tokens=self.coordinator.sched.cache_hit_tokens,
+            kv_spills=self.coordinator.sched.kv_spills,
+            kv_promotes=self.coordinator.sched.kv_promotes,
         )
 
 

@@ -34,6 +34,12 @@ class PrefillTask:
     gen: int = 0                       # session rebind generation at creation
     preempted: bool = False            # counted once when priority parks it
     migrations: int = 0                # decode-local offload hops (§14 budget)
+    # -- global KV pool (DESIGN.md §17) ---------------------------------
+    # Residency of the leading history pages on the executing worker at
+    # launch time (a runtime.kv_pool.CachePlan, kept untyped to avoid the
+    # import cycle); None when pooling is off or nothing is resident.
+    # Plain data — it rides on the task over proc/tcp RPC.
+    cache_plan: Optional[object] = None
 
     @property
     def total_ctx(self) -> int:
@@ -59,6 +65,11 @@ class Session:
     ttfts: List[float] = field(default_factory=list)   # one per round
     itls: List[float] = field(default_factory=list)    # per generated token
     finish_time: Optional[float] = None
+    # (group_id, shared_tokens): the first `shared_tokens` round-0 prompt
+    # tokens are identical across every session in the group (system
+    # prompt / tool schema).  The modeled backend derives its KV-pool
+    # page symbols from this; live sessions carry real token ids instead.
+    prefix_group: Optional[tuple] = None
 
     @property
     def num_rounds(self) -> int:

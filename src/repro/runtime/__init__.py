@@ -27,6 +27,12 @@ from repro.runtime.coordinator import (  # noqa: F401
     StealingConfig,
 )
 from repro.runtime.events import EventLoop  # noqa: F401
+from repro.runtime.kv_pool import (  # noqa: F401
+    CachePlan,
+    KVPool,
+    KVPoolConfig,
+    PoolManager,
+)
 from repro.runtime.metrics import (  # noqa: F401
     SchedCounters,
     WindowStat,

@@ -52,6 +52,22 @@ class ExecutionBackend:
         (admission backpressure)."""
         return True
 
+    # -- KV-pool content addressing (DESIGN.md §17) ------------------------
+    def prefill_symbols(self, session, task: PrefillTask, lo: int,
+                        n: int) -> List:
+        """Content symbols for absolute context positions [lo, lo+n) inside
+        ``task``'s chunk span — what the PoolManager hashes into page keys.
+        The live backend returns real token ids (identical prompts dedup
+        across sessions); the modeled backend returns synthetic symbols
+        that encode the session's declared sharing structure."""
+        raise NotImplementedError
+
+    def decode_symbols(self, session, round_idx: int, lo: int,
+                       n: int) -> List:
+        """Content symbols for absolute positions [lo, lo+n) inside the
+        round's just-generated decode span (context_len is final)."""
+        raise NotImplementedError
+
     # -- prefill -----------------------------------------------------------
     def history_read_extra(self, worker, task: PrefillTask, decode_worker,
                            waited: float, hist_len: int) -> float:
@@ -147,13 +163,20 @@ class ExecutionBackend:
 
     # -- fault tolerance ---------------------------------------------------
     def make_recovery_task(self, session, task: Optional[PrefillTask],
-                           now: float, pending) -> PrefillTask:
+                           now: float, pending, decode_worker=None,
+                           plan=None) -> PrefillTask:
         """Reset the session after its decode worker died and build the
         re-prefill task that reconstructs its context PLUS the un-joined
         suffix of the current round's increment.  ``pending`` is
         (round_idx, offset_into_increment, token_count) as computed by the
         runtime — covering a mid-prefill task with its queued sibling
-        chunks, or a never-dispatched round during an env delay."""
+        chunks, or a never-dispatched round during an env delay.
+
+        ``decode_worker``/``plan`` (DESIGN.md §17): the rebind target and
+        its recovery CachePlan — when the target's pool already holds a
+        prefix of the dead context, the replay starts at
+        ``plan.prefix_tokens`` of resident history instead of re-prefilling
+        from zero (plan=None keeps the full-replay behaviour)."""
         raise NotImplementedError
 
 
@@ -167,11 +190,42 @@ class ModeledBackend(ExecutionBackend):
     def incr_len(self, session, round_idx: int) -> int:
         return session.rounds[round_idx].prefill_len
 
+    def prefill_symbols(self, session, task, lo, n) -> List:
+        # synthetic content: round-0 positions inside a declared shared
+        # prefix group hash identically across the group's sessions; all
+        # other positions are session-unique
+        r = task.round_idx
+        roff = task.incr_offset + (lo - task.l_hist)
+        grp = getattr(session, "prefix_group", None)
+        out = []
+        for j in range(roff, roff + n):
+            if r == 0 and grp is not None and j < grp[1]:
+                out.append(("g", grp[0], j))
+            else:
+                out.append(("s", session.session_id, r, j))
+        return out
+
+    def decode_symbols(self, session, round_idx, lo, n) -> List:
+        # tokens_this_round (not the round's decode_len) so a mid-round
+        # rebind keys the PARTIAL decoded span with correct offsets
+        start = session.context_len - session.tokens_this_round
+        return [("d", session.session_id, round_idx, lo - start + j)
+                for j in range(n)]
+
     def history_read_extra(self, worker, task, decode_worker, waited,
                            hist_len) -> float:
         if hist_len <= 0:
             return 0.0
-        t_read = self.perf.t_kv_between(hist_len, decode_worker, worker)
+        plan = task.cache_plan
+        if plan is None:
+            t_read = self.perf.t_kv_between(hist_len, decode_worker, worker)
+        else:
+            # resident pages are free, host-tier pages pay the promote DMA,
+            # only the miss suffix crosses the link (DESIGN.md §17)
+            t_read = (self.perf.t_kv_between(plan.miss_tokens, decode_worker,
+                                             worker)
+                      if plan.miss_tokens > 0 else 0.0)
+            t_read += self.perf.t_promote(plan.spilled_tokens)
         if self.kv_overlap:
             return max(0.0, t_read - waited)   # lazy read overlap (§6)
         return t_read
@@ -212,15 +266,18 @@ class ModeledBackend(ExecutionBackend):
         if session in decode_worker.sessions:
             decode_worker.sessions.remove(session)
 
-    def make_recovery_task(self, session, task, now: float,
-                           pending) -> PrefillTask:
-        """Re-prefill the whole context (the KV died with the worker)."""
+    def make_recovery_task(self, session, task, now: float, pending,
+                           decode_worker=None, plan=None) -> PrefillTask:
+        """Re-prefill the dead context — minus whatever prefix the rebind
+        target's pool still holds (DESIGN.md §17 recovery fix)."""
         round_idx, _, pend = pending
-        l_incr = session.context_len + pend
-        session.context_len = 0
+        total = session.context_len + pend
+        resident = plan.prefix_tokens if plan is not None else 0
+        session.context_len = resident
         return PrefillTask(
             session_id=session.session_id, round_idx=round_idx,
-            l_hist=0, l_incr=max(l_incr, 1), enqueue_time=now,
+            l_hist=resident, l_incr=max(total - resident, 1),
+            incr_offset=resident, enqueue_time=now,
             arrival_time=task.arrival_time if task else now,
             is_initial=False)
 
@@ -233,9 +290,24 @@ class LiveBackend(ExecutionBackend):
         self.model_kv_time = model_kv_time
         self.kv_steal_bytes = 0     # history payload re-read after steals
         self.kv_migrate_bytes = 0   # history re-read after decode offload
+        #: material page store (serving.kv_pool.MaterialStore) when the
+        #: global KV pool is on — set by the cluster wiring (DESIGN.md §17)
+        self.kv_store = None
 
     def incr_len(self, session, round_idx: int) -> int:
         return len(session.prompt_tokens[round_idx])
+
+    def prefill_symbols(self, session, task, lo, n) -> List:
+        # real token ids: identical prompt prefixes hash to identical page
+        # chains, so dedup is cross-session by construction
+        r = task.round_idx
+        roff = task.incr_offset + (lo - task.l_hist)
+        return [int(t) for t in session.prompt_tokens[r][roff:roff + n]]
+
+    def decode_symbols(self, session, round_idx, lo, n) -> List:
+        # the transcript holds the full context token-for-token, so
+        # absolute positions index it directly
+        return [int(t) for t in session.transcript[lo:lo + n]]
 
     def on_steal(self, task, session, src_worker, dst_worker) -> None:
         super().on_steal(task, session, src_worker, dst_worker)
@@ -262,13 +334,33 @@ class LiveBackend(ExecutionBackend):
         return (session.slot is not None
                 or decode_worker.free_slot() is not None)
 
+    def _read_history(self, worker, task, session, decode_worker):
+        """The lazy history pull, pool-spliced when a CachePlan says part
+        of it is already resident on ``worker`` (DESIGN.md §17): assemble
+        the resident prefix from the material store and pull only the miss
+        suffix off the decode worker — the splice is what makes the hit
+        bytes *measured* savings, not a modeling assumption."""
+        plan = task.cache_plan
+        if (self.kv_store is not None and plan is not None
+                and plan.prefix_tokens > 0):
+            from repro.serving.kv_transfer import concat_extracts
+            prefix = self.kv_store.assemble(("prefill", worker.idx), plan)
+            if prefix is not None:
+                if plan.miss_tokens > 0:
+                    suffix = decode_worker.history_extract_range(
+                        session, plan.prefix_tokens, task.l_hist)
+                    return concat_extracts([prefix, suffix], task.l_hist)
+                return concat_extracts([prefix], task.l_hist)
+        return decode_worker.history_extract(session)
+
     def run_prefill(self, worker, task, session, decode_worker):
         import numpy as np
         from repro.serving.workers import timed
         if worker.kind == "prefill":
             hist = None
             if task.l_hist > 0 and session.slot is not None:
-                hist = decode_worker.history_extract(session)
+                hist = self._read_history(worker, task, session,
+                                          decode_worker)
             dt, out = timed(worker.execute, task, session,
                             history_extract=hist)
             dt /= worker.speed
@@ -279,6 +371,16 @@ class LiveBackend(ExecutionBackend):
                                                 decode_worker))
             payload = ("remote", out["increment"],
                        int(np.argmax(out["logits"])))
+            if self.kv_store is not None:
+                # the chunk's history + increment are in hand right here:
+                # stage them so completion-time page capture can slice any
+                # span of [0, l_hist + l_incr)
+                parts = []
+                if hist is not None:
+                    parts.append((0, task.l_hist, hist))
+                parts.append((task.l_hist, task.l_hist + task.l_incr,
+                              out["increment"]))
+                self.kv_store.stage(("prefill", worker.idx), parts)
         else:
             dt, first = worker.local_prefill(task, session)
             dt /= worker.speed
@@ -290,6 +392,12 @@ class LiveBackend(ExecutionBackend):
         if placement == "remote":
             decode_worker.attach(session, increment, task.l_hist, first,
                                  task.l_incr)
+            if self.kv_store is not None:
+                # the increment tree is in hand at the join: stage it so
+                # the decode-side page capture can slice [l_hist, +l_incr)
+                self.kv_store.stage(
+                    ("decode", decode_worker.idx),
+                    [(task.l_hist, task.l_hist + task.l_incr, increment)])
         else:
             session.last_token = first
         toks = session.prompt_tokens[task.round_idx][
@@ -332,11 +440,15 @@ class LiveBackend(ExecutionBackend):
     def detach(self, decode_worker, session) -> None:
         decode_worker.detach(session)
 
-    def make_recovery_task(self, session, task, now: float,
-                           pending) -> PrefillTask:
+    def make_recovery_task(self, session, task, now: float, pending,
+                           decode_worker=None, plan=None) -> PrefillTask:
         """Replay the transcript as a fresh prefill (the KV is gone), then
         the un-prefilled remainder of the current round's increment — the
-        transcript only holds tokens whose chunks had already joined."""
+        transcript only holds tokens whose chunks had already joined.
+
+        When the rebind target's pool holds a prefix of the dead context
+        (``plan``, DESIGN.md §17), the material pages attach directly to
+        the new decode worker and the replay starts from there."""
         import numpy as np
         session.slot = None
         r, off, pend = pending
@@ -348,9 +460,20 @@ class LiveBackend(ExecutionBackend):
             replay = session.prompt_tokens[0]
         session.prompt_tokens = list(session.prompt_tokens)
         session.prompt_tokens[r] = replay
-        session.context_len = 0
-        session.transcript = []
+        resident = 0
+        if (plan is not None and plan.prefix_tokens > 0
+                and plan.prefix_tokens < len(replay)
+                and self.kv_store is not None and decode_worker is not None
+                and decode_worker.free_slot() is not None):
+            prefix = self.kv_store.assemble(
+                ("decode", decode_worker.idx), plan)
+            if prefix is not None:
+                resident = plan.prefix_tokens
+                decode_worker.attach(session, prefix, 0,
+                                     int(replay[resident - 1]), resident)
+        session.context_len = resident
+        session.transcript = [int(t) for t in replay[:resident]]
         return PrefillTask(
-            session_id=session.session_id, round_idx=r, l_hist=0,
-            l_incr=len(replay), enqueue_time=now, arrival_time=now,
-            is_initial=False)
+            session_id=session.session_id, round_idx=r, l_hist=resident,
+            l_incr=len(replay) - resident, incr_offset=resident,
+            enqueue_time=now, arrival_time=now, is_initial=False)

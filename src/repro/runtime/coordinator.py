@@ -136,6 +136,13 @@ class Coordinator:
     #: decode-local offload (DESIGN.md §14): migrate queued local prefill
     #: chunks off a saturated decode worker across the phase boundary
     offload: Optional[OffloadConfig] = None
+    #: global KV pool (DESIGN.md §17): a runtime.kv_pool.PoolManager when
+    #: pooling is on; CachePlans from it discount every history-read price
+    pool_mgr: Optional[object] = None
+    #: gate on the PRICING only — execution always honors resident pages,
+    #: so cache_aware=False isolates the planning signal (the oracle
+    #: suite's cache-blind arm) without changing what the workers do
+    cache_aware: bool = True
     rng: random.Random = field(init=False)
 
     def __post_init__(self):
@@ -148,9 +155,9 @@ class Coordinator:
         self.rebinds = 0
         self.sched = SchedCounters()
         #: (session_id, round_idx, incr_offset, kind, worker_idx) per event,
-        #: kind ∈ local | remote | steal | preempt | migrate — the
-        #: backend-parity contract surface (tests/test_runtime_unified,
-        #: tests/test_multiproc_cluster).
+        #: kind ∈ local | remote | steal | preempt | migrate | cache_hit |
+        #: spill | promote — the backend-parity contract surface
+        #: (tests/test_runtime_unified, tests/test_multiproc_cluster).
         self.decision_log: List[Tuple[int, int, int, str, Optional[int]]] = []
 
     # -- binding (§3 step 1) ----------------------------------------------
@@ -179,19 +186,50 @@ class Coordinator:
             w.windowed_ttft = max(w.ttft_stat.value(now), drain)
             w.windowed_itl = w.itl_stat.value(now)
 
+    def cache_plans(self, task: PrefillTask,
+                    prefill_workers: List) -> Optional[Dict[int, object]]:
+        """Per-candidate CachePlans for ``task``'s history read (DESIGN.md
+        §17) — read-only pool walks, None when pooling is off, pricing is
+        cache-blind, or there is no history to discount."""
+        if (self.pool_mgr is None or not self.cache_aware
+                or task.l_hist <= 0):
+            return None
+        return {w.idx: self.pool_mgr.plan_for(("prefill", w.idx),
+                                              task.session_id, task.l_hist)
+                for w in prefill_workers if getattr(w, "alive", True)}
+
+    def note_cache(self, kind: str, task: PrefillTask, worker_idx: int,
+                   tokens: int = 0) -> None:
+        """Account a cache_hit / spill / promote event (DESIGN.md §17) —
+        the PoolManager's emit hook, so pool decisions enter the same
+        counters and decision log as routing decisions."""
+        if kind == "cache_hit":
+            self.sched.cache_hits += 1
+            self.sched.cache_hit_tokens += tokens
+        elif kind == "spill":
+            self.sched.kv_spills += 1
+        elif kind == "promote":
+            self.sched.kv_promotes += 1
+        if self.record_decisions:
+            self.decision_log.append((task.session_id, task.round_idx,
+                                      task.incr_offset, kind, worker_idx))
+
     def route(self, task: PrefillTask, now: float, decode_worker,
               prefill_workers: List) -> RouteDecision:
         self.total_routed += 1
         self.refresh_stats(now, decode_worker, prefill_workers)
+        plans = self.cache_plans(task, prefill_workers)
 
         if self.scheduler in COLOCATED or not prefill_workers:
             dec = RouteDecision("local", reason="colocated")
         elif self.scheduler in ("dynamo", "ampd-noroute"):
             dec = always_remote(task, decode_worker, prefill_workers,
-                                self.perf, self.routing, self.rng)
+                                self.perf, self.routing, self.rng,
+                                plans=plans)
         else:  # ADAPTIVE: ampd / ampd-noreorder / ampd-chunked
             dec = route_prefill(task, decode_worker, prefill_workers,
-                                self.perf, self.routing, self.rng)
+                                self.perf, self.routing, self.rng,
+                                plans=plans)
         if dec.kind == "local":
             self.local_count += 1
         if self.record_decisions:
@@ -252,6 +290,14 @@ class Coordinator:
                         (k.session_id, k.round_idx, k.incr_offset,
                          "preempt", worker.idx))
 
+    def _plan(self, task: PrefillTask, prefill_worker):
+        """Single-candidate CachePlan for the steal/offload profit gates
+        (None when pooling is off or cache-blind)."""
+        if self.pool_mgr is None or not self.cache_aware:
+            return None
+        return self.pool_mgr.plan_for(("prefill", prefill_worker.idx),
+                                      task.session_id, task.l_hist)
+
     def plan_steal(self, thief, prefill_workers: List, now: float,
                    sessions: Dict[int, object], decode_workers: List):
         """Find the most profitable queued chunk to migrate onto ``thief``.
@@ -303,7 +349,8 @@ class Coordinator:
                     # position (clusters may add/kill workers mid-run)
                     d = next(w for w in decode_workers
                              if w.idx == s.decode_worker)
-                    move_read = self.perf.t_kv_between(k.l_hist, d, thief)
+                    move_read = self.perf.t_kv_read(
+                        k.l_hist, d, thief, self._plan(k, thief))
                 move = t_self + move_read + self.perf.t_pre(
                     k.l_hist, k.l_incr, thief.tp, thief.speed)
                 profit = (ahead + stay_run) - move
@@ -422,8 +469,8 @@ class Coordinator:
                 move_read = 0.0
                 if (k.l_hist > 0 and getattr(s, "_rt_chain_worker", None)
                         != ("prefill", w.idx)):
-                    move_read = self.perf.t_kv_between(k.l_hist,
-                                                       decode_worker, w)
+                    move_read = self.perf.t_kv_read(
+                        k.l_hist, decode_worker, w, self._plan(k, w))
                 move = (drain + move_read
                         + self.perf.t_pre(k.l_hist, k.l_incr, w.tp, w.speed)
                         + self.perf.t_kv_between(k.l_incr, w, decode_worker))

@@ -1,0 +1,473 @@
+"""Content-addressed paged KV pool: bookkeeping twin (DESIGN.md §17).
+
+Multi-round sessions re-read their whole history every round, and
+concurrent agent sessions share long common prefixes (system prompts, tool
+schemas) — yet without this layer every history read is priced at full
+``t_kv`` and every session's cache is a private monolith.  This module is
+the *bookkeeping* half of the global KV layer: a per-worker pool of
+fixed-size pages keyed by a chain (rolling) hash of
+``(model, layer-group, token-prefix)``, refcounted across sessions, with
+LRU spill to a host-memory tier and promote-on-touch.
+
+The split mirrors the runtime's backend split:
+
+  * :class:`PoolManager` + :class:`KVPool` here are deterministic pure
+    bookkeeping — owned by the Coordinator, mutated ONLY at protocol
+    points (chunk launch, chunk completion, join, round completion,
+    session finish, worker death) in protocol order, with an LRU driven by
+    a logical event counter, never wall time.  That is what makes the new
+    ``cache_hit`` / ``spill`` / ``promote`` decision-log events part of
+    the modeled/live parity contract.
+  * the *material* half (``repro.serving.kv_pool.MaterialStore``) holds
+    real KV page trees and subscribes to this bookkeeping through the
+    ``listener`` protocol — every insert/spill/promote/evict decision made
+    here is executed there, so the bytes the live path measures are the
+    bytes this ledger priced.
+
+Content addressing uses a chain hash: page ``k``'s key digests the page's
+token symbols *and* page ``k-1``'s key, so a page is shared between two
+sessions iff their entire token prefixes up to that page agree — position
+is implicit, and "equal content hash ⇒ same physical page" is sound by
+construction.  Only full, page-aligned pages are pooled; a trailing
+partial page is never addressable.  Symbols come from the execution
+backend: the live backend supplies actual token ids (identical prompts
+dedup across sessions), the modeled backend supplies synthetic symbols
+with an optional shared-prefix group annotation on the Session
+(``prefix_group``) so modeled traces can express the same sharing
+structure.
+
+The Coordinator consumes the pool through :class:`CachePlan` objects —
+for a candidate worker, how many leading history tokens are resident in
+HBM (``hit_tokens``), resident but spilled to the host tier
+(``spilled_tokens``, promoted on touch), or absent (``miss_tokens``, read
+from the bound decode worker) — so Alg. 1 routing, the §12 steal profit
+gate and the §14 offload guard charge actual hit/miss bytes through
+``PerfModel.t_kv_read`` instead of assuming full-history misses.
+"""
+from __future__ import annotations
+
+import hashlib
+import heapq
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+WorkerKey = Tuple[str, int]            # ("prefill" | "decode", stable idx)
+
+#: tiering states of a resident page (absent pages simply are not in the
+#: pool) — the state machine is hbm <-> host -> gone, never host -> gone
+#: while any session still references the page
+TIER_HBM = "hbm"
+TIER_HOST = "host"
+
+
+@dataclass(frozen=True)
+class KVPoolConfig:
+    """Shape of every per-worker pool (shared across the cluster)."""
+    page_tokens: int = 8        # tokens per page (content-address unit)
+    hbm_pages: int = 64         # device-resident capacity, in pages
+    host_pages: int = 64        # host-memory spill tier capacity, in pages
+
+
+@dataclass(frozen=True)
+class CachePlan:
+    """Residency of one session's leading history pages on one worker.
+
+    The walk stops at the first absent page (the splice point): everything
+    before it is served from the worker's pool — ``hit_tokens`` straight
+    from HBM, ``spilled_tokens`` promoted from the host tier — and the
+    ``miss_tokens`` suffix is lazily read from the bound decode worker.
+    ``pages`` carries the content keys of the walked prefix in order, so
+    the live material store can assemble exactly the pages this plan
+    priced."""
+    hit_tokens: int = 0
+    spilled_tokens: int = 0
+    miss_tokens: int = 0
+    pages: Tuple[str, ...] = ()
+
+    @property
+    def prefix_tokens(self) -> int:
+        return self.hit_tokens + self.spilled_tokens
+
+    @property
+    def total_tokens(self) -> int:
+        return self.prefix_tokens + self.miss_tokens
+
+
+def miss_plan(l_hist: int) -> CachePlan:
+    """The no-pool degenerate plan: the full history is a miss."""
+    return CachePlan(miss_tokens=l_hist)
+
+
+@dataclass
+class Page:
+    """One resident page: content key, token span that minted it, tier and
+    the refcount ledger (per-session counts, so conservation is checkable:
+    ``refcount == sum(refs.values())`` by construction, and the property
+    suite asserts the pool-level mirror of the same sums)."""
+    key: str
+    lo: int
+    hi: int
+    tier: str = TIER_HBM
+    pins: int = 0                       # in-flight plan assemblies
+    last_touch: int = 0                 # logical LRU clock, never wall time
+    refs: Dict[int, int] = field(default_factory=dict)   # session_id -> n
+
+    @property
+    def refcount(self) -> int:
+        return sum(self.refs.values())
+
+    @property
+    def tokens(self) -> int:
+        return self.hi - self.lo
+
+
+class KVPool:
+    """Bookkeeping pool of one worker: content-keyed pages over two tiers.
+
+    Mutations return the spill/evict side effects they caused so the
+    caller (:class:`PoolManager`) can emit decision-log events and drive
+    the material listener in the exact order decisions were made."""
+
+    def __init__(self, cfg: KVPoolConfig, worker: WorkerKey,
+                 clock: Callable[[], int]):
+        self.cfg = cfg
+        self.worker = worker
+        self._clock = clock
+        self.pages: Dict[str, Page] = {}
+        self.host_overflow = 0          # evictions refused (page referenced)
+        # lazy per-tier LRU heaps of (last_touch, key): every touch/tier
+        # move pushes a fresh entry; pops whose tick no longer matches the
+        # page's current last_touch (or tier) are stale and discarded.
+        # Ticks are unique per event, so the heap's (tick, key) order is
+        # exactly the linear-scan LRU order — amortized O(log P) per
+        # eviction instead of O(P), with identical victims.
+        self._heaps: Dict[str, List[Tuple[int, str]]] = {
+            TIER_HBM: [], TIER_HOST: []}
+        self._counts: Dict[str, int] = {TIER_HBM: 0, TIER_HOST: 0}
+
+    def _note(self, p: Page) -> None:
+        heapq.heappush(self._heaps[p.tier], (p.last_touch, p.key))
+
+    # -- queries ----------------------------------------------------------
+    def tier_of(self, key: str) -> Optional[str]:
+        p = self.pages.get(key)
+        return p.tier if p is not None else None
+
+    def count(self, tier: str) -> int:
+        return self._counts[tier]
+
+    def plan(self, keys: List[str], spans: List[Tuple[int, int]],
+             l_hist: int) -> CachePlan:
+        """Read-only residency walk over the leading history pages; stops
+        at the first absent page."""
+        hit = spilled = 0
+        walked: List[str] = []
+        for key, (lo, hi) in zip(keys, spans):
+            p = self.pages.get(key)
+            if p is None:
+                break
+            walked.append(key)
+            if p.tier == TIER_HBM:
+                hit += hi - lo
+            else:
+                spilled += hi - lo
+        return CachePlan(hit_tokens=hit, spilled_tokens=spilled,
+                         miss_tokens=l_hist - hit - spilled,
+                         pages=tuple(walked))
+
+    # -- mutations --------------------------------------------------------
+    def insert(self, key: str, lo: int, hi: int,
+               session_id: int) -> Tuple[bool, List[Tuple[str, Page]]]:
+        """Make ``key`` resident in HBM, referenced by ``session_id``.
+        Returns (inserted_new, [(effect, page), ...]) where effect ∈
+        spill | evict, in the order they happened."""
+        effects: List[Tuple[str, Page]] = []
+        p = self.pages.get(key)
+        if p is not None:                       # dedup: share, touch, ref
+            p.refs[session_id] = p.refs.get(session_id, 0) + 1
+            p.last_touch = self._clock()
+            self._note(p)
+            return False, effects
+        p = Page(key=key, lo=lo, hi=hi, tier=TIER_HBM,
+                 last_touch=self._clock(), refs={session_id: 1})
+        self.pages[key] = p
+        self._counts[TIER_HBM] += 1
+        self._note(p)
+        effects.extend(self._enforce_capacity(keep=key))
+        return True, effects
+
+    def touch(self, keys: List[str],
+              session_id: int) -> Tuple[int, List[Tuple[str, Page]]]:
+        """Plan execution: reference + LRU-touch the walked prefix, pin it
+        for the duration of the chunk, and promote any host-tier page back
+        to HBM.  Returns (promoted_pages, effects) — promotes first, then
+        any spills the promotion displaced."""
+        effects: List[Tuple[str, Page]] = []
+        promoted = 0
+        for key in keys:
+            p = self.pages.get(key)
+            if p is None:                       # plan raced a drop: treat
+                continue                        # as miss downstream
+            p.refs[session_id] = p.refs.get(session_id, 0) + 1
+            p.last_touch = self._clock()
+            p.pins += 1
+            if p.tier == TIER_HOST:
+                p.tier = TIER_HBM
+                self._counts[TIER_HOST] -= 1
+                self._counts[TIER_HBM] += 1
+                promoted += 1
+                effects.append(("promote", p))
+            self._note(p)
+        if promoted:
+            effects.extend(self._enforce_capacity())
+        return promoted, effects
+
+    def unpin(self, keys: List[str]) -> None:
+        for key in keys:
+            p = self.pages.get(key)
+            if p is not None and p.pins > 0:
+                p.pins -= 1
+
+    def release_session(self, session_id: int) -> None:
+        """Drop every reference the session holds; pages stay resident at
+        refcount 0 (evictable, but still sharable — this is what makes
+        reuse CROSS-session, not just within one)."""
+        for p in self.pages.values():
+            p.refs.pop(session_id, None)
+
+    def _enforce_capacity(self, keep: Optional[str] = None) \
+            -> List[Tuple[str, Page]]:
+        """Spill HBM LRU overflow to the host tier; evict host LRU overflow
+        entirely — but never a pinned page, never (from the host tier) a
+        page some session still references, and never the page being
+        inserted right now."""
+        effects: List[Tuple[str, Page]] = []
+        while self.count(TIER_HBM) > self.cfg.hbm_pages:
+            victim = self._lru(TIER_HBM, keep)
+            if victim is None:
+                break                           # everything pinned: overflow
+            victim.tier = TIER_HOST
+            self._counts[TIER_HBM] -= 1
+            self._counts[TIER_HOST] += 1
+            self._note(victim)
+            effects.append(("spill", victim))
+        while self.count(TIER_HOST) > self.cfg.host_pages:
+            victim = self._lru(TIER_HOST, keep, require_unreferenced=True)
+            if victim is None:
+                self.host_overflow += 1         # all referenced: never free
+                break
+            del self.pages[victim.key]
+            self._counts[TIER_HOST] -= 1
+            effects.append(("evict", victim))
+        return effects
+
+    def _lru(self, tier: str, keep: Optional[str],
+             require_unreferenced: bool = False) -> Optional[Page]:
+        heap = self._heaps[tier]
+        skipped: List[Tuple[int, str]] = []     # valid but momentarily
+        victim: Optional[Page] = None           # ineligible (pinned/keep)
+        while heap:
+            t, key = heapq.heappop(heap)
+            p = self.pages.get(key)
+            if p is None or p.tier != tier or p.last_touch != t:
+                continue                        # stale heap entry
+            if (p.pins > 0 or p.key == keep
+                    or (require_unreferenced and p.refcount > 0)):
+                skipped.append((t, key))
+                continue
+            victim = p
+            break
+        for entry in skipped:
+            heapq.heappush(heap, entry)
+        return victim
+
+    # -- audit (property suite) -------------------------------------------
+    def audit(self) -> None:
+        for p in self.pages.values():
+            assert p.refcount == sum(p.refs.values())
+            assert p.pins >= 0 and p.tier in (TIER_HBM, TIER_HOST)
+            assert all(n > 0 for n in p.refs.values())
+        for tier in (TIER_HBM, TIER_HOST):
+            assert self._counts[tier] == sum(
+                1 for p in self.pages.values() if p.tier == tier)
+
+
+class PoolManager:
+    """The cluster's pools plus the per-session symbol streams and chain
+    hashes that content-address them.
+
+    Owned by the Coordinator (the single scheduling authority); the
+    ServingRuntime drives every mutation from its protocol hooks so the
+    modeled and live backends evolve identical pool state on
+    protocol-determined traces.  ``emit(kind, task, worker_idx)`` (wired
+    to ``Coordinator.note_cache``) surfaces cache_hit/spill/promote into
+    the decision log; ``listener`` (the live material store, or None under
+    the modeled backend) executes the same decisions on real bytes."""
+
+    def __init__(self, cfg: KVPoolConfig, model_tag: str = "model"):
+        self.cfg = cfg
+        self.model_tag = model_tag
+        self.pools: Dict[WorkerKey, KVPool] = {}
+        self.streams: Dict[int, List] = {}       # session -> symbols
+        self.chains: Dict[int, List[str]] = {}   # session -> page chain keys
+        self.emit: Optional[Callable] = None     # Coordinator.note_cache
+        self.listener = None                     # serving MaterialStore
+        self._ticks = 0
+
+    # -- plumbing ---------------------------------------------------------
+    def _tick(self) -> int:
+        self._ticks += 1
+        return self._ticks
+
+    def pool(self, worker: WorkerKey) -> KVPool:
+        p = self.pools.get(worker)
+        if p is None:
+            p = self.pools[worker] = KVPool(self.cfg, worker, self._tick)
+        return p
+
+    def _emit(self, kind: str, task, worker: WorkerKey,
+              tokens: int = 0) -> None:
+        if self.emit is not None and task is not None:
+            self.emit(kind, task, worker[1], tokens)
+
+    # -- symbol streams & chain hashing -----------------------------------
+    def extend_stream(self, session_id: int, upto: int,
+                      fetch: Callable[[int, int], List]) -> None:
+        """Grow the session's symbol stream to ``upto`` positions.
+        Existing positions are NEVER rewritten — a recovery replay carries
+        the same content the stream already recorded, and overwriting
+        would re-key (hence un-share) every page.  ``fetch(lo, n)``
+        supplies symbols for the missing tail only."""
+        stream = self.streams.setdefault(session_id, [])
+        if upto > len(stream):
+            stream.extend(fetch(len(stream), upto - len(stream)))
+        self._extend_chain(session_id)
+
+    def _extend_chain(self, session_id: int) -> None:
+        stream = self.streams.get(session_id, [])
+        chain = self.chains.setdefault(session_id, [])
+        pt = self.cfg.page_tokens
+        prev = chain[-1] if chain else self.model_tag
+        while (len(chain) + 1) * pt <= len(stream):
+            lo = len(chain) * pt
+            page = stream[lo:lo + pt]
+            h = hashlib.blake2b(
+                repr((prev, tuple(page))).encode(), digest_size=16)
+            prev = h.hexdigest()
+            chain.append(prev)
+        # a trailing partial page is never addressable (by design)
+
+    def page_span(self, k: int) -> Tuple[int, int]:
+        pt = self.cfg.page_tokens
+        return k * pt, (k + 1) * pt
+
+    def _leading(self, session_id: int,
+                 l_hist: int) -> Tuple[List[str], List[Tuple[int, int]]]:
+        """Chain keys + token spans of the full pages inside [0, l_hist)."""
+        chain = self.chains.get(session_id, [])
+        n = min(len(chain), l_hist // self.cfg.page_tokens)
+        return chain[:n], [self.page_span(k) for k in range(n)]
+
+    # -- Coordinator-facing: plans ----------------------------------------
+    def plan_for(self, worker: WorkerKey, session_id: int,
+                 l_hist: int) -> CachePlan:
+        """Read-only residency plan — safe to call per candidate worker at
+        routing/steal/offload pricing time (no touches, no side effects)."""
+        if l_hist <= 0:
+            return miss_plan(max(l_hist, 0))
+        keys, spans = self._leading(session_id, l_hist)
+        return self.pool(worker).plan(keys, spans, l_hist)
+
+    def recovery_plan(self, worker: WorkerKey, session_id: int,
+                      total: int) -> CachePlan:
+        """Plan for a post-failure replay of ``total`` context tokens on
+        the rebind target: like :meth:`plan_for`, but the resident prefix
+        is clamped strictly below ``total`` (at page granularity) so the
+        recovery prefill always has at least one token to run."""
+        plan = self.plan_for(worker, session_id, total)
+        while plan.pages and plan.prefix_tokens >= total:
+            k = len(plan.pages) - 1
+            lo, hi = self.page_span(k)
+            tokens = hi - lo
+            tier = self.pool(worker).tier_of(plan.pages[k])
+            plan = CachePlan(
+                hit_tokens=plan.hit_tokens - (tokens if tier == TIER_HBM
+                                              else 0),
+                spilled_tokens=plan.spilled_tokens - (
+                    tokens if tier == TIER_HOST else 0),
+                miss_tokens=plan.miss_tokens + tokens,
+                pages=plan.pages[:-1])
+        return plan
+
+    # -- runtime-facing: protocol-point mutations --------------------------
+    def execute_plan(self, worker: WorkerKey, session_id: int,
+                     plan: CachePlan, task) -> None:
+        """A chunk is launching against ``plan``: reference, LRU-touch and
+        pin the walked prefix; promote its host-tier pages (one `promote`
+        event per chunk covers them all — the event grain is the decision,
+        the token count rides the counters)."""
+        if not plan.pages:
+            return
+        promoted, effects = self.pool(worker).touch(list(plan.pages),
+                                                    session_id)
+        self._apply_effects(worker, effects, task)
+
+    def finish_chunk(self, worker: WorkerKey, plan: Optional[CachePlan]) \
+            -> None:
+        """Chunk execution ended: release the plan's pins."""
+        if plan is not None and plan.pages:
+            self.pool(worker).unpin(list(plan.pages))
+
+    def insert_range(self, worker: WorkerKey, session_id: int, lo: int,
+                     hi: int, task) -> List[Page]:
+        """Pool every full page inside [lo, hi) — the spans the executing
+        worker holds material KV for.  Returns newly-resident pages (the
+        material listener captures those same pages via on_insert)."""
+        chain = self.chains.get(session_id, [])
+        pt = self.cfg.page_tokens
+        pool = self.pool(worker)
+        fresh: List[Page] = []
+        k0 = (lo + pt - 1) // pt
+        k1 = min(hi // pt, len(chain))
+        for k in range(k0, k1):
+            plo, phi = self.page_span(k)
+            new, effects = pool.insert(chain[k], plo, phi, session_id)
+            if new:
+                page = pool.pages[chain[k]]
+                fresh.append(page)
+                if self.listener is not None:
+                    self.listener.on_insert(worker, page)
+            self._apply_effects(worker, effects, task)
+        return fresh
+
+    def _apply_effects(self, worker: WorkerKey,
+                       effects: List[Tuple[str, Page]], task) -> None:
+        for effect, page in effects:
+            if effect == "spill":
+                self._emit("spill", task, worker, page.tokens)
+                if self.listener is not None:
+                    self.listener.on_spill(worker, page)
+            elif effect == "promote":
+                if self.listener is not None:
+                    self.listener.on_promote(worker, page)
+            elif effect == "evict":
+                if self.listener is not None:
+                    self.listener.on_evict(worker, page)
+
+    def release_session(self, session_id: int) -> None:
+        """Session finished: drop its references everywhere.  Pages stay
+        resident at refcount 0 — the next session sharing the prefix still
+        hits them; they are simply first in line for eviction."""
+        for pool in self.pools.values():
+            pool.release_session(session_id)
+
+    def drop_worker(self, worker: WorkerKey) -> None:
+        """Worker died: its KV (and pool) die with it."""
+        self.pools.pop(worker, None)
+        if self.listener is not None:
+            self.listener.on_drop(worker)
+
+    # -- audit (property suite) -------------------------------------------
+    def audit(self) -> None:
+        for pool in self.pools.values():
+            pool.audit()

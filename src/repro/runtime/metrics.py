@@ -31,6 +31,11 @@ class SchedCounters:
     migrations: int = 0        # local chunks shipped off a saturated decode
     migrated_tokens: int = 0   # sum of l_incr over offloaded chunks
     offload_rejected: int = 0  # saturated scans where no move was profitable
+    # -- global KV pool (DESIGN.md §17) ---------------------------------
+    cache_hits: int = 0        # chunks that launched with a resident prefix
+    cache_hit_tokens: int = 0  # sum of resident prefix tokens over those
+    kv_spills: int = 0         # pages demoted HBM -> host tier
+    kv_promotes: int = 0       # chunks whose plan promoted host-tier pages
 
 
 def p95(vals: Sequence[float]) -> float:

@@ -296,10 +296,12 @@ class ServingRuntime:
             try:
                 if w.kind == "prefill":
                     waited = self.now - task.enqueue_time
+                    self._plan_cache(w, task, s)
                     extra = self.backend.history_read_extra(
                         w, task, d, waited, self._hist_to_read(w, task, s))
                 dur, payload = self.backend.run_prefill(w, task, s, d)
             except WorkerDiedError as e:
+                self._unpin_cache(w, task)
                 self._on_rpc_death(e, w, task, s)
                 return
             w._running = True
@@ -404,15 +406,57 @@ class ServingRuntime:
             return 0
         return task.l_hist
 
+    # -- global KV pool hooks (DESIGN.md §17) --------------------------------
+    @property
+    def _pool(self):
+        """The Coordinator-owned PoolManager, or None when pooling is off."""
+        return self.coordinator.pool_mgr
+
+    def _plan_cache(self, w, task: PrefillTask, s) -> None:
+        """Chunk launch: resolve how much of the history this chunk must
+        lazily read is already resident in ``w``'s page pool, pin that
+        prefix for the chunk's duration, and surface the hit into the
+        decision log — BEFORE the backend prices or performs the read
+        (both see ``task.cache_plan``)."""
+        pm = self._pool
+        if pm is None or self._hist_to_read(w, task, s) <= 0:
+            return
+        plan = pm.plan_for((w.kind, w.idx), task.session_id, task.l_hist)
+        task.cache_plan = plan
+        if plan.prefix_tokens <= 0:
+            return
+        self.coordinator.note_cache("cache_hit", task, w.idx,
+                                    plan.prefix_tokens)
+        if plan.spilled_tokens > 0:
+            self.coordinator.note_cache("promote", task, w.idx)
+        pm.execute_plan((w.kind, w.idx), task.session_id, plan, task)
+
+    def _unpin_cache(self, w, task: Optional[PrefillTask]) -> None:
+        """Chunk execution ended (or died): release the plan's page pins."""
+        pm = self._pool
+        if pm is not None and task is not None and w.alive:
+            pm.finish_chunk((w.kind, w.idx), task.cache_plan)
+
     # -- prefill completion, write-back, decode join (§3 step 3) ------------
     def _on_prefill_done(self, w, task: PrefillTask, payload) -> None:
         w._running = False
         w._rt_running_task = None
         w.tasks_done += 1
         s = self.sessions[task.session_id]
+        self._unpin_cache(w, task)
         if task.gen != s._rt_gen:
             self._kick(w)
             return
+        pm = self._pool
+        if pm is not None and w.kind == "prefill" and w.alive:
+            # the executing worker materially holds [0, l_hist + l_incr)
+            # right now: key the span and pool its full pages (§17)
+            end = task.l_hist + task.l_incr
+            pm.extend_stream(
+                task.session_id, end,
+                lambda lo, n: self.backend.prefill_symbols(s, task, lo, n))
+            pm.insert_range(("prefill", w.idx), task.session_id, 0, end,
+                            task)
         d = self._bound_decode(s)
         if not d.alive:
             self._rebind(s, task)
@@ -447,6 +491,17 @@ class ServingRuntime:
             d.mem_tokens -= task.l_incr     # the KV write-back never landed
             self._on_rpc_death(e, d, task, s)
             return
+        pm = self._pool
+        if pm is not None:
+            end = task.l_hist + task.l_incr
+            pm.extend_stream(
+                task.session_id, end,
+                lambda lo, n: self.backend.prefill_symbols(s, task, lo, n))
+            if stat_worker.kind == "prefill":
+                # remote join: the increment tree just crossed to the
+                # decode worker — pool its pages there too (§17)
+                pm.insert_range(("decode", d.idx), task.session_id,
+                                task.l_hist, end, task)
         if not task.is_final_chunk:
             rest, s._rt_rest = s._rt_rest, None
             self._dispatch(s, rest)     # re-derives the next chunk size
@@ -524,6 +579,15 @@ class ServingRuntime:
             self._kick(d)
 
     def _on_round_complete(self, s, d) -> None:
+        pm = self._pool
+        if pm is not None:
+            # key the round's decode span so the next round's history pages
+            # are addressable (the tokens live on the decode worker; no
+            # material capture — only remote joins stage extract trees)
+            r0 = s.current_round
+            pm.extend_stream(
+                s.session_id, s.context_len,
+                lambda lo, n: self.backend.decode_symbols(s, r0, lo, n))
         r = s.rounds[s.current_round]
         s.current_round += 1
         if s.current_round >= s.num_rounds:
@@ -531,6 +595,8 @@ class ServingRuntime:
             s.state = "done"
             d.mem_tokens -= s.context_len
             self.backend.detach(d, s)
+            if pm is not None:
+                pm.release_session(s.session_id)
             return
         s.state = "env"
         gen = s._rt_gen
@@ -564,6 +630,8 @@ class ServingRuntime:
             kill()
         orphans = list(w.prefill_queue)
         w.prefill_queue.clear()
+        if self._pool is not None:
+            self._pool.drop_worker((kind, idx))   # its pages die with it
         if kind == "decode":
             victims = list(self.backend.attached(w))
             self.backend.on_decode_failure(w)
@@ -624,8 +692,10 @@ class ServingRuntime:
 
     def _rebind(self, s, task: Optional[PrefillTask]) -> None:
         """Decode worker died: drop stale in-flight work, re-bind, and
-        re-prefill the whole context (modeled) / replay the transcript
-        (live)."""
+        re-prefill the context (modeled) / replay the transcript (live) —
+        minus any prefix the rebind target's page pool still holds
+        (DESIGN.md §17): recovery routes through a CachePlan instead of
+        blindly re-reading the full history."""
         if s.state in ("done", "dropped"):
             return
         if not any(d.alive for d in self.decode_workers):
@@ -636,10 +706,54 @@ class ServingRuntime:
         pending = self._pending_increment(s, task)
         s._rt_rest = None
         s._rt_chain_worker = None
-        rtask = self.backend.make_recovery_task(s, task, self.now, pending)
+        pm = self._pool
+        if pm is not None:
+            self._key_context(s, pending)
+        d_new = self.coordinator.bind(s, self.decode_workers)
+        rplan = None
+        if pm is not None:
+            rplan = pm.recovery_plan(("decode", d_new.idx), s.session_id,
+                                     s.context_len + pending[2])
+        rtask = self.backend.make_recovery_task(s, task, self.now, pending,
+                                                d_new, rplan)
         rtask.gen = s._rt_gen
-        self.coordinator.bind(s, self.decode_workers)
+        resident = rtask.l_hist     # live may fall back to 0 (slot pressure)
+        if pm is not None and resident > 0:
+            # the rebind target already held a prefix of the dead context:
+            # the replay starts there (live attach happened inside
+            # make_recovery_task); account the residency like any hit
+            d_new.mem_tokens += resident
+            pm.execute_plan(("decode", d_new.idx), s.session_id, rplan,
+                            rtask)
+            pm.finish_chunk(("decode", d_new.idx), rplan)
+            self.coordinator.note_cache("cache_hit", rtask, d_new.idx,
+                                        resident)
+            if rplan.spilled_tokens > 0:
+                self.coordinator.note_cache("promote", rtask, d_new.idx)
         self._dispatch(s, rtask)
+
+    def _key_context(self, s, pending) -> None:
+        """Before a recovery replay: extend the symbol stream over the whole
+        context the replay will rebuild — the partially-decoded span of the
+        current round plus the never-joined increment suffix.  Streams are
+        append-only, so the replay can NEVER re-key positions the stream
+        already addressed — which is what keeps a rebuilt prefix hashing
+        identically to the pages it dedups against."""
+        pm = self._pool
+        if s.state == "decoding" and s.tokens_this_round > 0:
+            r0 = s.current_round
+            pm.extend_stream(
+                s.session_id, s.context_len,
+                lambda lo, n: self.backend.decode_symbols(s, r0, lo, n))
+        r, off, pend = pending
+        if pend > 0:
+            synth = PrefillTask(
+                session_id=s.session_id, round_idx=r, l_hist=s.context_len,
+                l_incr=pend, enqueue_time=0.0, arrival_time=0.0,
+                incr_offset=off)
+            pm.extend_stream(
+                s.session_id, s.context_len + pend,
+                lambda lo, n: self.backend.prefill_symbols(s, synth, lo, n))
 
     def _pending_increment(self, s, task: Optional[PrefillTask]):
         """The un-joined suffix of the current round's increment, which the

@@ -45,13 +45,16 @@ from repro.core.types import RoundSpec, SLOSpec
 from repro.runtime import (
     ChunkTuner,
     Coordinator,
+    KVPoolConfig,
     LiveBackend,
     OffloadConfig,
+    PoolManager,
     ServingRuntime,
     StealingConfig,
     mean,
     p95,
 )
+from repro.serving.kv_pool import MaterialStore, supports_kv_pool
 from repro.serving.config import (
     TRANSPORT_REGISTRY,
     ClusterSpec,
@@ -102,6 +105,14 @@ class LiveResult:
     fused_steps: int = 0          # fused chunk+decode steps executed
     fused_ms: float = 0.0         # total wall time of those steps
     tokens_uploaded: int = 0      # host->device token elements (inproc only)
+    kv_pool: bool = False         # §17: global KV pool active this run
+    cache_hits: int = 0           # §17 counters (0 when kv_pool disabled)
+    cache_hit_tokens: int = 0
+    kv_spills: int = 0
+    kv_promotes: int = 0
+    kv_hit_bytes: int = 0         # MEASURED bytes served from pooled pages
+    kv_spill_bytes: int = 0       # measured hbm->host demotion bytes
+    kv_promote_bytes: int = 0     # measured host->hbm read-back bytes
 
 
 def _shim_legacy_kwargs(spec, transport, policy, legacy):
@@ -244,14 +255,32 @@ class LiveCluster:
                                  budget=policy.offload_budget,
                                  min_profit_s=policy.offload_min_profit_s)
                    if policy.decode_offload else None)
+        # global KV pool (DESIGN.md §17): content-addressed page bookkeeping
+        # + the material page store, gated on the arch supporting exact
+        # page splicing (pure full-attention stacks only)
+        pool_mgr = None
+        self.kv_store = None
+        if policy.kv_pool and supports_kv_pool(cfg):
+            pool_mgr = PoolManager(
+                KVPoolConfig(page_tokens=policy.kv_page_tokens,
+                             hbm_pages=policy.kv_hbm_pages,
+                             host_pages=policy.kv_host_pages),
+                model_tag=getattr(cfg, "name", "model"))
+            self.kv_store = MaterialStore()
+            pool_mgr.listener = self.kv_store
         self.coordinator = Coordinator(
             perf=self.perf,
             routing=RoutingConfig(ttft_thres=self.slo.ttft_thres,
                                   itl_thres=self.slo.itl_thres),
             scheduler=policy.scheduler, seed=seed, chunk_tuner=tuner,
-            stealing=stealing, offload=offload)
+            stealing=stealing, offload=offload, pool_mgr=pool_mgr,
+            cache_aware=policy.kv_cache_aware)
+        if pool_mgr is not None:
+            pool_mgr.emit = self.coordinator.note_cache
+        backend = LiveBackend(self.perf, model_kv_time=model_kv_time)
+        backend.kv_store = self.kv_store
         self.runtime = ServingRuntime(
-            LiveBackend(self.perf, model_kv_time=model_kv_time),
+            backend,
             self.coordinator, self.prefill_workers, self.decode_workers,
             chunk_tokens=policy.chunk_tokens)
 
@@ -334,6 +363,20 @@ class LiveCluster:
     def run_trace(self, sessions: List[LiveSession]) -> LiveResult:
         return self.run(sessions)
 
+    def fit_promote(self) -> bool:
+        """Refit ``PerfModel.kv_promote`` from the material store's timed
+        host<->hbm page copies (DESIGN.md §17) — the measured counterpart
+        of the modeled spill/promote bandwidth.  Returns True when samples
+        existed; call between runs, never mid-trace (repricing mid-trace
+        would fork the decision log from the modeled twin)."""
+        if self.kv_store is None:
+            return False
+        samples = self.kv_store.promote_samples + self.kv_store.spill_samples
+        if not samples:
+            return False
+        self.perf.fit_promote_from_bytes(samples)
+        return True
+
     # -- results ------------------------------------------------------------
     def _result(self, sessions: List[LiveSession], wall: float) -> LiveResult:
         ttfts = [t for s in sessions for t in s.ttfts]
@@ -373,20 +416,45 @@ class LiveCluster:
                 w.engine.tokens_uploaded for w in
                 (self.prefill_workers + self.decode_workers)
                 if hasattr(w, "engine")),
+            kv_pool=self.kv_store is not None,
+            cache_hits=self.coordinator.sched.cache_hits,
+            cache_hit_tokens=self.coordinator.sched.cache_hit_tokens,
+            kv_spills=self.coordinator.sched.kv_spills,
+            kv_promotes=self.coordinator.sched.kv_promotes,
+            kv_hit_bytes=self.kv_store.hit_bytes if self.kv_store else 0,
+            kv_spill_bytes=self.kv_store.spill_bytes if self.kv_store else 0,
+            kv_promote_bytes=(self.kv_store.promote_bytes
+                              if self.kv_store else 0),
         )
 
 
 def make_live_sessions(cfg: ModelConfig, *, num_sessions: int = 4,
                        rounds: int = 3, prefill_len: int = 24,
                        decode_len: int = 6, arrival_gap: float = 0.01,
-                       seed: int = 0) -> List[LiveSession]:
+                       seed: int = 0,
+                       shared_prefix: int = 0) -> List[LiveSession]:
+    """Synthetic multi-round sessions over real token ids.
+
+    ``shared_prefix``: the first N tokens of every round-0 prompt are drawn
+    ONCE and shared verbatim across sessions (a common system prompt /
+    tool schema), with a session-unique random tail after them — the
+    shared-prefix structure the global KV pool dedups (DESIGN.md §17).
+    Unique tails keep the sessions' page chains divergent from the first
+    private token onward, so greedy decode cannot manufacture extra
+    sharing the modeled twin would miss."""
     rng = np.random.default_rng(seed)
+    shared = (rng.integers(0, cfg.vocab_size,
+                           min(shared_prefix, prefill_len)).astype(np.int32)
+              if shared_prefix > 0 else None)
     out = []
     for sid in range(num_sessions):
         rs = [RoundSpec(prefill_len=prefill_len, decode_len=decode_len,
                         env_delay=0.0) for _ in range(rounds)]
         prompts = [rng.integers(0, cfg.vocab_size, prefill_len).astype(np.int32)
                    for _ in range(rounds)]
+        if shared is not None:
+            prompts[0] = np.concatenate(
+                [shared, prompts[0][len(shared):]]).astype(np.int32)
         out.append(LiveSession(session_id=sid,
                                arrival_time=sid * arrival_gap,
                                rounds=rs, prompt_tokens=prompts))

@@ -96,6 +96,12 @@ class SchedPolicy:
     offload_min_profit_s: float = 0.0
     # -- ragged packed fused path (DESIGN.md §15) -------------------------
     packed: Optional[bool] = None    # None = auto (on when arch supports it)
+    # -- global KV pool (DESIGN.md §17) -----------------------------------
+    kv_pool: bool = False            # content-addressed paged KV + tiering
+    kv_page_tokens: int = 8          # tokens per content-addressed page
+    kv_hbm_pages: int = 64           # per-worker device tier capacity
+    kv_host_pages: int = 64          # per-worker host spill tier capacity
+    kv_cache_aware: bool = True      # False = pool runs but pricing is blind
 
     #: fields that exist on SimConfig under the same name + default — the
     #: mirror contract (tests/test_cluster_config.py)
@@ -103,7 +109,9 @@ class SchedPolicy:
         "scheduler", "chunk_tokens", "adaptive_chunk", "chunk_headroom",
         "work_stealing", "steal_watermark", "steal_min_profit_s",
         "preemption", "decode_offload", "offload_guard",
-        "offload_hysteresis", "offload_budget", "offload_min_profit_s")
+        "offload_hysteresis", "offload_budget", "offload_min_profit_s",
+        "kv_pool", "kv_page_tokens", "kv_hbm_pages", "kv_host_pages",
+        "kv_cache_aware")
 
     def replace(self, **kw) -> "SchedPolicy":
         return dataclasses.replace(self, **kw)

@@ -1,0 +1,160 @@
+"""Material KV page store: the live half of the global KV pool
+(DESIGN.md §17).
+
+``repro.runtime.kv_pool.PoolManager`` is pure bookkeeping — which content
+hash is resident where, in which tier.  This module holds the actual KV
+bytes behind those decisions: one numpy page tree per content hash per
+worker (a single physical copy, however many sessions reference it —
+that IS the cross-session dedup), in two tiers mirroring the
+bookkeeping's hbm/host split.  It subscribes to the PoolManager through
+the listener protocol (``on_insert`` / ``on_spill`` / ``on_promote`` /
+``on_evict`` / ``on_drop``), so every tiering decision made by the
+deterministic ledger is executed here on real bytes, and every
+host<->hbm copy is wall-clock timed into ``(bytes, seconds)`` samples —
+the measured side of ``PerfModel.kv_promote``.
+
+Page capture: at the protocol points where page spans are materially "in
+hand" in the coordinator process (the assembled history + increment tree
+at remote chunk completion; the increment tree at remote join), the
+LiveBackend *stages* those extracts here; ``on_insert`` then slices each
+fresh page out of the staged ranges.  ``assemble`` is the read side: the
+walked page trees of a CachePlan concatenate into one [0, prefix)
+extract that splices ahead of the lazily-read miss suffix — the bytes it
+serves are the measured ``hit_bytes`` the acceptance gate reports.
+
+Arch gate: page splicing is mathematically exact only when every layer's
+cache is a seq-sliced full-attention K/V (identical token prefix + shared
+params => identical k/v/pos rows).  Ring-buffer (local), cross-attention
+and recurrent state leaves are whole-state copies that cannot be cut at
+page boundaries — :func:`supports_kv_pool` refuses those archs and the
+cluster falls back to private caches.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import ATTN, ModelConfig
+from repro.serving.kv_transfer import (
+    concat_extracts,
+    slice_extract,
+    transfer_bytes,
+)
+
+WorkerKey = Tuple[str, int]
+
+
+def supports_kv_pool(cfg: ModelConfig) -> bool:
+    """Paged splice is exact only for pure full-attention stacks."""
+    return set(cfg.pattern_for_depth()) == {ATTN}
+
+
+def _numpy_tree(tree):
+    return jax.tree.map(lambda x: np.asarray(x), tree)
+
+
+class MaterialStore:
+    """Coordinator-side physical page store + staging area (DESIGN.md §17).
+
+    One instance per LiveCluster, wired as the PoolManager's listener.
+    Works identically across transports: under proc/tcp the staged trees
+    already crossed the RPC boundary as part of the normal lazy-read /
+    write-back protocol, so page capture adds no new wire traffic."""
+
+    def __init__(self):
+        #: worker -> tier -> content hash -> numpy page tree (ONE copy)
+        self.tiers: Dict[WorkerKey, Dict[str, Dict[str, dict]]] = {}
+        #: worker -> [(lo, hi, extract tree)] of the in-flight chunk
+        self.staged: Dict[WorkerKey, List[Tuple[int, int, dict]]] = {}
+        # measured accounting (the acceptance gate reads hit_bytes)
+        self.hit_bytes = 0
+        self.spill_bytes = 0
+        self.promote_bytes = 0
+        #: (bytes, seconds) per timed host<->hbm copy, both directions —
+        #: feeds PerfModel.fit_promote_from_bytes
+        self.spill_samples: List[Tuple[int, float]] = []
+        self.promote_samples: List[Tuple[int, float]] = []
+
+    def _tier(self, worker: WorkerKey, tier: str) -> Dict[str, dict]:
+        return self.tiers.setdefault(worker, {"hbm": {}, "host": {}})[tier]
+
+    # -- staging (LiveBackend) --------------------------------------------
+    def stage(self, worker: WorkerKey,
+              parts: List[Tuple[int, int, dict]]) -> None:
+        """Declare the extract trees materially in hand for the worker's
+        current chunk; ``on_insert`` captures pages from them."""
+        self.staged[worker] = parts
+
+    # -- listener protocol (PoolManager) ----------------------------------
+    def on_insert(self, worker: WorkerKey, page) -> None:
+        """A fresh page became resident in bookkeeping: materialize it by
+        slicing [page.lo, page.hi) out of the staged ranges."""
+        segs, cover = [], page.lo
+        for lo, hi, tree in self.staged.get(worker, ()):
+            s_lo, s_hi = max(lo, cover), min(hi, page.hi)
+            if s_lo == cover and s_hi > s_lo:
+                segs.append(slice_extract(tree, lo, s_lo, s_hi))
+                cover = s_hi
+            if cover >= page.hi:
+                break
+        if cover < page.hi or not segs:
+            return      # span not in hand: page stays bookkeeping-only
+        tree = segs[0] if len(segs) == 1 else concat_extracts(
+            segs, page.hi - page.lo)
+        self._tier(worker, "hbm")[page.key] = _numpy_tree(tree)
+
+    def on_spill(self, worker: WorkerKey, page) -> None:
+        tree = self._tier(worker, "hbm").pop(page.key, None)
+        if tree is None:
+            return
+        t0 = time.perf_counter()
+        tree = jax.tree.map(np.copy, tree)          # the demotion DMA
+        dt = time.perf_counter() - t0
+        nbytes = transfer_bytes(tree)
+        self.spill_bytes += nbytes
+        self.spill_samples.append((nbytes, dt))
+        self._tier(worker, "host")[page.key] = tree
+
+    def on_promote(self, worker: WorkerKey, page) -> None:
+        tree = self._tier(worker, "host").pop(page.key, None)
+        if tree is None:
+            return
+        t0 = time.perf_counter()
+        tree = jax.tree.map(np.copy, tree)          # the read-back DMA
+        dt = time.perf_counter() - t0
+        nbytes = transfer_bytes(tree)
+        self.promote_bytes += nbytes
+        self.promote_samples.append((nbytes, dt))
+        self._tier(worker, "hbm")[page.key] = tree
+
+    def on_evict(self, worker: WorkerKey, page) -> None:
+        for tier in ("hbm", "host"):
+            self._tier(worker, tier).pop(page.key, None)
+
+    def on_drop(self, worker: WorkerKey) -> None:
+        """The worker died — its pages (and any staged chunk) die with it."""
+        self.tiers.pop(worker, None)
+        self.staged.pop(worker, None)
+
+    # -- read side (LiveBackend history splice) ---------------------------
+    def assemble(self, worker: WorkerKey, plan) -> Optional[dict]:
+        """Concatenate the plan's walked page trees into one [0,
+        prefix_tokens) extract; None if any page is not materially present
+        (the caller falls back to the full lazy read)."""
+        if not plan.pages:
+            return None
+        tiers = self.tiers.get(worker)
+        if tiers is None:
+            return None
+        parts = []
+        for key in plan.pages:
+            tree = tiers["hbm"].get(key) or tiers["host"].get(key)
+            if tree is None:
+                return None
+            parts.append(tree)
+        out = concat_extracts(parts, plan.prefix_tokens)
+        self.hit_bytes += transfer_bytes(out)
+        return out

@@ -98,6 +98,49 @@ def _get(tree, path):
     return tree
 
 
+def _is_extract_seq_leaf(path, x, b_ax: int) -> bool:
+    """Seq-leaf test for EXTRACT trees, where the token axis is span-length
+    (not max_len) — identification is by name.  Only sound on pure
+    full-attention caches (every k/v is seq-sliced); ring/recurrent state
+    leaves share names but not semantics, which is why the KV pool
+    (DESIGN.md §17) gates on the arch pattern."""
+    return path[-1] in _SEQ_LEAVES and x.ndim > b_ax + 1
+
+
+def slice_extract(tree: Cache, base_lo: int, lo: int, hi: int) -> Cache:
+    """Token sub-range [lo, hi) of an extract covering [base_lo, ...) —
+    page slicing for the KV pool's material store (DESIGN.md §17)."""
+    def leaf(path, x):
+        b_ax = _axes(path)
+        if _is_extract_seq_leaf(path, x, b_ax):
+            return jax.lax.slice_in_dim(x, lo - base_lo, hi - base_lo,
+                                        axis=b_ax + 1)
+        return x
+    return _map_cache(tree, leaf)
+
+
+def concat_extracts(parts, total_len: int) -> Cache:
+    """Concatenate extracts of ADJACENT token ranges into one (DESIGN.md
+    §17): seq leaves join on the token axis; non-seq leaves (per-row
+    length, any whole-state copy) come from the LAST part — the suffix
+    closest to the live row — with the length leaf pinned to
+    ``total_len`` so downstream ``insert_range`` sees a coherent row."""
+    last = parts[-1]
+
+    def leaf(path, x):
+        b_ax = _axes(path)
+        if _is_extract_seq_leaf(path, x, b_ax):
+            if len(parts) == 1:
+                return x
+            return jnp.concatenate([_get(p, path) for p in parts],
+                                   axis=b_ax + 1)
+        if path[-1] == "length":
+            return jnp.full_like(x, total_len)
+        return x
+
+    return _map_cache(last, leaf)
+
+
 def transfer_bytes(tree: Cache) -> int:
     return sum(int(np.prod(x.shape)) * x.dtype.itemsize
                for x in jax.tree.leaves(tree))

@@ -422,6 +422,11 @@ class ProcDecodeWorker(_ProcWorkerBase, SlotBookkeeping):
         return self.kv_path.get(self.client, session.slot, 0,
                                 session.context_len)
 
+    def history_extract_range(self, session, lo: int, hi: int) -> Dict:
+        """Partial history pull (DESIGN.md §17): only the miss suffix
+        crosses the RPC socket — measured bytes shrink with the hit."""
+        return self.kv_path.get(self.client, session.slot, int(lo), int(hi))
+
     # -- execution -----------------------------------------------------------
     def decode_once(self) -> Tuple[float, Dict[int, int]]:
         occupied = [i for i, s in enumerate(self.slots) if s is not None]

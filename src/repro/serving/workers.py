@@ -223,6 +223,13 @@ class LiveDecodeWorker(WorkerSchedState, SlotBookkeeping):
         return extract_range(self.cache, self.engine.cfg, self.engine.max_len,
                              0, session.context_len, row=session.slot)
 
+    def history_extract_range(self, session: LiveSession, lo: int,
+                              hi: int) -> Dict:
+        """Partial history pull (DESIGN.md §17): just the [lo, hi) miss
+        suffix — the pool-resident prefix never crosses the wire."""
+        return extract_range(self.cache, self.engine.cfg, self.engine.max_len,
+                             lo, hi, row=session.slot)
+
     # -- execution ---------------------------------------------------------
     def decode_once(self):
         """One continuous-batching step over all occupied slots.

@@ -70,7 +70,19 @@ def make_trace(
     num_sessions: int = 200,
     arrival_rate: float = 2.0,          # requests / second (Poisson)
     seed: int = 0,
+    shared_prefix_tokens: int = 0,      # common round-0 prompt head (§17)
+    prefix_group: int = 0,              # sharing-group id for that head
 ) -> List[Session]:
+    """Synthetic sessions for one Table-1 trace.
+
+    ``shared_prefix_tokens`` annotates every session with a
+    ``prefix_group``: agentic workloads front-load a common system prompt +
+    tool schema, so the first N round-0 tokens are content-identical across
+    the group's sessions.  The modeled backend turns the annotation into
+    shared page-chain symbols and the global KV pool (DESIGN.md §17) dedups
+    them; round-0 prompts are floored at N+8 tokens so every session also
+    has a session-unique tail (chains diverge past the shared head, exactly
+    like real prompts with distinct user turns)."""
     spec = TRACES[name]
     rng = random.Random(seed)
     sessions: List[Session] = []
@@ -87,10 +99,15 @@ def make_trace(
             pf = max(8, int(_lognormal(rng, spec.mean_prefill * boost
                                        / (1 + (spec.first_round_prefill_boost - 1) / n),
                                        spec.sigma)))
+            if r == 0 and shared_prefix_tokens > 0:
+                pf = max(pf, shared_prefix_tokens + 8)
             dc = max(4, int(_lognormal(rng, spec.mean_decode, spec.sigma)))
             env = rng.expovariate(1.0 / spec.mean_env_delay) if r < n - 1 else 0.0
             rounds.append(RoundSpec(prefill_len=pf, decode_len=dc, env_delay=env))
-        sessions.append(Session(session_id=sid, arrival_time=t, rounds=rounds))
+        s = Session(session_id=sid, arrival_time=t, rounds=rounds)
+        if shared_prefix_tokens > 0:
+            s.prefix_group = (prefix_group, shared_prefix_tokens)
+        sessions.append(s)
     return sessions
 
 

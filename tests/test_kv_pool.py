@@ -1,0 +1,542 @@
+"""Property suite for the global KV layer (DESIGN.md §17).
+
+Randomized model-based testing of the content-addressed page pool: a
+shadow refcount ledger replays every protocol-point mutation the
+:class:`~repro.runtime.kv_pool.PoolManager` sees and the invariants the
+design promises are asserted after every step —
+
+  * refcount conservation: the pool's per-session ledgers match the
+    shadow exactly (``refcount == sum(refs.values())`` via ``audit``);
+  * no page is ever freed while any session still references it;
+  * dedup soundness: equal chain hash ⇒ one physical page (a group's
+    shared head maps to identical chain prefixes, divergent tails);
+  * the LRU never evicts (or demotes) a pinned / in-flight page;
+  * spill → promote round-trips are byte-identical in the material
+    store, and measured into ``(bytes, seconds)`` samples.
+
+Runs under hypothesis when available; the container does not ship it, so
+the default path is a seeded fallback driving the same state machine
+through ``pytest.mark.parametrize`` — deterministic, replayable seeds.
+
+The live half pins the §17 recovery fix: after a decode-worker death the
+replay routes through a CachePlan, so a rebind target that already holds
+the (cross-session deduped) prefix re-reads only the miss suffix instead
+of the full history.  Modeled and live twins inject the same failure and
+must both attach the same 16-token resident prefix.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    Deployment,
+    PerfModel,
+    SimConfig,
+    Simulation,
+    SLOSpec,
+    WorkerGroup,
+)
+from repro.core.routing import RoutingConfig
+from repro.core.types import RoundSpec, Session
+from repro.runtime.kv_pool import (
+    TIER_HBM,
+    TIER_HOST,
+    CachePlan,
+    KVPoolConfig,
+    Page,
+    PoolManager,
+    miss_plan,
+)
+
+try:                                    # not in the container image: the
+    from hypothesis import given, settings      # seeded fallback drives the
+    from hypothesis import strategies as st     # same machine deterministically
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+N_FALLBACK_SEEDS = 20
+
+
+def seeded_property(fn):
+    """``@given(seed=...)`` under hypothesis, parametrized seeds without."""
+    if HAVE_HYPOTHESIS:
+        return settings(max_examples=40, deadline=None)(
+            given(seed=st.integers(min_value=0, max_value=2 ** 32 - 1))(fn))
+    return pytest.mark.parametrize("seed", range(N_FALLBACK_SEEDS))(fn)
+
+
+# ---------------------------------------------------------------------------
+# randomized state machine over PoolManager, with a shadow refcount ledger
+# ---------------------------------------------------------------------------
+
+WORKERS = (("prefill", 0), ("decode", 0), ("decode", 1))
+N_SESSIONS = 4
+GROUP_OF = {0: 0, 1: 0, 2: 1, 3: 1}     # two prefix-sharing groups
+
+
+class PoolMachine:
+    """Drives a PoolManager through random protocol-point mutations while a
+    shadow ledger independently replays the reference counting."""
+
+    def __init__(self, seed: int):
+        self.rng = random.Random(seed)
+        pt = self.rng.choice((2, 4))
+        self.cfg = KVPoolConfig(page_tokens=pt,
+                                hbm_pages=self.rng.randint(2, 5),
+                                host_pages=self.rng.randint(2, 6))
+        self.pm = PoolManager(self.cfg)
+        self.shared_head = pt * self.rng.randint(1, 3)
+        #: (worker, key) -> {session_id: n} — the independent refcount replay
+        self.shadow = {}
+        #: in-flight chunks still holding pins: (worker, sid, plan)
+        self.inflight = []
+
+    # -- symbol model: shared group head, session-unique tail --------------
+    def _symbol(self, sid: int, j: int):
+        if j < self.shared_head:
+            return ("g", GROUP_OF[sid], j)
+        return ("s", sid, j)
+
+    def _extend(self, sid: int, upto: int) -> None:
+        self.pm.extend_stream(
+            sid, upto,
+            lambda lo, n: [self._symbol(sid, j) for j in range(lo, lo + n)])
+
+    def _shadow_ref(self, worker, key, sid) -> None:
+        refs = self.shadow.setdefault((worker, key), {})
+        refs[sid] = refs.get(sid, 0) + 1
+
+    # -- ops ---------------------------------------------------------------
+    def op_extend(self) -> None:
+        sid = self.rng.randrange(N_SESSIONS)
+        cur = len(self.pm.streams.get(sid, []))
+        self._extend(sid, cur + self.rng.randint(1, 3 * self.cfg.page_tokens))
+
+    def op_insert(self) -> None:
+        sid = self.rng.randrange(N_SESSIONS)
+        stream = self.pm.streams.get(sid, [])
+        if not stream:
+            return
+        worker = self.rng.choice(WORKERS)
+        lo = self.rng.randrange(len(stream))
+        hi = self.rng.randint(lo, len(stream))
+        chain, pt = self.pm.chains.get(sid, []), self.cfg.page_tokens
+        for k in range((lo + pt - 1) // pt, min(hi // pt, len(chain))):
+            self._shadow_ref(worker, chain[k], sid)
+        self.pm.insert_range(worker, sid, lo, hi, None)
+
+    def op_plan_exec(self) -> None:
+        sid = self.rng.randrange(N_SESSIONS)
+        stream = self.pm.streams.get(sid, [])
+        if not stream:
+            return
+        worker = self.rng.choice(WORKERS)
+        l_hist = self.rng.randint(0, len(stream))
+        if self.rng.random() < 0.25:
+            plan = self.pm.recovery_plan(worker, sid, l_hist)
+            assert not plan.pages or plan.prefix_tokens < l_hist
+        else:
+            plan = self.pm.plan_for(worker, sid, l_hist)
+        assert plan.total_tokens == max(l_hist, 0)
+        for key in plan.pages:
+            self._shadow_ref(worker, key, sid)
+        self.pm.execute_plan(worker, sid, plan, None)
+        if plan.pages:
+            self.inflight.append((worker, sid, plan))
+
+    def op_finish(self) -> None:
+        if not self.inflight:
+            return
+        worker, _sid, plan = self.inflight.pop(
+            self.rng.randrange(len(self.inflight)))
+        self.pm.finish_chunk(worker, plan)
+
+    def op_release(self) -> None:
+        sid = self.rng.randrange(N_SESSIONS)
+        self.pm.release_session(sid)
+        for refs in self.shadow.values():
+            refs.pop(sid, None)
+
+    def op_drop(self) -> None:
+        worker = self.rng.choice(WORKERS)
+        self.pm.drop_worker(worker)
+        self.shadow = {wk: r for wk, r in self.shadow.items()
+                       if wk[0] != worker}
+        self.inflight = [e for e in self.inflight if e[0] != worker]
+
+    # -- invariants --------------------------------------------------------
+    def check(self) -> None:
+        self.pm.audit()                 # refcount + tier-count conservation
+        pinned = {}                     # (worker, key) -> expected pin count
+        for worker, _sid, plan in self.inflight:
+            for key in plan.pages:
+                pinned[(worker, key)] = pinned.get((worker, key), 0) + 1
+        for wk, pool in self.pm.pools.items():
+            for key, p in pool.pages.items():
+                assert p.tokens == self.cfg.page_tokens
+                assert p.lo % self.cfg.page_tokens == 0
+                # refcount conservation against the independent shadow
+                exp = {s: n for s, n in
+                       self.shadow.get((wk, key), {}).items() if n > 0}
+                assert p.refs == exp, (wk, key, p.refs, exp)
+                # an in-flight (pinned) page is never demoted out of HBM
+                assert p.pins == pinned.get((wk, key), 0)
+                if p.pins > 0:
+                    assert p.tier == TIER_HBM
+        # a pinned page is never EVICTED either
+        for (worker, key), n in pinned.items():
+            assert key in self.pm.pools[worker].pages
+        # no page freed while referenced: a shadow entry whose page is gone
+        # must have been unreferenced at eviction time
+        for (wk, key) in list(self.shadow):
+            pool = self.pm.pools.get(wk)
+            if pool is None or key not in pool.pages:
+                live = {s: n for s, n in self.shadow[(wk, key)].items()
+                        if n > 0}
+                assert not live, f"{key} freed while referenced: {live}"
+                del self.shadow[(wk, key)]
+
+    def check_dedup(self) -> None:
+        """Equal content ⇒ equal chain prefix; divergent content ⇒
+        divergent keys from the first differing page onward."""
+        pt = self.cfg.page_tokens
+        n_shared = self.shared_head // pt
+        for a, b in ((0, 1), (2, 3)):
+            ca = self.pm.chains.get(a, [])
+            cb = self.pm.chains.get(b, [])
+            n = min(len(ca), len(cb), n_shared)
+            assert ca[:n] == cb[:n]
+            if len(ca) > n_shared and len(cb) > n_shared:
+                assert ca[n_shared] != cb[n_shared]
+        c0, c2 = self.pm.chains.get(0, []), self.pm.chains.get(2, [])
+        if c0 and c2:                   # different groups never share
+            assert c0[0] != c2[0]
+
+    def run(self, steps: int = 80) -> None:
+        ops = ([self.op_extend] * 3 + [self.op_insert] * 4
+               + [self.op_plan_exec] * 4 + [self.op_finish] * 2
+               + [self.op_release] + [self.op_drop])
+        for sid in range(N_SESSIONS):   # seed every stream past the head
+            self._extend(sid, self.shared_head
+                         + self.rng.randint(1, 2 * self.cfg.page_tokens))
+        self.check()
+        for _ in range(steps):
+            self.rng.choice(ops)()
+            self.check()
+        self.check_dedup()
+
+
+@seeded_property
+def test_pool_properties(seed):
+    PoolMachine(seed).run()
+
+
+# ---------------------------------------------------------------------------
+# focused unit checks of the plan math
+# ---------------------------------------------------------------------------
+
+def _manager(pt=4, hbm=64, host=64) -> PoolManager:
+    return PoolManager(KVPoolConfig(page_tokens=pt, hbm_pages=hbm,
+                                    host_pages=host))
+
+
+def _extend_const(pm, sid, upto):
+    pm.extend_stream(sid, upto, lambda lo, n: [("t", sid, j)
+                                               for j in range(lo, lo + n)])
+
+
+def test_plan_stops_at_first_absent_page():
+    pm, w = _manager(), ("decode", 0)
+    _extend_const(pm, 0, 12)
+    chain = pm.chains[0]
+    assert len(chain) == 3
+    pool = pm.pool(w)
+    pool.insert(chain[0], 0, 4, 0)
+    pool.insert(chain[2], 8, 12, 0)     # hole at page 1: unreachable
+    plan = pm.plan_for(w, 0, 12)
+    assert plan.pages == (chain[0],)
+    assert (plan.hit_tokens, plan.spilled_tokens, plan.miss_tokens) \
+        == (4, 0, 8)
+
+
+def test_degenerate_plans():
+    pm = _manager()
+    assert pm.plan_for(("decode", 0), 0, 0) == miss_plan(0)
+    assert pm.plan_for(("decode", 0), 0, -3) == miss_plan(0)
+    p = miss_plan(7)
+    assert (p.prefix_tokens, p.miss_tokens, p.total_tokens) == (0, 7, 7)
+    # partial trailing page is never addressable
+    _extend_const(pm, 1, 6)
+    assert len(pm.chains[1]) == 1
+    pm.insert_range(("decode", 0), 1, 0, 6, None)
+    plan = pm.plan_for(("decode", 0), 1, 6)
+    assert plan.prefix_tokens == 4 and plan.miss_tokens == 2
+
+
+def test_dedup_shares_one_physical_page():
+    pm, w = _manager(), ("decode", 0)
+    for sid in (0, 1):                  # identical content, two sessions
+        pm.extend_stream(sid, 8, lambda lo, n: list(range(lo, lo + n)))
+        pm.insert_range(w, sid, 0, 8, None)
+    assert pm.chains[0] == pm.chains[1]
+    pool = pm.pool(w)
+    assert len(pool.pages) == 2         # 8 tokens / 4-token pages, ONE copy
+    for key in pm.chains[0]:
+        assert pool.pages[key].refs == {0: 1, 1: 1}
+    pm.audit()
+
+
+def test_recovery_plan_clamped_strictly_below_total():
+    pm, w = _manager(), ("decode", 0)
+    _extend_const(pm, 0, 8)
+    pm.insert_range(w, 0, 0, 8, None)
+    full = pm.plan_for(w, 0, 8)
+    assert full.prefix_tokens == 8      # fully resident
+    rec = pm.recovery_plan(w, 0, 8)
+    assert rec.prefix_tokens == 4 and rec.miss_tokens == 4
+    assert rec.pages == full.pages[:1]  # dropped page returns as a miss
+
+
+def test_lru_spill_promote_and_pinning():
+    pm, w = _manager(pt=4, hbm=2, host=8), ("decode", 0)
+    _extend_const(pm, 0, 12)
+    chain = pm.chains[0]
+    pm.insert_range(w, 0, 0, 12, None)  # 3 pages into a 2-page HBM tier
+    pool = pm.pool(w)
+    assert pool.tier_of(chain[0]) == TIER_HOST      # LRU page spilled
+    assert pool.count(TIER_HBM) == 2
+    plan = pm.plan_for(w, 0, 12)
+    assert plan.spilled_tokens == 4 and plan.hit_tokens == 8
+    pm.execute_plan(w, 0, plan, None)   # touch: promote-on-touch + pins
+    assert pool.tier_of(chain[0]) == TIER_HBM
+    # all three pages pinned: over capacity but nothing may be demoted
+    assert pool.count(TIER_HBM) == 3
+    assert all(pool.pages[k].pins == 1 for k in chain)
+    _extend_const(pm, 1, 4)
+    pm.insert_range(w, 1, 0, 4, None)   # insert under full pins: overflow
+    assert all(pool.pages[k].tier == TIER_HBM for k in chain)
+    pm.finish_chunk(w, plan)            # pins released
+    assert all(pool.pages[k].pins == 0 for k in chain)
+    _extend_const(pm, 1, 8)
+    pm.insert_range(w, 1, 4, 8, None)   # now the LRU spill can proceed
+    assert pool.count(TIER_HBM) <= 2 + 1
+    pm.audit()
+
+
+def test_release_keeps_pages_resident_for_later_sessions():
+    pm, w = _manager(), ("decode", 0)
+    pm.extend_stream(0, 8, lambda lo, n: list(range(lo, lo + n)))
+    pm.insert_range(w, 0, 0, 8, None)
+    pm.release_session(0)               # refcount 0, still resident
+    pm.extend_stream(1, 8, lambda lo, n: list(range(lo, lo + n)))
+    plan = pm.plan_for(w, 1, 8)
+    assert plan.prefix_tokens == 8      # the NEXT session still hits
+    pm.audit()
+
+
+# ---------------------------------------------------------------------------
+# material store: spill -> promote round-trips byte-identical
+# ---------------------------------------------------------------------------
+
+def _extract_tree(lo, hi, seed=0):
+    """A minimal well-formed extract: seq leaves are [1, n, ...] slices,
+    ``length`` is the whole-state leaf ``concat_extracts`` re-pins."""
+    rng = np.random.default_rng(seed)
+    n = hi - lo
+    return {
+        "k": rng.standard_normal((1, n, 2, 3)).astype(np.float32),
+        "v": rng.standard_normal((1, n, 2, 3)).astype(np.float32),
+        "pos_full": np.arange(lo, hi, dtype=np.int32).reshape(1, n),
+        "length": np.array([hi], dtype=np.int32),
+    }
+
+
+def _leaves(tree, path=()):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _leaves(v, path + (k,))
+    else:
+        yield path, np.asarray(tree)
+
+
+def _copy_tree(tree):
+    if isinstance(tree, dict):
+        return {k: _copy_tree(v) for k, v in tree.items()}
+    return np.copy(np.asarray(tree))
+
+
+def _assert_trees_identical(a, b):
+    la, lb = dict(_leaves(a)), dict(_leaves(b))
+    assert la.keys() == lb.keys()
+    for path, x in la.items():
+        y = lb[path]
+        assert x.dtype == y.dtype and x.shape == y.shape, path
+        assert np.array_equal(x, y), path
+
+
+def test_material_spill_promote_round_trip():
+    from repro.serving.kv_pool import MaterialStore
+    from repro.serving.kv_transfer import transfer_bytes
+
+    store, w = MaterialStore(), ("decode", 0)
+    tree = _extract_tree(0, 8)
+    store.stage(w, [(0, 8, tree)])
+    pages = [Page(key="p0", lo=0, hi=4), Page(key="p1", lo=4, hi=8)]
+    for p in pages:
+        store.on_insert(w, p)
+    orig = {p.key: _copy_tree(store.tiers[w]["hbm"][p.key]) for p in pages}
+
+    store.on_spill(w, pages[0])
+    assert "p0" in store.tiers[w]["host"] and "p0" not in store.tiers[w]["hbm"]
+    store.on_promote(w, pages[0])
+    assert "p0" in store.tiers[w]["hbm"] and "p0" not in store.tiers[w]["host"]
+    for p in pages:                     # byte-identical after the round trip
+        _assert_trees_identical(orig[p.key], store.tiers[w]["hbm"][p.key])
+    # both directions measured into (bytes, seconds) samples
+    nbytes = transfer_bytes(store.tiers[w]["hbm"]["p0"])
+    assert store.spill_samples == [(nbytes, pytest.approx(
+        store.spill_samples[0][1]))]
+    assert store.promote_samples[0][0] == nbytes
+    assert store.spill_bytes == store.promote_bytes == nbytes
+
+    # read side: the assembled plan serves the identical byte ranges
+    plan = CachePlan(hit_tokens=8, pages=("p0", "p1"))
+    out = store.assemble(w, plan)
+    _assert_trees_identical(tree, out)
+    assert store.hit_bytes == transfer_bytes(out)
+    # a missing page voids the plan (caller falls back to the lazy read)
+    assert store.assemble(w, CachePlan(hit_tokens=4,
+                                       pages=("p0", "missing"))) is None
+
+
+def test_material_insert_requires_full_coverage():
+    from repro.serving.kv_pool import MaterialStore
+    store, w = MaterialStore(), ("decode", 0)
+    store.stage(w, [(0, 6, _extract_tree(0, 6))])
+    store.on_insert(w, Page(key="partial", lo=4, hi=8))
+    assert "partial" not in store.tiers.get(w, {"hbm": {}})["hbm"]
+    store.on_insert(w, Page(key="covered", lo=0, hi=4))
+    assert "covered" in store.tiers[w]["hbm"]
+
+
+# ---------------------------------------------------------------------------
+# the §17 recovery fix, pinned on both backends with an injected failure:
+# a rebind target holding the (deduped) prefix re-reads only the miss tail
+# ---------------------------------------------------------------------------
+
+KV_KW = dict(kv_pool=True, kv_page_tokens=8, kv_hbm_pages=64,
+             kv_host_pages=64)
+PF, DC, SHARED = 24, 6, 16
+
+
+def _spy_recovery(runtime, captured):
+    orig = runtime.backend.make_recovery_task
+
+    def spy(session, task, now, pending, decode_worker=None, plan=None):
+        rtask = orig(session, task, now, pending, decode_worker, plan)
+        captured.append((rtask, plan))
+        return rtask
+
+    runtime.backend.make_recovery_task = spy
+
+
+def test_modeled_recovery_attaches_resident_prefix():
+    sessions = []
+    for i in range(2):
+        # gap > round-0 duration: session 0 is resident on decode 0 when
+        # session 1 binds, so least-loaded puts session 1 on decode 1
+        s = Session(session_id=i, arrival_time=i * 60.0,
+                    rounds=[RoundSpec(PF, DC, env_delay=300.0),
+                            RoundSpec(PF, DC, env_delay=0.0)])
+        s.prefix_group = (0, SHARED)
+        sessions.append(s)
+    dep = Deployment((WorkerGroup(1, 1),), (WorkerGroup(1, 2),))
+    sim = Simulation(PerfModel(get_config("qwen3-32b")), dep, sessions,
+                     SLOSpec(10.0, 10.0),
+                     SimConfig(scheduler="dynamo", seed=0,
+                               routing=RoutingConfig(ttft_thres=10.0,
+                                                     itl_thres=10.0),
+                               **KV_KW),
+                     failures=[(150.0, "decode", 0)])
+    sim.coordinator.record_decisions = True
+    captured = []
+    _spy_recovery(sim.runtime, captured)
+    sim.run()
+
+    assert sim.coordinator.rebinds == 1 and len(captured) == 1
+    rtask, rplan = captured[0]
+    # session 0's context was 24 prompt + 6 decoded tokens; the survivor
+    # holds session 1's pages, whose first SHARED tokens dedup with ours —
+    # recovery re-reads only the miss suffix, not the full history
+    assert rtask.l_hist == SHARED
+    assert rplan.hit_tokens == SHARED and rplan.miss_tokens > 0
+    assert (0, 1, SHARED, "cache_hit", 1) in sim.coordinator.decision_log
+    assert all(s.finish_time is not None for s in sessions)
+    sim.runtime._pool.audit()
+
+
+def test_live_recovery_attaches_resident_prefix():
+    from repro.serving import (ClusterSpec, LiveCluster, SchedPolicy,
+                               make_live_sessions)
+    cfg = get_config("qwen2.5-14b").reduced()
+    cl = LiveCluster(cfg, spec=ClusterSpec(n_prefill=1, n_decode=2,
+                                           max_slots=4, max_len=256),
+                     policy=SchedPolicy(scheduler="dynamo", **KV_KW),
+                     slo=SLOSpec(10.0, 10.0), seed=0, profile=False)
+    cl.coordinator.record_decisions = True
+    sessions = make_live_sessions(cfg, num_sessions=2, rounds=2,
+                                  prefill_len=PF, decode_len=DC,
+                                  arrival_gap=60.0, shared_prefix=SHARED)
+    for s in sessions:                  # a wide env window to fail inside
+        s.rounds = [RoundSpec(r.prefill_len, r.decode_len,
+                              env_delay=300.0 if i == 0 else 0.0)
+                    for i, r in enumerate(s.rounds)]
+    captured = []
+    _spy_recovery(cl.runtime, captured)
+    cl.fail_worker("decode", 0, at=150.0)
+    r = cl.run_trace(sessions)
+
+    assert r.rebinds == 1 and len(captured) == 1
+    rtask, rplan = captured[0]
+    assert rtask.l_hist == SHARED       # live attach, not full re-read
+    assert rplan.hit_tokens == SHARED
+    assert (0, 1, SHARED, "cache_hit", 1) in cl.coordinator.decision_log
+    # the attached prefix was MATERIALLY assembled from the shared pages
+    assert cl.kv_store.hit_bytes > 0
+    assert all(s.finish_time is not None for s in sessions)
+    assert all(d.mem_tokens == 0 for d in cl.decode_workers)
+    cl.runtime._pool.audit()
+
+
+def test_live_token_level_dedup():
+    """Token-level verification of dedup soundness on the live backend:
+    chain keys are equal exactly where the real token ids are equal."""
+    from repro.serving import (ClusterSpec, LiveCluster, SchedPolicy,
+                               make_live_sessions)
+    cfg = get_config("qwen2.5-14b").reduced()
+    cl = LiveCluster(cfg, spec=ClusterSpec(n_prefill=1, n_decode=1,
+                                           max_slots=4, max_len=256),
+                     policy=SchedPolicy(scheduler="ampd", **KV_KW),
+                     slo=SLOSpec(10.0, 10.0), seed=0, profile=False)
+    sessions = make_live_sessions(cfg, num_sessions=2, rounds=1,
+                                  prefill_len=PF, decode_len=4,
+                                  arrival_gap=100.0, shared_prefix=SHARED)
+    cl.run_trace(sessions)
+    pm = cl.runtime._pool
+    # the streams hold the actual token ids, equal over the shared head
+    for sid, s in enumerate(sessions):
+        assert pm.streams[sid][:PF] == [int(t) for t in s.prompt_tokens[0]]
+    c0, c1 = pm.chains[0], pm.chains[1]
+    n_shared = SHARED // KV_KW["kv_page_tokens"]
+    assert c0[:n_shared] == c1[:n_shared]       # same tokens, same pages
+    assert c0[n_shared] != c1[n_shared]         # unique tails diverge
+    # one physical copy of each shared page in the material store
+    hbm = cl.kv_store.tiers[("decode", 0)]["hbm"]
+    for key in c0[:n_shared]:
+        assert key in hbm
+    pool = pm.pool(("decode", 0))
+    assert len(pool.pages) == len(set(c0) | set(c1))
+    pm.audit()

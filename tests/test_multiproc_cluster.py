@@ -43,6 +43,8 @@ GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
                       "multiproc_decision_log.json")
 GOLDEN_OFFLOAD = os.path.join(os.path.dirname(__file__), "golden",
                               "multiproc_offload_decision_log.json")
+GOLDEN_KVPOOL = os.path.join(os.path.dirname(__file__), "golden",
+                             "multiproc_kvpool_decision_log.json")
 
 
 def _check_golden(path, got, regen, note):
@@ -344,6 +346,118 @@ def test_proc_transport_measures_kv_path(live_cfg):
         assert r.kv_transfer_ms > 0.0
         # increments went through prefill workers (remote path accounting)
         assert r.kv_bytes_moved > 0
+    finally:
+        cl.close()
+
+
+# ---------------------------------------------------------------------------
+# global KV pool: transport parity + golden + chaos (DESIGN.md §17)
+# ---------------------------------------------------------------------------
+
+#: shared-prefix variant of the parity trace: same protocol-determined
+#: arrival structure as PARITY (gaps exceed any engine duration), plus a
+#: 16-token shared head — two shared pages at ``kv_page_tokens=8`` — so the
+#: pool dedups across sessions, and a 4-page HBM tier small enough that the
+#: per-worker working set overflows into the host tier.  The resulting log
+#: carries ALL THREE §17 event kinds (``cache_hit`` / ``spill`` /
+#: ``promote``) at deterministic positions, which is what lets a golden
+#: file pin them.
+KVPOOL = dict(num_sessions=3, rounds=2, prefill_len=24, decode_len=3,
+              arrival_gap=100.0, shared_prefix=16)
+KVPOOL_CLUSTER = dict(n_prefill=2, n_decode=1, max_slots=4, max_len=128,
+                      scheduler="ampd", seed=0, profile=False,
+                      chunk_tokens=16, packed=False, kv_pool=True,
+                      kv_page_tokens=8, kv_hbm_pages=4, kv_host_pages=64)
+
+
+def _run_kvpool_trace(live_cfg, transport):
+    from repro.serving import make_live_sessions
+    cl = _cluster(live_cfg, transport, slo=SLOSpec(1e6, 1e6),
+                  **KVPOOL_CLUSTER)
+    cl.coordinator.record_decisions = True
+    try:
+        sessions = make_live_sessions(live_cfg, **KVPOOL)
+        result = cl.run_trace(sessions)
+        cl.runtime._pool.audit()         # ledger sound after every run
+        return dict(
+            log=list(cl.coordinator.decision_log),
+            tokens=[list(map(int, s.generated)) for s in sessions],
+            mem=[d.mem_tokens for d in cl.decode_workers],
+            finished=all(s.finish_time is not None for s in sessions),
+            result=result,
+        )
+    finally:
+        cl.close()
+
+
+@pytest.mark.parametrize("transport", ["proc", "tcp"])
+def test_kvpool_transport_parity_on_seeded_trace(live_cfg, transport):
+    """The §17 cache events join the transport-parity contract: pool
+    bookkeeping lives coordinator-side and mutates only at protocol points,
+    so ``cache_hit``/``spill``/``promote`` must land at IDENTICAL log
+    positions whether the KV bytes move in-process or over RPC — and the
+    measured hit/spill/promote byte counters must agree too, because the
+    material store slices the same staged trees either way."""
+    _require(transport)
+    a = _run_kvpool_trace(live_cfg, "inproc")
+    b = _run_kvpool_trace(live_cfg, transport)
+    assert a["finished"] and b["finished"]
+    assert a["log"] == b["log"]
+    kinds = {e[3] for e in a["log"]}
+    assert {"cache_hit", "spill", "promote"} <= kinds, kinds
+    assert a["tokens"] == b["tokens"]
+    assert a["mem"] == b["mem"] == [0] * KVPOOL_CLUSTER["n_decode"]
+    for field in ("cache_hits", "cache_hit_tokens", "kv_spills",
+                  "kv_promotes", "kv_hit_bytes", "kv_spill_bytes",
+                  "kv_promote_bytes"):
+        va, vb = getattr(a["result"], field), getattr(b["result"], field)
+        assert va == vb > 0, (field, va, vb)
+
+
+@pytest.mark.parametrize("transport", ["inproc", "proc", "tcp"])
+def test_kvpool_decision_log_matches_golden(live_cfg, regen_golden,
+                                            transport):
+    """Golden regression for the §17 events: hash-chain drift, LRU-victim
+    drift or plan-shape drift all move a ``cache_hit``/``spill``/``promote``
+    entry and fail here loudly, on every transport, instead of silently
+    invalidating the modeled-vs-live parity suite."""
+    _require(transport)
+    got = _run_kvpool_trace(live_cfg, transport)["log"]
+    _check_golden(GOLDEN_KVPOOL, got, regen_golden and transport == "inproc",
+                  "Golden decision log for the shared-prefix KV-pool parity "
+                  "trace (KVPOOL/KVPOOL_CLUSTER), including cache_hit/spill/"
+                  "promote events. Regenerate ONLY for an intentional "
+                  "schedule or pool-policy change: pytest -k golden "
+                  "--regen-golden (tests/golden/README.md).")
+
+
+def test_chaos_sigkill_decode_mid_spill_keeps_pool_sound(live_cfg):
+    """A real SIGKILL against a decode process while the 2-page HBM tier is
+    actively spilling: the dead worker's pool (and its material pages) must
+    drop with it, survivors' ledgers must still audit clean, rebound
+    sessions must replay through the recovery CachePlan path, and the §12
+    exactly-once/conservation invariants must hold end to end."""
+    from repro.serving import make_live_sessions
+    cl = _cluster(live_cfg, "proc", n_prefill=2, n_decode=2,
+                  scheduler="dynamo", chunk_tokens=16, kv_pool=True,
+                  kv_page_tokens=8, kv_hbm_pages=2, kv_host_pages=64)
+    audit = _audit(cl)
+    audit.kv_store = cl.kv_store         # keep the material path live
+    try:
+        sessions = make_live_sessions(live_cfg, num_sessions=3, rounds=2,
+                                      prefill_len=24, decode_len=3,
+                                      arrival_gap=1e-3, shared_prefix=16)
+        cl.fail_worker("decode", 0, at=0.05)
+        cl.run_trace(sessions)
+        w = cl.runtime.worker_by_id("decode", 0)
+        assert not w.alive
+        assert w.proc.returncode == -signal.SIGKILL
+        pool = cl.runtime._pool
+        pool.audit()                     # survivors' ledgers still sound
+        assert ("decode", 0) not in pool.pools
+        assert ("decode", 0) not in cl.kv_store.tiers
+        assert cl.coordinator.rebinds > 0
+        _check_invariants(cl, audit, sessions, decode_failure=True)
     finally:
         cl.close()
 

@@ -421,3 +421,52 @@ def test_backend_migrate_event_parity(live_cfg):
             == cl.coordinator.sched.migrations >= 1)
     assert all(s.finish_time is not None for s in live_sessions)
     assert all(d.mem_tokens == 0 for d in cl.decode_workers)
+
+
+def test_backend_cache_event_parity(live_cfg):
+    """Contract parity for the §17 event kinds — ``cache_hit``, ``spill``
+    and ``promote``: two serialized sessions share an 8-token (one-page)
+    prompt head with unique tails; a 2-page HBM tier forces demotions.
+    Page bookkeeping is pure chain-hash + LRU state, so both backends must
+    log identical events — the live side just also MOVES real KV bytes."""
+    from repro.serving import make_live_sessions
+    gap, rounds, pf, dc, shared = 100.0, 2, 16, 4, 8
+    kv = dict(kv_pool=True, kv_page_tokens=8, kv_hbm_pages=2,
+              kv_host_pages=8, kv_cache_aware=True)
+
+    cl = _live_cluster(live_cfg, scheduler="dynamo", **kv)
+    cl.coordinator.record_decisions = True
+    live_sessions = make_live_sessions(live_cfg, num_sessions=2,
+                                       rounds=rounds, prefill_len=pf,
+                                       decode_len=dc, arrival_gap=gap,
+                                       shared_prefix=shared)
+    cl.run_trace(live_sessions)
+
+    model_sessions = []
+    for i in range(2):
+        s = Session(session_id=i, arrival_time=i * gap,
+                    rounds=[RoundSpec(prefill_len=pf, decode_len=dc,
+                                      env_delay=0.0) for _ in range(rounds)])
+        s.prefix_group = (0, shared)
+        model_sessions.append(s)
+    dep = Deployment((WorkerGroup(1, 1),), (WorkerGroup(1, 1),))
+    sim = Simulation(PerfModel(live_cfg), dep, model_sessions,
+                     SLOSpec(10.0, 10.0),
+                     SimConfig(scheduler="dynamo", seed=0,
+                               routing=RoutingConfig(ttft_thres=10.0,
+                                                     itl_thres=10.0), **kv))
+    sim.coordinator.record_decisions = True
+    sim.run()
+
+    kinds = {k[3] for k in sim.coordinator.decision_log}
+    assert {"cache_hit", "spill", "promote"} <= kinds, kinds
+    assert sim.coordinator.decision_log == cl.coordinator.decision_log
+    for f in ("cache_hits", "cache_hit_tokens", "kv_spills", "kv_promotes"):
+        assert (getattr(sim.coordinator.sched, f)
+                == getattr(cl.coordinator.sched, f) > 0), f
+    # the live path charged measured (not modeled) bytes for its hits
+    assert cl.kv_store is not None and cl.kv_store.hit_bytes > 0
+    assert all(s.finish_time is not None for s in live_sessions)
+    assert all(d.mem_tokens == 0 for d in cl.decode_workers)
+    sim.runtime._pool.audit()
+    cl.runtime._pool.audit()
