@@ -150,6 +150,30 @@ def smoke(json_path=None) -> int:
            f"slo private={priv['slo']} pool={pool['slo']} "
            f"hits={pool['cache_hits']}")
 
+    _section("smoke: Fig. 16 elastic autoscaling over the plan lattice")
+    from benchmarks import fig16_autoscale
+    t0 = time.time()
+    rows = fig16_autoscale.run(num_sessions=SMOKE["num_sessions"],
+                               seeds=SMOKE["seeds"])
+    by = {r["arm"]: r for r in rows}
+    static, auto = by["static-plan"], by["autoscale"]
+    for r in rows:
+        if r["completed"] != r["arrived"]:
+            failures.append(
+                f"fig16 {r['arm']}: {r['completed']}/{r['arrived']} "
+                "sessions completed (work lost across replan)")
+    if auto["replans"] < 1:
+        failures.append("fig16 autoscale arm survived a kill + resize "
+                        "without recording a replan")
+    if auto["slo"] < static["slo"] - 0.05:
+        failures.append(
+            f"fig16 autoscale lost to the static plan "
+            f"({auto['slo']:.3f} < {static['slo']:.3f} - 0.05)")
+    record("fig16_autoscale", t0, rows,
+           f"slo static={static['slo']} "
+           f"scratch={by['replan-scratch']['slo']} auto={auto['slo']} "
+           f"replans={auto['replans']}")
+
     _section("smoke: Fig. 12 multi-process transport (measured KV path)")
     from benchmarks import fig12_transport
     t0 = time.time()
@@ -363,6 +387,17 @@ def main() -> None:
            f"slo: private={by['private']['slo']} "
            f"blind={by['pool-blind']['slo']} pool={by['kv-pool']['slo']} "
            f"hit_tokens={by['kv-pool']['hit_tokens']}")
+
+    _section("Fig. 16: elastic autoscaling over the plan lattice (beyond-paper)")
+    from benchmarks import fig16_autoscale
+    t0 = time.time()
+    rows = fig16_autoscale.main()
+    by = {r["arm"]: r for r in rows}
+    record("fig16_autoscale", t0,
+           f"slo: static={by['static-plan']['slo']} "
+           f"scratch={by['replan-scratch']['slo']} "
+           f"auto={by['autoscale']['slo']} "
+           f"replans={by['autoscale']['replans']}")
 
     _section("Fig. 12: multi-process transport, measured KV path (beyond-paper)")
     from benchmarks import fig12_transport

@@ -9,6 +9,8 @@ from repro.core.perf_model import Hardware, PerfModel  # noqa: F401
 from repro.core.planner import (  # noqa: F401
     DEFAULT_CHUNK_GRID,
     Deployment,
+    LatticeCell,
+    PlanLattice,
     PlanningError,
     PlanResult,
     WorkerGroup,

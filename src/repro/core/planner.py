@@ -310,3 +310,176 @@ def plan(
     ranked.sort(key=lambda t: (-t[1], t[2]))
     return PlanResult(ilp=ilp, ranked=ranked, tau_pre=tau_pre,
                       tau_dec=tau_dec, chunk_by_degree=chunk_by_degree)
+
+
+# ---------------------------------------------------------------------------
+# Plan lattice: precomputed fallback deployments (DESIGN.md §18)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LatticeCell:
+    """One precomputed deployment for a (fleet_size, load_bucket) point."""
+    deployment: Deployment
+    fleet_size: int                # workers (prefill + decode), uniform tp
+    bucket: int                    # index into PlanLattice.bucket_rates
+    slo_attainment: float = 0.0    # simulated score at enumeration time
+    p95_e2e: float = 0.0
+    #: attainment of EVERY candidate split at this cell's load, keyed by
+    #: prefill-worker count — enumeration simulates them all anyway, and
+    #: keeping them lets the drift detector check whether leaving the
+    #: current split is actually worth a disruptive role swap
+    scores: Dict[int, float] = field(default_factory=dict)
+
+
+class PlanLattice:
+    """Precomputed deployments for nearby fleet sizes and load levels.
+
+    Re-planning after a worker death, an explicit resize, or sustained load
+    drift is a *table lookup* rather than a search (Oobleck's pipeline-
+    template idea transplanted to disaggregated serving): ahead of time we
+    enumerate the best prefill/decode split (and decode chunk size) for
+    every fleet size in ``N - span .. N + span`` at every arrival-rate
+    bucket, and the :class:`~repro.runtime.autoscaler.FleetController`
+    hot-swaps to the neighboring cell at runtime without draining.
+
+    Cells are keyed by ``(fleet_size, bucket)``; lookups clamp to the
+    nearest enumerated fleet size and a valid bucket, so the controller
+    always gets *a* plan even past the lattice edge.
+    """
+
+    def __init__(self, cells: Dict[Tuple[int, int], LatticeCell],
+                 bucket_rates: Sequence[float], tp: int = 1):
+        if not cells:
+            raise PlanningError("empty plan lattice")
+        self.cells = dict(cells)
+        self.bucket_rates = tuple(bucket_rates)
+        self.tp = tp
+        self._sizes = sorted({m for m, _ in self.cells})
+
+    def fleet_sizes(self) -> List[int]:
+        return list(self._sizes)
+
+    def bucket(self, rate: float) -> int:
+        """Nearest bucket-center index for an estimated arrival rate."""
+        return min(range(len(self.bucket_rates)),
+                   key=lambda i: (abs(self.bucket_rates[i] - rate), i))
+
+    def lookup(self, fleet_size: int, bucket: int) -> LatticeCell:
+        m = min(self._sizes, key=lambda s: (abs(s - fleet_size), s))
+        b = max(0, min(bucket, len(self.bucket_rates) - 1))
+        return self.cells[(m, b)]
+
+    # -- construction ------------------------------------------------------
+    @staticmethod
+    def split_candidates(fleet_size: int, tp: int,
+                         chunk_grid: Sequence[int] = (0,),
+                         ) -> List[Deployment]:
+        """Every x-prefill / (fleet_size - x)-decode split at uniform tp,
+        crossed with the decode chunk grid (0 = unchunked)."""
+        out = []
+        for x in range(1, fleet_size):
+            for c in chunk_grid:
+                out.append(Deployment((WorkerGroup(tp, x),),
+                                      (WorkerGroup(tp, fleet_size - x, c),)))
+        return out
+
+    @classmethod
+    def enumerate_cell(cls, perf, make_sessions, fleet_size: int, bucket: int,
+                       slo, *, tp: int = 1, scheduler: str = "ampd",
+                       chunk_grid: Sequence[int] = (0,), seed: int = 0,
+                       simulate=None) -> LatticeCell:
+        """Best split for one lattice point by full-simulation attainment
+        (ties broken by p95 e2e, then enumeration order — deterministic)."""
+        from repro.core.simulator import simulate_deployment  # lazy (cycle)
+        simulate = simulate or simulate_deployment
+        if fleet_size < 2:
+            raise PlanningError(
+                f"fleet_size={fleet_size}: need >= 1 prefill + 1 decode")
+        best = None
+        scores: Dict[int, float] = {}
+        for dep in cls.split_candidates(fleet_size, tp, chunk_grid):
+            c = dep.decode[0].chunk_tokens
+            r = simulate(perf, dep, make_sessions(), slo,
+                         scheduler=scheduler, seed=seed, chunk_tokens=c)
+            score = (-r.slo_attainment, r.p95_e2e)
+            x = sum(g.count for g in dep.prefill)
+            scores[x] = max(scores.get(x, 0.0), r.slo_attainment)
+            if best is None or score < best[0]:
+                best = (score, dep, r)
+        _, dep, r = best
+        return LatticeCell(dep, fleet_size, bucket,
+                           r.slo_attainment, r.p95_e2e, scores)
+
+    @classmethod
+    def build(cls, perf, make_trace, N: int, slo, *, span: int = 1,
+              bucket_rates: Sequence[float] = (1.0,), tp: int = 1,
+              scheduler: str = "ampd", chunk_grid: Sequence[int] = (0,),
+              seed: int = 0, smooth_tol: float = 0.02,
+              simulate=None) -> "PlanLattice":
+        """Enumerate the full lattice around a fleet of ``N`` workers.
+
+        ``make_trace(rate)`` must return a fresh session list whose Poisson
+        arrivals run at ``rate`` — each bucket is planned against traffic at
+        its own bucket-center rate, which is what makes drift swaps more
+        than a no-op.
+
+        ``smooth_tol`` is the Oobleck-style reconfiguration-distance pass:
+        enumerated optima at neighboring lattice points are often near-ties
+        (attainment differences within simulation noise), and a lattice
+        that zigzags between prefill-heavy and decode-heavy splits makes
+        every hot-swap a maximal role churn.  Among the splits within
+        ``smooth_tol`` of a cell's best attainment, the pass prefers the
+        one closest to the already-chosen neighboring cells (smaller fleet
+        size, then lower bucket), so adjacent cells differ by the fewest
+        possible role conversions.  Set to 0 for raw per-cell optima."""
+        raw: Dict[Tuple[int, int], LatticeCell] = {}
+        for m in range(max(2, N - span), N + span + 1):
+            for b, rate in enumerate(bucket_rates):
+                raw[(m, b)] = cls.enumerate_cell(
+                    perf, lambda rate=rate: make_trace(rate), m, b, slo,
+                    tp=tp, scheduler=scheduler, chunk_grid=chunk_grid,
+                    seed=seed, simulate=simulate)
+        cells: Dict[Tuple[int, int], LatticeCell] = {}
+        for (m, b) in sorted(raw):
+            cell = raw[(m, b)]
+            best = cell.slo_attainment
+            cands = [x for x, a in cell.scores.items()
+                     if best - a <= smooth_tol]
+            refs = [sum(g.count for g in cells[k].deployment.prefill)
+                    for k in ((m - 1, b), (m, b - 1)) if k in cells]
+            chosen = sum(g.count for g in cell.deployment.prefill)
+            if refs and cands:
+                chosen = min(cands, key=lambda x: (
+                    sum(abs(x - r) for r in refs),
+                    -cell.scores[x], x))
+            if chosen != sum(g.count for g in cell.deployment.prefill):
+                chunk = cell.deployment.decode[0].chunk_tokens
+                dep = Deployment((WorkerGroup(tp, chosen),),
+                                 (WorkerGroup(tp, m - chosen, chunk),))
+                cell = LatticeCell(dep, m, b, cell.scores[chosen],
+                                   cell.p95_e2e, cell.scores)
+            cells[(m, b)] = cell
+        return cls(cells, bucket_rates, tp)
+
+    @classmethod
+    def ratio(cls, template: Deployment, *, span: int = 1,
+              bucket_rates: Sequence[float] = (1.0,)) -> "PlanLattice":
+        """Simulation-free structural lattice: preserve the template's
+        prefill:decode ratio (and decode chunk size) at every nearby fleet
+        size, same cell for every bucket.  The default when autoscaling is
+        enabled without an enumerated lattice — role reassignment still
+        works, only the per-cell split optimization is skipped."""
+        xs = sum(g.count for g in template.prefill)
+        ys = sum(g.count for g in template.decode)
+        groups = tuple(template.prefill) + tuple(template.decode)
+        tp = groups[0].tp if groups else 1
+        chunk = template.decode[0].chunk_tokens if template.decode else 0
+        n = max(2, xs + ys)
+        cells: Dict[Tuple[int, int], LatticeCell] = {}
+        for m in range(max(2, n - span), n + span + 1):
+            x = min(m - 1, max(1, round(m * xs / n)))
+            dep = Deployment((WorkerGroup(tp, x),),
+                             (WorkerGroup(tp, m - x, chunk),))
+            for b in range(len(bucket_rates)):
+                cells[(m, b)] = LatticeCell(dep, m, b)
+        return cls(cells, bucket_rates, tp)

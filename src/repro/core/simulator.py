@@ -107,6 +107,13 @@ class SimConfig:
     kv_hbm_pages: int = 64        # per-worker device tier capacity
     kv_host_pages: int = 64       # per-worker host spill tier capacity
     kv_cache_aware: bool = True   # False = pool runs but pricing is blind
+    # -- elastic fleet autoscaling (DESIGN.md §18) ------------------------
+    autoscale: bool = False       # FleetController over a plan lattice
+    autoscale_span: int = 1       # lattice reach: N - span .. N + span
+    autoscale_buckets: Tuple[float, ...] = ()  # arrival-rate bucket centers
+    autoscale_window_s: float = 30.0   # arrival-rate estimator window
+    autoscale_dwell_s: float = 5.0     # min time between drift swaps
+    autoscale_swap_delay_s: float = 0.0  # >0 models re-plan-from-scratch
     seed: int = 0
     max_time: float = 1.0e7
 
@@ -133,6 +140,8 @@ class SimResult:
     cache_hit_tokens: int = 0
     kv_spills: int = 0
     kv_promotes: int = 0
+    replans: int = 0              # §18 counters (0 when autoscale disabled)
+    role_swaps: int = 0
 
 
 class Simulation:
@@ -143,7 +152,8 @@ class Simulation:
                  sessions: List[Session], slo: SLOSpec,
                  cfg: Optional[SimConfig] = None,
                  failures: Optional[List[Tuple[float, str, int]]] = None,
-                 straggler: Optional[Dict[Tuple[str, int], float]] = None):
+                 straggler: Optional[Dict[Tuple[str, int], float]] = None,
+                 lattice=None):
         self.perf = perf
         self.slo = slo
         self.cfg = cfg or SimConfig()
@@ -215,6 +225,26 @@ class Simulation:
             ModeledBackend(perf, kv_overlap=self.cfg.kv_overlap),
             self.coordinator, self.prefill_workers, self.decode_workers,
             chunk_tokens=self.cfg.chunk_tokens, max_time=self.cfg.max_time)
+        self.fleet = None
+        if self.cfg.autoscale and not colocated:
+            from repro.core.planner import PlanLattice
+            from repro.runtime.autoscaler import AutoscaleConfig, \
+                FleetController
+            if lattice is None:   # structural fallback: keep the template's
+                lattice = PlanLattice.ratio(   # prefill:decode ratio
+                    deployment, span=self.cfg.autoscale_span,
+                    bucket_rates=self.cfg.autoscale_buckets or (1.0,))
+            self._fleet_tp = lattice.tp
+            self.fleet = self.runtime.fleet = FleetController(
+                lattice,
+                AutoscaleConfig(
+                    span=self.cfg.autoscale_span,
+                    bucket_rates=tuple(lattice.bucket_rates),
+                    window_s=self.cfg.autoscale_window_s,
+                    dwell_s=self.cfg.autoscale_dwell_s,
+                    swap_delay_s=self.cfg.autoscale_swap_delay_s),
+                runtime=self.runtime, coordinator=self.coordinator,
+                spawn=self._fleet_spawn)
         for s in sessions:
             self.runtime.submit(s)
         for (t, kind, idx) in failures or []:
@@ -248,9 +278,28 @@ class Simulation:
 
     def add_worker(self, kind: str, tp: int) -> SimWorker:
         ws = self.prefill_workers if kind == "prefill" else self.decode_workers
-        w = self._new_worker(len(ws), tp, kind)
+        # max-id+1, NOT len(ws): after a kill-then-scale-up churn len() can
+        # collide with an existing stable id — and the live cluster's
+        # add_*_worker already allocates max+1, so len() would silently
+        # diverge the modeled/live decision logs (ISSUE 9 satellite)
+        next_id = max((w.idx for w in ws), default=-1) + 1
+        w = self._new_worker(next_id, tp, kind)
         self.runtime.register_worker(w, kind)
         return w
+
+    def _fleet_spawn(self, kind: str, chunk_tokens: int = 0) -> SimWorker:
+        """FleetController scale-up hook (DESIGN.md §18)."""
+        w = self.add_worker(kind, self._fleet_tp)
+        if kind == "decode" and chunk_tokens:
+            w.chunk_tokens = chunk_tokens
+        return w
+
+    def schedule_scale_up(self, at: float) -> None:
+        """Explicit elastic resize through the FleetController: at ``at``,
+        adopt the (fleet+1) lattice cell and spawn the missing worker."""
+        assert self.fleet is not None, "requires cfg.autoscale"
+        self.runtime.events.at(
+            at, lambda: self.fleet.scale_up(self.runtime.now), "scale-up")
 
     # -- run & results ----------------------------------------------------
     def run(self) -> SimResult:
@@ -290,6 +339,8 @@ class Simulation:
             cache_hit_tokens=self.coordinator.sched.cache_hit_tokens,
             kv_spills=self.coordinator.sched.kv_spills,
             kv_promotes=self.coordinator.sched.kv_promotes,
+            replans=self.coordinator.sched.replans,
+            role_swaps=self.coordinator.sched.role_swaps,
         )
 
 

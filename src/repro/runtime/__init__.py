@@ -16,6 +16,11 @@ from repro.runtime.backend import (  # noqa: F401
     LiveBackend,
     ModeledBackend,
 )
+from repro.runtime.autoscaler import (  # noqa: F401
+    ArrivalRateEstimator,
+    AutoscaleConfig,
+    FleetController,
+)
 from repro.runtime.chunk_tuner import ChunkTuner  # noqa: F401
 from repro.runtime.coordinator import (  # noqa: F401
     ADAPTIVE,

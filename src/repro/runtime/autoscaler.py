@@ -1,0 +1,250 @@
+"""Elastic fleet autoscaling over a precomputed plan lattice (DESIGN.md §18).
+
+The planner's output is one optimal (x prefill, y decode, chunk) deployment,
+but multi-round fleets drift: workers die mid-wave, operators resize, and
+diurnal load moves the optimal split.  Instead of re-searching on every
+change (slow) or keeping the stale plan (lossy), the
+:class:`~repro.core.planner.PlanLattice` precomputes the best deployment for
+every nearby (fleet_size, load_bucket) point, and the
+:class:`FleetController` here hot-swaps to the neighboring cell — without
+draining — on three triggers:
+
+  * **worker death** — the runtime's failure path calls ``on_death`` after
+    marking the worker dead but *before* rebinding its victims, so the swap
+    can spawn a replacement (or convert a surplus worker's role) first and
+    the existing recovery machinery re-routes parked chunks onto the new
+    fleet;
+  * **explicit scale-up** — ``scale_up`` grows the fleet by one worker of
+    whichever kind the (fleet+1) cell is short of;
+  * **sustained load drift** — a windowed arrival-rate estimator (driven by
+    logical arrival times, so modeled and live runs see identical samples)
+    re-buckets the load; a dwell time debounces bucket flapping.
+
+Role reassignment is by stable id: surplus workers are *retired in place*
+(``ServingRuntime.retire_worker`` — alive=False, queued chunks re-routed,
+decode residents rebound) and deficits are filled by appending fresh
+workers at max-id+1.  Worker lists are never pruned, which keeps
+``RouteDecision.worker_idx`` (a list position) equal to the stable id and
+preserves every existing decision-log golden.
+
+Every swap emits one ``replan`` decision-log event
+(``(-1, fleet_size, bucket, "replan", trigger_idx)``) through
+``Coordinator.note_replan`` — part of the modeled/live parity contract.
+
+``swap_delay_s`` models a *naive re-plan-from-scratch* baseline: the swap
+is deferred by the time an online planner search would take, during which
+the fleet runs degraded.  The lattice arm uses 0 (a table lookup is free);
+``benchmarks/fig16_autoscale.py`` compares the two at equal resources.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class AutoscaleConfig:
+    """Knobs for the FleetController (mirrored on SimConfig/SchedPolicy)."""
+    span: int = 1                 # lattice reach: N - span .. N + span
+    bucket_rates: Tuple[float, ...] = ()   # arrival-rate bucket centers
+    window_s: float = 30.0        # arrival-rate estimator window
+    dwell_s: float = 5.0          # min time between drift-triggered swaps
+    min_samples: int = 4          # arrivals in window before trusting rate
+    swap_delay_s: float = 0.0     # 0 = lattice lookup; >0 models a search
+    #: minimum precomputed-attainment gain before a drift swap converges
+    #: roles — re-bucketing is free, but retiring a decode worker rebinds
+    #: its residents, so the lattice must predict the move pays for itself
+    drift_margin: float = 0.02
+
+
+class ArrivalRateEstimator:
+    """Windowed arrival-rate estimate from logical arrival timestamps.
+
+    Deterministic across backends: both the modeled and the live runtime
+    feed it the same protocol-determined arrival times, so drift-triggered
+    swaps happen at identical logical points in parity runs.
+    """
+
+    def __init__(self, window_s: float):
+        self.window_s = window_s
+        self._times: deque = deque()
+
+    def add(self, t: float) -> None:
+        self._times.append(t)
+        self._evict(t)
+
+    def _evict(self, now: float) -> None:
+        while self._times and self._times[0] < now - self.window_s:
+            self._times.popleft()
+
+    def count(self, now: float) -> int:
+        self._evict(now)
+        return len(self._times)
+
+    def rate(self, now: float) -> float:
+        return self.count(now) / self.window_s if self.window_s > 0 else 0.0
+
+
+class FleetController:
+    """Hot-swaps the fleet to precomputed lattice cells (DESIGN.md §18).
+
+    ``spawn(kind, chunk_tokens)`` is the owning facade's scale-up hook
+    (``Simulation.add_worker`` / ``LiveCluster.add_*_worker``) — it must
+    register the new worker with the runtime at a fresh max-id+1 stable id
+    and return it.
+    """
+
+    def __init__(self, lattice, cfg: AutoscaleConfig, *, runtime,
+                 coordinator, spawn, apply_chunk: bool = True):
+        self.lattice = lattice
+        self.cfg = cfg
+        self.runtime = runtime
+        self.coordinator = coordinator
+        self.spawn = spawn
+        self.apply_chunk = apply_chunk
+        self.estimator = ArrivalRateEstimator(cfg.window_s)
+        self.bucket = 0              # start at the lowest-rate bucket
+        self._last_swap = -float("inf")
+        self._swapping = False       # re-entrancy guard: retires fire
+        self._pending = False        # _on_failure -> on_death recursively
+
+    # -- fleet state -------------------------------------------------------
+    def _counts(self) -> Tuple[int, int]:
+        x = sum(1 for w in self.runtime.prefill_workers if w.alive)
+        y = sum(1 for w in self.runtime.decode_workers if w.alive)
+        return x, y
+
+    def fleet_size(self) -> int:
+        x, y = self._counts()
+        return x + y
+
+    # -- triggers ----------------------------------------------------------
+    def on_arrival(self, now: float) -> None:
+        """Feed the rate estimator; swap on sustained bucket drift."""
+        self.estimator.add(now)
+        if len(self.lattice.bucket_rates) < 2 or self._swapping:
+            return
+        if self.estimator.count(now) < self.cfg.min_samples:
+            return
+        b = self.lattice.bucket(self.estimator.rate(now))
+        if b == self.bucket or now - self._last_swap < self.cfg.dwell_s:
+            return
+        self.bucket = b   # re-bucketing is free; converging roles is not
+        self._swap(now, trigger=-1, log_always=False)
+
+    def on_death(self, kind: str, idx: int, now: float) -> None:
+        """Runtime hook: fires inside ``_on_failure`` after the worker is
+        marked dead but before victim rebinds, so replacements spawned here
+        absorb the recovery traffic."""
+        if self._swapping:
+            return
+        self._swap(now, trigger=idx, log_always=True)
+
+    def scale_up(self, now: float):
+        """Explicit elastic resize: consult the (fleet_size + 1) cell and
+        spawn one worker of whichever kind it predicts pays more.  Returns
+        the spawned worker (None when the swap is deferred by
+        ``swap_delay_s``)."""
+        return self._swap(now, trigger=None, log_always=True, grow=True)
+
+    # -- swap protocol -----------------------------------------------------
+    def _swap(self, now: float, trigger: Optional[int], log_always: bool,
+              grow: bool = False):
+        if self.cfg.swap_delay_s > 0:
+            # naive re-plan-from-scratch baseline: the plan search blocks
+            # for swap_delay_s; coalesce triggers arriving in the window
+            # and re-resolve the target at apply time (the fleet may have
+            # changed again while "searching").
+            if self._pending:
+                return None
+            self._pending = True
+
+            def apply_late():
+                self._pending = False
+                self._apply(self.runtime.now, trigger, log_always,
+                            grow=grow)
+            self.runtime.events.after(self.cfg.swap_delay_s, apply_late,
+                                      "replan-search")
+            return None
+        return self._apply(now, trigger, log_always, grow=grow)
+
+    def _apply(self, now: float, trigger: Optional[int], log_always: bool,
+               grow: bool = False):
+        x, y = self._counts()
+        cell = self.lattice.lookup(x + y + (1 if grow else 0), self.bucket)
+        dep = cell.deployment
+        chunk = dep.decode[0].chunk_tokens if dep.decode else 0
+        if grow:
+            tx, ty = self._grow_target(cell, x, y)
+        else:
+            tx = sum(g.count for g in dep.prefill)
+            ty = sum(g.count for g in dep.decode)
+            # convergence gate: the cell's own score table predicts what
+            # the CURRENT split attains at this (fleet, load) point — when
+            # staying put is within drift_margin of the cell optimum, a
+            # disruptive role churn cannot pay for itself; adopt the plan
+            # bookkeeping but keep the roles
+            cur = cell.scores.get(x) if x + y == cell.fleet_size else None
+            if (cur is not None and (tx, ty) != (x, y)
+                    and cell.slo_attainment - cur < self.cfg.drift_margin):
+                tx, ty = x, y
+        swaps = 0
+        spawned = None
+        self._swapping = True
+        try:
+            # spawn deficits FIRST so retired workers' chunks and decode
+            # victims always find a live target mid-swap (spawn-then-retire
+            # briefly overshoots the fleet size; retiring first can strand
+            # rebinds when the last worker of a kind turns over).
+            while x < tx:
+                spawned = self.spawn("prefill", 0)
+                x += 1
+                swaps += 1
+            while y < ty:
+                spawned = self.spawn("decode", chunk)
+                y += 1
+                swaps += 1
+            while x > tx and x > 1:
+                self._retire("prefill")
+                x -= 1
+                swaps += 1
+            while y > ty and y > 1:
+                self._retire("decode")
+                y -= 1
+                swaps += 1
+            if self.apply_chunk and chunk:
+                for d in self.runtime.decode_workers:
+                    if d.alive and d.chunk_tokens != chunk:
+                        d.chunk_tokens = chunk
+                self.runtime._chunked = True
+            if log_always or swaps:
+                if trigger is None and spawned is not None:
+                    trigger = spawned.idx
+                self.coordinator.note_replan(x + y, self.bucket,
+                                             -1 if trigger is None
+                                             else trigger, swaps)
+                self._last_swap = now
+                self.runtime._steal_scan()   # drain backlog onto new roles
+        finally:
+            self._swapping = False
+        return spawned
+
+    def _grow_target(self, cell, x: int, y: int) -> Tuple[int, int]:
+        """Explicit resize adds exactly ONE worker — pick its kind from
+        the (fleet+1) cell's score table (fall back to the cell's own
+        split direction when the lattice carries no scores)."""
+        if cell.scores and x + y + 1 == cell.fleet_size:
+            a_pre = cell.scores.get(x + 1, -1.0)
+            a_dec = cell.scores.get(x, -1.0)
+            return (x + 1, y) if a_pre >= a_dec else (x, y + 1)
+        tx = sum(g.count for g in cell.deployment.prefill)
+        return (x + 1, y) if tx > x else (x, y + 1)
+
+    def _retire(self, kind: str) -> None:
+        """Deterministic role retirement: highest alive stable id of the
+        surplus kind (the youngest worker — fewest resident sessions)."""
+        ws = (self.runtime.prefill_workers if kind == "prefill"
+              else self.runtime.decode_workers)
+        w = max((w for w in ws if w.alive), key=lambda w: w.idx)
+        self.runtime.retire_worker(kind, w.idx)

@@ -156,8 +156,11 @@ class Coordinator:
         self.sched = SchedCounters()
         #: (session_id, round_idx, incr_offset, kind, worker_idx) per event,
         #: kind ∈ local | remote | steal | preempt | migrate | cache_hit |
-        #: spill | promote — the backend-parity contract surface
+        #: spill | promote | replan — the backend-parity contract surface
         #: (tests/test_runtime_unified, tests/test_multiproc_cluster).
+        #: ``replan`` entries reuse the first three slots as
+        #: (-1, fleet_size, load_bucket) since they are fleet-level, not
+        #: per-chunk, decisions (DESIGN.md §18).
         self.decision_log: List[Tuple[int, int, int, str, Optional[int]]] = []
 
     # -- binding (§3 step 1) ----------------------------------------------
@@ -213,6 +216,22 @@ class Coordinator:
         if self.record_decisions:
             self.decision_log.append((task.session_id, task.round_idx,
                                       task.incr_offset, kind, worker_idx))
+
+    def note_replan(self, fleet_size: int, bucket: int,
+                    worker_idx: Optional[int], swaps: int = 0) -> None:
+        """Account a FleetController plan swap (DESIGN.md §18).
+
+        ``worker_idx`` is the stable id of the worker that triggered the
+        swap (the dead worker on a death, the spawned worker on an explicit
+        scale-up, -1 for load drift); ``swaps`` counts workers retired or
+        spawned while converging to the adopted lattice cell.  Logged under
+        session_id -1 so replay tooling can tell fleet-level events from
+        per-chunk routing without a schema change."""
+        self.sched.replans += 1
+        self.sched.role_swaps += swaps
+        if self.record_decisions:
+            self.decision_log.append((-1, fleet_size, bucket, "replan",
+                                      worker_idx))
 
     def route(self, task: PrefillTask, now: float, decode_worker,
               prefill_workers: List) -> RouteDecision:

@@ -36,6 +36,9 @@ class SchedCounters:
     cache_hit_tokens: int = 0  # sum of resident prefix tokens over those
     kv_spills: int = 0         # pages demoted HBM -> host tier
     kv_promotes: int = 0       # chunks whose plan promoted host-tier pages
+    # -- elastic fleet autoscaling (DESIGN.md §18) ----------------------
+    replans: int = 0           # lattice-cell adoptions (death/resize/drift)
+    role_swaps: int = 0        # workers retired or spawned across replans
 
 
 def p95(vals: Sequence[float]) -> float:

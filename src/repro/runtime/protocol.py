@@ -81,6 +81,10 @@ class ServingRuntime:
         self.chunk_tokens = chunk_tokens or (
             DEFAULT_CHUNK_TOKENS if coordinator.scheduler == "ampd-chunked"
             else 0)
+        #: optional FleetController (DESIGN.md §18) — set by the owning
+        #: facade when autoscaling is enabled
+        self.fleet = None
+        self._spawn_seq = 0         # monotonic worker-incarnation counter
         for w in list(prefill_workers) + list(decode_workers):
             self._init_worker(w)
         self._chunked = bool(
@@ -119,6 +123,11 @@ class ServingRuntime:
             w.tasks_done = 0
         if not hasattr(w, "chunk_tokens"):
             w.chunk_tokens = 0          # planner-chosen per-worker size
+        # incarnation stamp: a scheduled failure is aimed at the worker
+        # that held the id at schedule time, never at a later same-id
+        # replacement (generation guard, DESIGN.md §18)
+        self._spawn_seq += 1
+        w._rt_spawn_gen = self._spawn_seq
 
     def register_worker(self, w, kind: str):
         """Elastic scale-up: add a worker mid-run; it starts pulling work on
@@ -144,13 +153,28 @@ class ServingRuntime:
                        lambda s=session: self._on_arrival(s), "arrival")
 
     def schedule_failure(self, kind: str, idx: int, at: float) -> None:
-        self.events.at(at, lambda: self._on_failure(kind, idx), "failure")
+        # capture the current incarnation of the id: a worker spawned
+        # later (even at the same logical time) under the same stable id
+        # must not inherit this scheduled death
+        w = self.worker_by_id(kind, idx)
+        gen = None if w is None else w._rt_spawn_gen
+        self.events.at(at, lambda: self._on_failure(kind, idx, spawn_gen=gen),
+                       "failure")
+
+    def retire_worker(self, kind: str, idx: int) -> None:
+        """Graceful decommission by stable id (fleet swaps, DESIGN.md §18):
+        same recovery machinery as a failure — queued chunks re-route,
+        decode residents rebind — but announced by the FleetController
+        rather than discovered, so no replan trigger re-fires."""
+        self._on_failure(kind, idx)
 
     def run(self) -> float:
         return self.events.run()
 
     # -- arrival & binding (§3 step 1) -------------------------------------
     def _on_arrival(self, s) -> None:
+        if self.fleet is not None:
+            self.fleet.on_arrival(self.now)   # rate estimator / drift swap
         if not any(d.alive for d in self.decode_workers):
             s.state = "dropped"
             return
@@ -613,15 +637,23 @@ class ServingRuntime:
         self._dispatch(s, task)
 
     # -- failures / recovery (§6 / §13) -------------------------------------
-    def _on_failure(self, kind: str, idx: int, inflight=None) -> None:
+    def _on_failure(self, kind: str, idx: int, inflight=None,
+                    spawn_gen=None) -> None:
         """``inflight``: an optional (session, task) pair that was mid-RPC
         on the dying decode worker — it must be rebound WITH its task so
         the un-joined suffix of the round's increment is re-prefilled (the
         victim scan alone cannot know about it and would replay only the
-        transcript)."""
+        transcript).
+
+        ``spawn_gen``: incarnation stamp captured by ``schedule_failure``.
+        When set, the failure only applies to that incarnation — a
+        replacement spawned under the same stable id (even at the same
+        logical time) is spared."""
         w = self.worker_by_id(kind, idx)     # stable id, never list position
         if w is None or not w.alive:
             return
+        if spawn_gen is not None and w._rt_spawn_gen != spawn_gen:
+            return                           # same id, later incarnation
         w.alive = False
         # real failure injection under the proc transport: the worker
         # process is SIGKILL'd — no flush, no goodbye (DESIGN.md §13).
@@ -632,6 +664,11 @@ class ServingRuntime:
         w.prefill_queue.clear()
         if self._pool is not None:
             self._pool.drop_worker((kind, idx))   # its pages die with it
+        if self.fleet is not None:
+            # swap to the (fleet-1) lattice cell BEFORE rebinding victims:
+            # a replacement spawned here absorbs the recovery traffic (and
+            # keeps the last-decode-worker death from dropping everything)
+            self.fleet.on_death(kind, idx, self.now)
         if kind == "decode":
             victims = list(self.backend.attached(w))
             self.backend.on_decode_failure(w)

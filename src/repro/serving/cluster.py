@@ -113,6 +113,8 @@ class LiveResult:
     kv_hit_bytes: int = 0         # MEASURED bytes served from pooled pages
     kv_spill_bytes: int = 0       # measured hbm->host demotion bytes
     kv_promote_bytes: int = 0     # measured host->hbm read-back bytes
+    replans: int = 0              # §18 counters (0 when autoscale disabled)
+    role_swaps: int = 0
 
 
 def _shim_legacy_kwargs(spec, transport, policy, legacy):
@@ -170,7 +172,7 @@ class LiveCluster:
                  transport=None, policy: Optional[SchedPolicy] = None,
                  slo: Optional[SLOSpec] = None, seed: int = 0,
                  model_kv_time: bool = False, profile: bool = True,
-                 **legacy):
+                 lattice=None, **legacy):
         spec, tcfg, policy = _shim_legacy_kwargs(spec, transport, policy,
                                                  legacy)
         entry = TRANSPORT_REGISTRY[tcfg.kind]
@@ -283,6 +285,34 @@ class LiveCluster:
             backend,
             self.coordinator, self.prefill_workers, self.decode_workers,
             chunk_tokens=policy.chunk_tokens)
+        self.fleet = None
+        if policy.autoscale:
+            from repro.core.planner import Deployment, PlanLattice, \
+                WorkerGroup
+            from repro.runtime.autoscaler import AutoscaleConfig, \
+                FleetController
+            if lattice is None:   # structural fallback (same as the sim)
+                d_chunk = (policy.decode_chunk_tokens[0]
+                           if policy.decode_chunk_tokens else 0)
+                lattice = PlanLattice.ratio(
+                    Deployment((WorkerGroup(spec.tp, spec.n_prefill),),
+                               (WorkerGroup(spec.tp, spec.n_decode,
+                                            d_chunk),)),
+                    span=policy.autoscale_span,
+                    bucket_rates=policy.autoscale_buckets or (1.0,))
+            self.fleet = self.runtime.fleet = FleetController(
+                lattice,
+                AutoscaleConfig(
+                    span=policy.autoscale_span,
+                    bucket_rates=tuple(lattice.bucket_rates),
+                    window_s=policy.autoscale_window_s,
+                    dwell_s=policy.autoscale_dwell_s,
+                    swap_delay_s=policy.autoscale_swap_delay_s),
+                runtime=self.runtime, coordinator=self.coordinator,
+                spawn=self._fleet_spawn,
+                # proc workers take their chunk size at spawn; only inproc
+                # handles apply a new chunk to already-running workers
+                apply_chunk=self._pool is None)
 
     def _link_topology(self) -> LinkTopology:
         """The measured topology the scheduler prices (DESIGN.md §16).
@@ -340,16 +370,49 @@ class LiveCluster:
         next_id = max((w.idx for w in self.prefill_workers), default=-1) + 1
         if self._pool is not None:
             w = self._pool.spawn("prefill", next_id)
-            # keep the priced topology in step with the elastic scale-out
-            self.perf.topology = self._link_topology()
         else:
             ref = (self.prefill_workers[0] if self.prefill_workers
                    else self.decode_workers[0])
             eng = Engine(self.cfg, max_len=ref.engine.max_len,
                          params=ref.engine.params, tp=self.spec.tp)
             w = LivePrefillWorker(next_id, eng, tp=self.spec.tp)
+        # keep the priced topology in step with the elastic scale-out —
+        # on BOTH branches (the inproc topology is degenerate today, but a
+        # scheduler pricing a stale topology is a silent wrong-cost bug)
+        self.perf.topology = self._link_topology()
         self.runtime.register_worker(w, "prefill")
         return w
+
+    def add_decode_worker(self, *, chunk_tokens: int = 0):
+        """Elastic scale-up of the DECODE side (the half
+        ``add_prefill_worker`` never covered): spawn at a fresh max-id+1
+        stable id, with a planner-chosen per-worker chunk size."""
+        next_id = max((w.idx for w in self.decode_workers), default=-1) + 1
+        if self._pool is not None:
+            w = self._pool.spawn("decode", next_id, chunk_tokens=chunk_tokens)
+        else:
+            ref = (self.decode_workers[0] if self.decode_workers
+                   else self.prefill_workers[0])
+            eng = Engine(self.cfg, max_len=ref.engine.max_len,
+                         params=ref.engine.params, tp=self.spec.tp)
+            w = LiveDecodeWorker(next_id, eng, max_slots=self.spec.max_slots,
+                                 tp=self.spec.tp, chunk_tokens=chunk_tokens,
+                                 packed=self.policy.packed)
+        self.perf.topology = self._link_topology()
+        self.runtime.register_worker(w, "decode")
+        return w
+
+    def _fleet_spawn(self, kind: str, chunk_tokens: int = 0):
+        """FleetController scale-up hook (DESIGN.md §18)."""
+        return (self.add_prefill_worker() if kind == "prefill"
+                else self.add_decode_worker(chunk_tokens=chunk_tokens))
+
+    def schedule_scale_up(self, at: float) -> None:
+        """Explicit elastic resize through the FleetController: at ``at``,
+        adopt the (fleet+1) lattice cell and spawn the missing worker."""
+        assert self.fleet is not None, "requires policy.autoscale"
+        self.runtime.events.at(
+            at, lambda: self.fleet.scale_up(self.runtime.now), "scale-up")
 
     def run(self, sessions: List[LiveSession]) -> LiveResult:
         t_wall = time.perf_counter()
@@ -425,6 +488,8 @@ class LiveCluster:
             kv_spill_bytes=self.kv_store.spill_bytes if self.kv_store else 0,
             kv_promote_bytes=(self.kv_store.promote_bytes
                               if self.kv_store else 0),
+            replans=self.coordinator.sched.replans,
+            role_swaps=self.coordinator.sched.role_swaps,
         )
 
 

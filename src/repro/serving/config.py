@@ -102,6 +102,13 @@ class SchedPolicy:
     kv_hbm_pages: int = 64           # per-worker device tier capacity
     kv_host_pages: int = 64          # per-worker host spill tier capacity
     kv_cache_aware: bool = True      # False = pool runs but pricing is blind
+    # -- elastic fleet autoscaling (DESIGN.md §18) ------------------------
+    autoscale: bool = False          # FleetController over a plan lattice
+    autoscale_span: int = 1          # lattice reach: N - span .. N + span
+    autoscale_buckets: Tuple[float, ...] = ()  # arrival-rate bucket centers
+    autoscale_window_s: float = 30.0    # arrival-rate estimator window
+    autoscale_dwell_s: float = 5.0      # min time between drift swaps
+    autoscale_swap_delay_s: float = 0.0  # >0 models re-plan-from-scratch
 
     #: fields that exist on SimConfig under the same name + default — the
     #: mirror contract (tests/test_cluster_config.py)
@@ -111,7 +118,9 @@ class SchedPolicy:
         "preemption", "decode_offload", "offload_guard",
         "offload_hysteresis", "offload_budget", "offload_min_profit_s",
         "kv_pool", "kv_page_tokens", "kv_hbm_pages", "kv_host_pages",
-        "kv_cache_aware")
+        "kv_cache_aware", "autoscale", "autoscale_span",
+        "autoscale_buckets", "autoscale_window_s", "autoscale_dwell_s",
+        "autoscale_swap_delay_s")
 
     def replace(self, **kw) -> "SchedPolicy":
         return dataclasses.replace(self, **kw)

@@ -1,1 +1,8 @@
-from repro.workloads.traces import TRACES, TraceSpec, make_trace, trace_stats  # noqa: F401
+from repro.workloads.traces import (  # noqa: F401
+    TRACES,
+    TraceSpec,
+    diurnal_rate,
+    make_diurnal_trace,
+    make_trace,
+    trace_stats,
+)

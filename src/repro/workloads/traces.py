@@ -89,25 +89,80 @@ def make_trace(
     t = 0.0
     for sid in range(num_sessions):
         t += rng.expovariate(arrival_rate)
-        n = _num_rounds(rng, spec)
-        # split the session's prefill budget across rounds; round 0 carries
-        # the initial prompt (boosted), later rounds carry tool/retrieval
-        # outputs around the same mean
-        rounds: List[RoundSpec] = []
-        for r in range(n):
-            boost = spec.first_round_prefill_boost if r == 0 else 1.0
-            pf = max(8, int(_lognormal(rng, spec.mean_prefill * boost
-                                       / (1 + (spec.first_round_prefill_boost - 1) / n),
-                                       spec.sigma)))
-            if r == 0 and shared_prefix_tokens > 0:
-                pf = max(pf, shared_prefix_tokens + 8)
-            dc = max(4, int(_lognormal(rng, spec.mean_decode, spec.sigma)))
-            env = rng.expovariate(1.0 / spec.mean_env_delay) if r < n - 1 else 0.0
-            rounds.append(RoundSpec(prefill_len=pf, decode_len=dc, env_delay=env))
-        s = Session(session_id=sid, arrival_time=t, rounds=rounds)
-        if shared_prefix_tokens > 0:
-            s.prefix_group = (prefix_group, shared_prefix_tokens)
-        sessions.append(s)
+        sessions.append(_make_session(rng, spec, sid, t,
+                                      shared_prefix_tokens, prefix_group))
+    return sessions
+
+
+def _make_session(rng: random.Random, spec: TraceSpec, sid: int, t: float,
+                  shared_prefix_tokens: int, prefix_group: int) -> Session:
+    n = _num_rounds(rng, spec)
+    # split the session's prefill budget across rounds; round 0 carries
+    # the initial prompt (boosted), later rounds carry tool/retrieval
+    # outputs around the same mean
+    rounds: List[RoundSpec] = []
+    for r in range(n):
+        boost = spec.first_round_prefill_boost if r == 0 else 1.0
+        pf = max(8, int(_lognormal(rng, spec.mean_prefill * boost
+                                   / (1 + (spec.first_round_prefill_boost - 1) / n),
+                                   spec.sigma)))
+        if r == 0 and shared_prefix_tokens > 0:
+            pf = max(pf, shared_prefix_tokens + 8)
+        dc = max(4, int(_lognormal(rng, spec.mean_decode, spec.sigma)))
+        env = rng.expovariate(1.0 / spec.mean_env_delay) if r < n - 1 else 0.0
+        rounds.append(RoundSpec(prefill_len=pf, decode_len=dc, env_delay=env))
+    s = Session(session_id=sid, arrival_time=t, rounds=rounds)
+    if shared_prefix_tokens > 0:
+        s.prefix_group = (prefix_group, shared_prefix_tokens)
+    return s
+
+
+def diurnal_rate(t: float, base_rate: float, peak_rate: float,
+                 period_s: float) -> float:
+    """Sinusoidal diurnal intensity: ``base`` at t=0, ``peak`` at half
+    period — the canonical day/night load curve, compressed to simulation
+    timescales."""
+    return base_rate + (peak_rate - base_rate) * 0.5 * (
+        1.0 - math.cos(2.0 * math.pi * t / period_s))
+
+
+def make_diurnal_trace(
+    name: str,
+    *,
+    num_sessions: int = 200,
+    base_rate: float = 0.5,             # trough arrivals / second
+    peak_rate: float = 4.0,             # crest arrivals / second
+    period_s: float = 120.0,            # full diurnal cycle length
+    seed: int = 0,
+    shared_prefix_tokens: int = 0,
+    prefix_group: int = 0,
+) -> List[Session]:
+    """Time-varying-Poisson sessions for one Table-1 trace (DESIGN.md §18).
+
+    Arrivals follow an inhomogeneous Poisson process whose intensity
+    sweeps ``base_rate -> peak_rate -> base_rate`` over each ``period_s``
+    (:func:`diurnal_rate`), sampled exactly by Lewis-Shedler thinning:
+    candidate gaps at the peak rate, accepted with probability
+    ``lam(t)/peak``.  Session bodies reuse the Table-1 generators, so only
+    the arrival process differs from :func:`make_trace` — this is the load
+    curve the autoscaler's drift detector is benchmarked against
+    (``benchmarks/fig16_autoscale.py``)."""
+    if not 0 < base_rate <= peak_rate:
+        raise ValueError(f"need 0 < base_rate <= peak_rate, got "
+                         f"{base_rate} / {peak_rate}")
+    spec = TRACES[name]
+    rng = random.Random(seed)
+    sessions: List[Session] = []
+    t = 0.0
+    for sid in range(num_sessions):
+        while True:
+            t += rng.expovariate(peak_rate)
+            accept = diurnal_rate(t, base_rate, peak_rate,
+                                  period_s) / peak_rate
+            if rng.random() <= accept:
+                break
+        sessions.append(_make_session(rng, spec, sid, t,
+                                      shared_prefix_tokens, prefix_group))
     return sessions
 
 

@@ -1,0 +1,308 @@
+"""Elastic fleet autoscaling (DESIGN.md §18).
+
+Covers the pieces the FleetController stands on, bottom-up:
+
+  * the windowed arrival-rate estimator and the diurnal trace generator it
+    is benchmarked against;
+  * PlanLattice addressing — load bucketing, fleet-size clamping, and the
+    structural ``ratio`` fallback;
+  * the scale-up bugfixes: ``add_worker`` must mint max-id+1 (never reuse a
+    stable id), and a scheduled failure must kill the incarnation that held
+    the id at schedule time, never a same-tick same-id replacement (the
+    spawn-generation guard);
+  * swap behaviour: a death-triggered swap spawns the replacement BEFORE
+    victims rebind (so losing the last decode worker is survivable), and a
+    sustained-load drift converges roles to the new bucket's cell;
+  * the parity contract: a kill-then-scale-up trace produces IDENTICAL
+    decision logs — ``replan`` events included — on the modeled simulator
+    and the live inproc cluster.
+"""
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    Deployment,
+    PerfModel,
+    PlanLattice,
+    SimConfig,
+    Simulation,
+    SLOSpec,
+    WorkerGroup,
+)
+from repro.core.planner import LatticeCell
+from repro.core.routing import RoutingConfig
+from repro.core.types import RoundSpec, Session
+from repro.runtime import ArrivalRateEstimator
+from repro.workloads import diurnal_rate, make_diurnal_trace
+
+SLO = SLOSpec(ttft_thres=10.0, itl_thres=10.0)
+
+
+def _perf():
+    return PerfModel(get_config("qwen3-32b"))
+
+
+def _session(sid, at, prefill=64, decode=4, rounds=1):
+    return Session(session_id=sid, arrival_time=at,
+                   rounds=[RoundSpec(prefill_len=prefill, decode_len=decode,
+                                     env_delay=0.0) for _ in range(rounds)])
+
+
+# ---------------------------------------------------------------------------
+# drift detector inputs: rate estimator + diurnal trace
+# ---------------------------------------------------------------------------
+
+def test_estimator_windows_out_old_arrivals():
+    est = ArrivalRateEstimator(window_s=10.0)
+    for t in (0.0, 1.0, 2.0, 3.0):
+        est.add(t)
+    assert est.count(3.0) == 4
+    assert est.rate(3.0) == pytest.approx(0.4)
+    # 0.0 and 1.0 fall out of the [2.0, 12.0] window
+    assert est.count(12.0) == 2
+    assert est.rate(12.0) == pytest.approx(0.2)
+    assert est.count(100.0) == 0
+
+
+def test_diurnal_rate_sweeps_base_to_peak():
+    assert diurnal_rate(0.0, 1.0, 5.0, 60.0) == pytest.approx(1.0)
+    assert diurnal_rate(30.0, 1.0, 5.0, 60.0) == pytest.approx(5.0)
+    assert diurnal_rate(60.0, 1.0, 5.0, 60.0) == pytest.approx(1.0)
+
+
+def test_diurnal_trace_is_a_valid_thinned_poisson():
+    ss = make_diurnal_trace("toolbench", num_sessions=50, base_rate=0.5,
+                            peak_rate=4.0, period_s=30.0, seed=3)
+    assert len(ss) == 50
+    times = [s.arrival_time for s in ss]
+    assert times == sorted(times) and times[0] > 0.0
+    assert [s.session_id for s in ss] == list(range(50))
+    # crest half-periods must arrive denser than trough half-periods
+    crest = sum(1 for t in times if 0.25 <= (t % 30.0) / 30.0 < 0.75)
+    assert crest > len(times) / 2
+    with pytest.raises(ValueError):
+        make_diurnal_trace("toolbench", base_rate=2.0, peak_rate=1.0)
+
+
+# ---------------------------------------------------------------------------
+# PlanLattice addressing
+# ---------------------------------------------------------------------------
+
+def _ratio_lattice(n_pre=2, n_dec=2, tp=2, span=1, bucket_rates=(1.0, 3.0)):
+    template = Deployment((WorkerGroup(tp, n_pre),), (WorkerGroup(tp, n_dec),))
+    return PlanLattice.ratio(template, span=span, bucket_rates=bucket_rates)
+
+
+def test_lattice_bucket_maps_rate_to_nearest_center():
+    lat = _ratio_lattice(bucket_rates=(1.0, 3.0, 8.0))
+    assert lat.bucket(0.0) == 0
+    assert lat.bucket(1.9) == 0      # nearer 1.0 than 3.0
+    assert lat.bucket(2.1) == 1
+    assert lat.bucket(5.6) == 2
+    assert lat.bucket(100.0) == 2
+
+
+def test_lattice_lookup_clamps_fleet_size():
+    lat = _ratio_lattice(n_pre=2, n_dec=2, span=1)       # sizes 3, 4, 5
+    assert sorted(lat.fleet_sizes()) == [3, 4, 5]
+    assert lat.lookup(2, 0).fleet_size == 3              # clamped up
+    assert lat.lookup(9, 0).fleet_size == 5              # clamped down
+    for m in (3, 4, 5):
+        cell = lat.lookup(m, 0)
+        assert cell.fleet_size == m
+        total = (sum(g.count for g in cell.deployment.prefill)
+                 + sum(g.count for g in cell.deployment.decode))
+        assert total == m
+
+
+def test_ratio_lattice_preserves_template_split():
+    lat = _ratio_lattice(n_pre=3, n_dec=1, span=1)       # 3:1 template
+    for m in lat.fleet_sizes():
+        cell = lat.lookup(m, 0)
+        x = sum(g.count for g in cell.deployment.prefill)
+        y = sum(g.count for g in cell.deployment.decode)
+        assert x == min(m - 1, max(1, round(m * 3 / 4)))
+        assert y == m - x >= 1
+
+
+# ---------------------------------------------------------------------------
+# scale-up bugfixes: fresh stable ids + spawn-generation guard
+# ---------------------------------------------------------------------------
+
+def test_add_worker_never_reuses_a_stable_id():
+    """``add_worker`` must mint max-id+1 like ``LiveCluster.add_*_worker``:
+    with non-contiguous ids in the list (a fleet swap can leave them), a
+    ``len(workers)``-based id would collide with a live worker."""
+    sim = Simulation(_perf(), Deployment((WorkerGroup(2, 2),),
+                                         (WorkerGroup(2, 1),)),
+                     [_session(0, at=0.0)], SLO, SimConfig(scheduler="ampd"))
+    sim.runtime.register_worker(sim._new_worker(5, 2, "prefill"), "prefill")
+    w = sim.add_worker("prefill", 2)
+    assert w.idx == 6
+    ids = [p.idx for p in sim.runtime.prefill_workers]
+    assert len(ids) == len(set(ids)) == 4
+    assert sim.runtime.worker_by_id("prefill", 6) is w
+
+
+def test_spawn_generation_guard_spares_same_tick_replacement():
+    """A scheduled failure is aimed at the incarnation that held the id at
+    schedule time.  If that worker dies and a replacement is registered
+    under the SAME stable id at the same logical instant (ordered earlier
+    in the event heap), the stale kill must be a no-op."""
+    sim = Simulation(_perf(), Deployment((WorkerGroup(2, 1),),
+                                         (WorkerGroup(2, 2),)),
+                     [_session(0, at=2.0)], SLO, SimConfig(scheduler="ampd"))
+    rt = sim.runtime
+
+    def crash_and_respawn():
+        rt._on_failure("decode", 0)
+        fresh = sim._new_worker(0, 2, "decode")
+        rt.decode_workers[0] = fresh         # in-place same-id replacement
+        rt._init_worker(fresh)
+
+    rt.events.at(1.0, crash_and_respawn, "respawn")  # earlier seq: runs 1st
+    rt.schedule_failure("decode", 0, at=1.0)         # aimed at the corpse
+    sim.run()
+    w = rt.worker_by_id("decode", 0)
+    assert w.alive, "stale scheduled failure killed the same-id replacement"
+    assert all(s.finish_time is not None for s in sim.sessions)
+    assert all(d.mem_tokens == 0 for d in sim.decode_workers)
+
+
+def test_scheduled_failure_still_lands_without_respawn():
+    """Guard sanity: with no replacement, the captured generation matches
+    and the scheduled kill fires normally."""
+    sim = Simulation(_perf(), Deployment((WorkerGroup(2, 1),),
+                                         (WorkerGroup(2, 2),)),
+                     [_session(0, at=2.0)], SLO, SimConfig(scheduler="ampd"),
+                     failures=[(1.0, "decode", 0)])
+    sim.run()
+    assert not sim.runtime.worker_by_id("decode", 0).alive
+
+
+# ---------------------------------------------------------------------------
+# FleetController swap behaviour (modeled backend)
+# ---------------------------------------------------------------------------
+
+def _autoscale_cfg(**kw):
+    return SimConfig(scheduler="ampd", seed=0, autoscale=True,
+                     routing=RoutingConfig(ttft_thres=SLO.ttft_thres,
+                                           itl_thres=SLO.itl_thres), **kw)
+
+
+def test_death_swap_spawns_replacement_before_rebind():
+    """Killing the ONLY decode worker is survivable with the controller on:
+    the fleet hook runs before victim rebinds, and the swap spawns before it
+    retires, so the replacement absorbs the recovery traffic."""
+    ss = [_session(i, at=0.4 * i, rounds=2) for i in range(4)]
+    sim = Simulation(_perf(), Deployment((WorkerGroup(2, 2),),
+                                         (WorkerGroup(2, 1),)),
+                     ss, SLO, _autoscale_cfg(), failures=[(0.5, "decode", 0)])
+    sim.coordinator.record_decisions = True
+    r = sim.run()
+    assert all(s.finish_time is not None for s in ss), "sessions dropped"
+    assert not sim.runtime.worker_by_id("decode", 0).alive
+    replacement = sim.runtime.worker_by_id("decode", 1)
+    assert replacement is not None and replacement.alive
+    assert r.replans >= 1
+    replans = [k for k in sim.coordinator.decision_log if k[3] == "replan"]
+    assert replans and replans[0][4] == 0    # trigger = the dead worker's id
+    assert all(d.mem_tokens == 0 for d in sim.decode_workers)
+
+
+def test_drift_swap_converges_roles_to_the_new_bucket_cell():
+    """A sustained arrival-rate shift re-buckets the load and converges the
+    fleet to the new bucket's precomputed split (the hand-built lattice
+    predicts a decisive gain, so the drift margin does not gate it)."""
+    tp = 2
+    pre_heavy = Deployment((WorkerGroup(tp, 2),), (WorkerGroup(tp, 1),))
+    dec_heavy = Deployment((WorkerGroup(tp, 1),), (WorkerGroup(tp, 2),))
+    cells = {
+        (3, 0): LatticeCell(pre_heavy, 3, 0, slo_attainment=1.0,
+                            scores={2: 1.0, 1: 0.9}),
+        # at the crest the lattice predicts the current (2, 1) split loses
+        # decisively — scores[x=2] far below the cell optimum
+        (3, 1): LatticeCell(dec_heavy, 3, 1, slo_attainment=1.0,
+                            scores={1: 1.0, 2: 0.2}),
+    }
+    lattice = PlanLattice(cells, bucket_rates=(0.5, 4.0), tp=tp)
+    # trough: 4 arrivals at 1/s (rate 2.0 < midpoint 2.25 keeps bucket 0),
+    # then a crest burst well past the midpoint
+    ss = ([_session(i, at=float(i)) for i in range(4)]
+          + [_session(4 + i, at=10.0 + 0.05 * i) for i in range(8)])
+    cfg = _autoscale_cfg(autoscale_buckets=(0.5, 4.0),
+                         autoscale_window_s=2.0, autoscale_dwell_s=0.5)
+    sim = Simulation(_perf(), pre_heavy, ss, SLO, cfg, lattice=lattice)
+    sim.coordinator.record_decisions = True
+    r = sim.run()
+    assert all(s.finish_time is not None for s in ss)
+    assert r.replans >= 1 and r.role_swaps >= 2
+    replans = [k for k in sim.coordinator.decision_log if k[3] == "replan"]
+    assert any(k[2] == 1 for k in replans), "no swap adopted bucket 1"
+    alive_pre = [w for w in sim.runtime.prefill_workers if w.alive]
+    alive_dec = [w for w in sim.runtime.decode_workers if w.alive]
+    assert (len(alive_pre), len(alive_dec)) == (1, 2)
+    assert all(d.mem_tokens == 0 for d in sim.decode_workers)
+
+
+# ---------------------------------------------------------------------------
+# modeled/live parity: kill-then-scale-up, replan events included
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def live_cfg():
+    return get_config("qwen2.5-14b").reduced()
+
+
+def test_kill_then_scale_up_decision_log_parity(live_cfg):
+    """The regression the tentpole stands on: a prefill kill followed by an
+    explicit scale-up must produce IDENTICAL decision logs — routes AND the
+    two ``replan`` events — on the modeled simulator and the live inproc
+    cluster, with the replacement minted at the same fresh stable id."""
+    from repro.serving import (ClusterSpec, LiveCluster, SchedPolicy,
+                               make_live_sessions)
+    # arrival gaps exceed any engine duration (the PARITY idiom from
+    # tests/test_multiproc_cluster.py) so the kill and the resize land at
+    # the same protocol-determined positions in both backends
+    gap, rounds, pf, dc = 100.0, 2, 16, 4
+
+    cl = LiveCluster(live_cfg,
+                     spec=ClusterSpec(n_prefill=2, n_decode=1, max_slots=4,
+                                      max_len=128),
+                     policy=SchedPolicy(scheduler="ampd", autoscale=True),
+                     slo=SLOSpec(10.0, 10.0), seed=0, profile=False)
+    cl.coordinator.record_decisions = True
+    live_sessions = make_live_sessions(live_cfg, num_sessions=3,
+                                       rounds=rounds, prefill_len=pf,
+                                       decode_len=dc, arrival_gap=gap)
+    cl.fail_worker("prefill", 1, at=50.0)
+    cl.schedule_scale_up(150.0)
+    cl.run_trace(live_sessions)
+
+    model_sessions = [_session(i, at=i * gap, prefill=pf, decode=dc,
+                               rounds=rounds) for i in range(3)]
+    dep = Deployment((WorkerGroup(1, 2),), (WorkerGroup(1, 1),))
+    sim = Simulation(PerfModel(live_cfg), dep, model_sessions,
+                     SLOSpec(10.0, 10.0),
+                     SimConfig(scheduler="ampd", seed=0, autoscale=True,
+                               routing=RoutingConfig(ttft_thres=10.0,
+                                                     itl_thres=10.0)),
+                     failures=[(50.0, "prefill", 1)])
+    sim.coordinator.record_decisions = True
+    sim.schedule_scale_up(150.0)
+    sim.run()
+
+    assert sim.coordinator.decision_log == cl.coordinator.decision_log
+    replans = [k for k in sim.coordinator.decision_log if k[3] == "replan"]
+    assert len(replans) == 2
+    assert replans[0][:3] == (-1, 2, 0)      # death: fleet drops to 2
+    assert replans[1][:3] == (-1, 3, 0)      # resize: back to 3
+    # both backends minted the replacement at the fresh stable id 2
+    for rt in (sim.runtime, cl.runtime):
+        w = rt.worker_by_id("prefill", 2)
+        assert w is not None and w.alive
+        assert not rt.worker_by_id("prefill", 1).alive
+    assert all(s.finish_time is not None for s in live_sessions)
+    assert all(d.mem_tokens == 0 for d in cl.decode_workers)
+    assert (sim.coordinator.sched.replans
+            == cl.coordinator.sched.replans == 2)

@@ -45,6 +45,8 @@ GOLDEN_OFFLOAD = os.path.join(os.path.dirname(__file__), "golden",
                               "multiproc_offload_decision_log.json")
 GOLDEN_KVPOOL = os.path.join(os.path.dirname(__file__), "golden",
                              "multiproc_kvpool_decision_log.json")
+GOLDEN_REPLAN = os.path.join(os.path.dirname(__file__), "golden",
+                             "multiproc_replan_decision_log.json")
 
 
 def _check_golden(path, got, regen, note):
@@ -460,6 +462,82 @@ def test_chaos_sigkill_decode_mid_spill_keeps_pool_sound(live_cfg):
         _check_invariants(cl, audit, sessions, decode_failure=True)
     finally:
         cl.close()
+
+
+# ---------------------------------------------------------------------------
+# elastic autoscaling: replan events join the parity contract (DESIGN.md §18)
+# ---------------------------------------------------------------------------
+
+#: autoscale variant of the parity trace: the same protocol-determined
+#: arrival structure as PARITY, plus a mid-trace kill of the ONLY decode
+#: worker (the FleetController spawns the replacement before victims
+#: rebind, then converges to the fleet-2 ratio cell by retiring a prefill
+#: worker) and an explicit resize (which re-adopts the fleet-3 cell by
+#: spawning a fresh prefill worker).  Both land between arrivals, so the
+#: two ``replan`` log entries sit at transport-independent positions.
+REPLAN = dict(num_sessions=3, rounds=2, prefill_len=24, decode_len=3,
+              arrival_gap=100.0)
+REPLAN_CLUSTER = dict(n_prefill=2, n_decode=1, max_slots=4, max_len=128,
+                      scheduler="ampd", seed=0, profile=False,
+                      chunk_tokens=16, packed=False, autoscale=True)
+
+
+def _run_replan_trace(live_cfg, transport):
+    from repro.serving import make_live_sessions
+    cl = _cluster(live_cfg, transport, slo=SLOSpec(1e6, 1e6),
+                  **REPLAN_CLUSTER)
+    cl.coordinator.record_decisions = True
+    try:
+        sessions = make_live_sessions(live_cfg, **REPLAN)
+        cl.fail_worker("decode", 0, at=120.0)
+        cl.schedule_scale_up(150.0)
+        result = cl.run_trace(sessions)
+        return dict(
+            log=list(cl.coordinator.decision_log),
+            tokens=[list(map(int, s.generated)) for s in sessions],
+            mem=[d.mem_tokens for d in cl.decode_workers],
+            alive=sorted((w.kind, w.idx)
+                         for w in (cl.prefill_workers + cl.decode_workers)
+                         if w.alive),
+            finished=all(s.finish_time is not None for s in sessions),
+            result=result,
+        )
+    finally:
+        cl.close()
+
+
+def test_replan_transport_parity_on_seeded_trace(live_cfg):
+    """``replan`` joins the parity contract: killing the only decode worker
+    and resizing mid-trace must produce IDENTICAL decision logs (routes +
+    both replan events), the same surviving fleet shape, byte-identical
+    tokens and conserved accounting on both transports."""
+    a = _run_replan_trace(live_cfg, "inproc")
+    b = _run_replan_trace(live_cfg, "proc")
+    assert a["finished"] and b["finished"]
+    assert a["log"] == b["log"]
+    replans = [k for k in a["log"] if k[3] == "replan"]
+    assert len(replans) == 2, "kill + resize must each adopt a cell"
+    assert a["tokens"] == b["tokens"]
+    assert a["mem"] == b["mem"] == [0, 0]
+    assert a["alive"] == b["alive"]
+    assert a["result"].replans == b["result"].replans == 2
+    assert a["result"].role_swaps == b["result"].role_swaps >= 3
+
+
+@pytest.mark.parametrize("transport", ["inproc", "proc", "tcp"])
+def test_replan_decision_log_matches_golden(live_cfg, regen_golden,
+                                            transport):
+    """Golden regression for the §18 events: cell-choice drift, swap-order
+    drift (spawn-before-retire) or trigger-attribution drift all move a
+    ``replan`` entry and fail loudly here, on every transport."""
+    _require(transport)
+    got = _run_replan_trace(live_cfg, transport)["log"]
+    _check_golden(GOLDEN_REPLAN, got, regen_golden and transport == "inproc",
+                  "Golden decision log for the autoscale replan parity "
+                  "trace (REPLAN/REPLAN_CLUSTER), including both replan "
+                  "events. Regenerate ONLY for an intentional schedule or "
+                  "lattice-policy change: pytest -k golden --regen-golden "
+                  "(tests/golden/README.md).")
 
 
 # ---------------------------------------------------------------------------

@@ -223,6 +223,37 @@ def test_modeled_conservation_under_interleavings(seed):
 
 
 # ---------------------------------------------------------------------------
+# Elastic fleet autoscaling (§18): swaps join the conservation contract
+# ---------------------------------------------------------------------------
+
+def test_autoscale_swaps_conserve_chunks():
+    """A death-triggered swap, an explicit resize and any drift swaps must
+    conserve every chunk (exactly-once joins), zero every decode worker's
+    memory at drain, and log one ``replan`` entry per adoption."""
+    perf = _perf()
+    dep = Deployment((WorkerGroup(2, 2),), (WorkerGroup(2, 2),))
+    slo = SLOSpec(ttft_thres=3.0, itl_thres=0.15)
+    ss = make_trace("toolbench", num_sessions=18, arrival_rate=2.5, seed=9)
+    cfg = SimConfig(scheduler="ampd", seed=9, work_stealing=True,
+                    autoscale=True, autoscale_buckets=(1.0, 3.0),
+                    autoscale_window_s=4.0, autoscale_dwell_s=1.0,
+                    routing=RoutingConfig(ttft_thres=slo.ttft_thres,
+                                          itl_thres=slo.itl_thres))
+    sim = Simulation(perf, dep, ss, slo, cfg, failures=[(3.0, "decode", 0)])
+    sim.schedule_scale_up(5.0)
+    sim.coordinator.record_decisions = True
+    audit = AuditModeledBackend(perf, kv_overlap=True)
+    audit.audit_init()
+    sim.runtime.backend = audit
+    r = sim.run()
+    assert r.replans >= 2, "the kill and the resize must both replan"
+    replans = [k for k in sim.coordinator.decision_log if k[3] == "replan"]
+    assert len(replans) == r.replans == sim.coordinator.sched.replans
+    assert_invariants(sim.runtime, audit, ss, sim.decode_workers,
+                      decode_failure_injected=True)
+
+
+# ---------------------------------------------------------------------------
 # Live backend (real reduced-config JAX engines), seeded interleavings
 # ---------------------------------------------------------------------------
 

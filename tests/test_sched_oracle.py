@@ -396,6 +396,64 @@ def test_cache_blind_coordinator_is_beatable():
     assert aware >= blind
 
 
+# ---------------------------------------------------------------------------
+# elastic autoscaling oracle (DESIGN.md §18): the hot-swapped fleet lands
+# within tolerance of the enumerated optimum at the post-change fleet size
+# ---------------------------------------------------------------------------
+
+def _autoscale_case() -> dict:
+    rng = random.Random(17)
+    sessions = []
+    t = 0.0
+    for sid in range(5):
+        t += rng.uniform(0.1, 0.4)
+        rs = [RoundSpec(prefill_len=rng.choice([512, 1024]),
+                        decode_len=rng.randint(4, 12),
+                        env_delay=rng.uniform(0.0, 0.3))]
+        sessions.append(Session(session_id=sid, arrival_time=t, rounds=rs))
+    t_mid = PERF.t_pre(0, 1024, 2)
+    slo = SLOSpec(ttft_thres=2.0 * t_mid + 0.05,
+                  itl_thres=3.0 * PERF.dec[2].alpha)
+    return dict(n_pre=2, n_dec=2, tp=2, rounds=1, sessions=sessions,
+                slo=slo, seed=17)
+
+
+def test_autoscale_within_tolerance_of_reduced_fleet_oracle():
+    """Lose a prefill worker mid-trace with the FleetController on: final
+    attainment must land within one session of the enumerated optimum over
+    ALL static splits at the REDUCED fleet size — an optimum that never
+    pays the kill (it runs the reduced fleet undisturbed from t=0).  This
+    pins the §18 claim end to end: the precomputed cell the controller
+    hot-swaps to is as good as re-planning would have been."""
+    from repro.core import PlanLattice
+    case = _autoscale_case()
+    slo = case["slo"]
+
+    def static_att(x: int, y: int) -> float:
+        dep = Deployment((WorkerGroup(2, x),), (WorkerGroup(2, y),))
+        ss = fresh_sessions(case)
+        r = Simulation(PERF, dep, ss, slo, _base_cfg(case)).run()
+        assert all(s.finish_time is not None for s in ss)
+        return r.slo_attainment
+
+    best_reduced = max(static_att(x, 3 - x) for x in (1, 2))
+
+    lattice = PlanLattice.build(PERF, lambda rate: fresh_sessions(case),
+                                4, slo, span=1, bucket_rates=(1.0,), tp=2,
+                                seed=case["seed"])
+    dep4 = Deployment((WorkerGroup(2, 2),), (WorkerGroup(2, 2),))
+    ss = fresh_sessions(case)
+    sim = Simulation(PERF, dep4, ss, slo, _base_cfg(case, autoscale=True),
+                     failures=[(0.05, "prefill", 1)], lattice=lattice)
+    att = sim.run().slo_attainment
+    assert all(s.finish_time is not None for s in ss)
+    assert sim.coordinator.sched.replans >= 1
+    tol = _tolerance(case)
+    assert att >= best_reduced - tol, (
+        f"hot-swapped fleet at {att:.3f}, more than one session below the "
+        f"enumerated reduced-fleet optimum {best_reduced:.3f}")
+
+
 @property_seeds
 def test_repair_layers_stay_within_tolerance(seed):
     """Stealing/preemption and decode-local offload revisit placements
