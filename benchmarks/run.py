@@ -174,6 +174,27 @@ def smoke(json_path=None) -> int:
            f"scratch={by['replan-scratch']['slo']} auto={auto['slo']} "
            f"replans={auto['replans']}")
 
+    _section("smoke: Fig. 17 per-class prefill pools + tenant SLO classes")
+    from benchmarks import fig17_classes
+    t0 = time.time()
+    rows = fig17_classes.run(num_sessions=SMOKE["num_sessions"],
+                             seeds=SMOKE["seeds"])
+    by = {r["arm"]: r for r in rows}
+    blind, classed = by["class-blind"], by["classed"]
+    for r in rows:
+        if r["completed"] != r["arrived"]:
+            failures.append(
+                f"fig17 {r['arm']}: {r['completed']}/{r['arrived']} "
+                "sessions completed (work lost)")
+    if classed["slo"] < blind["slo"]:
+        failures.append(
+            f"fig17 classed scheduling lost to class-blind "
+            f"({classed['slo']:.3f} < {blind['slo']:.3f})")
+    record("fig17_classes", t0, rows,
+           f"slo blind={blind['slo']} "
+           f"deadlines={by['classed-deadlines']['slo']} "
+           f"classed={classed['slo']}")
+
     _section("smoke: Fig. 12 multi-process transport (measured KV path)")
     from benchmarks import fig12_transport
     t0 = time.time()
@@ -398,6 +419,18 @@ def main() -> None:
            f"scratch={by['replan-scratch']['slo']} "
            f"auto={by['autoscale']['slo']} "
            f"replans={by['autoscale']['replans']}")
+
+    _section("Fig. 17: per-class prefill pools + tenant SLOs (beyond-paper)")
+    from benchmarks import fig17_classes
+    t0 = time.time()
+    rows = fig17_classes.main()
+    by = {r["arm"]: r for r in rows}
+    record("fig17_classes", t0,
+           f"slo: blind={by['class-blind']['slo']} "
+           f"deadlines={by['classed-deadlines']['slo']} "
+           f"classed={by['classed']['slo']} "
+           f"interactive {by['class-blind']['slo_interactive']}->"
+           f"{by['classed']['slo_interactive']}")
 
     _section("Fig. 12: multi-process transport, measured KV path (beyond-paper)")
     from benchmarks import fig12_transport

@@ -38,6 +38,7 @@ import numpy as np
 from scipy.optimize import Bounds, LinearConstraint, milp
 
 from repro.core.perf_model import PerfModel
+from repro.core.types import FIRST_PROMPT, INCREMENTAL
 
 
 class PlanningError(RuntimeError):
@@ -52,6 +53,9 @@ class WorkerGroup:
     #: planner-chosen sub-chunk size for this group's decode workers under
     #: chunked incremental prefill; 0 = runtime default / whole-task
     chunk_tokens: int = 0
+    #: prefill class this group is dedicated to (DESIGN.md §19):
+    #: "" = shared pool (serves any class), else FIRST_PROMPT / INCREMENTAL
+    pclass: str = ""
 
 
 @dataclass
@@ -79,7 +83,8 @@ class Deployment:
     def label(self) -> str:
         def grp(g: WorkerGroup) -> str:
             c = f",C={g.chunk_tokens}" if g.chunk_tokens else ""
-            return f"<TP={g.tp},DP={g.count}{c}>"
+            k = f",cls={g.pclass}" if g.pclass else ""
+            return f"<TP={g.tp},DP={g.count}{c}{k}>"
         p = "+".join(grp(g) for g in self.prefill)
         d = "+".join(grp(g) for g in self.decode)
         return f"P:{p}, D:{d}"
@@ -207,6 +212,23 @@ def uniform_candidates(N: int,
     return out
 
 
+def classed_variants(dep: Deployment) -> List[Deployment]:
+    """Per-class prefill pools for one split (DESIGN.md §19): every way to
+    dedicate ``dep``'s prefill workers to the two prefill classes — at
+    least one worker per class, decode untouched.  Empty when the split
+    has fewer than two prefill workers (nothing to dedicate)."""
+    if not dep.prefill:
+        return []
+    total = sum(g.count for g in dep.prefill)
+    if total < 2:
+        return []
+    tp = dep.prefill[0].tp
+    return [Deployment(
+        prefill=(WorkerGroup(tp, nf, pclass=FIRST_PROMPT),
+                 WorkerGroup(tp, total - nf, pclass=INCREMENTAL)),
+        decode=dep.decode) for nf in range(1, total)]
+
+
 @dataclass
 class PlanResult:
     ilp: ILPSolution
@@ -238,6 +260,7 @@ def plan(
     scheduler: str = "ampd",
     chunk_grid: Optional[Sequence[int]] = None,
     rank_full_grid: bool = False,
+    classed: bool = False,
 ) -> PlanResult:
     """Full offline planning: tau coefficients -> ILP -> ranked candidates.
 
@@ -247,6 +270,12 @@ def plan(
     split; ranked deployments then carry the chosen per-group chunk size.
     ``rank_full_grid`` re-searches the grid per ranked candidate (more sims)
     instead of reusing the per-degree tau winner.
+
+    ``classed`` (DESIGN.md §19) additionally ranks, for every candidate
+    with >= 2 prefill workers, each way of dedicating them to the two
+    prefill classes (first-prompt vs incremental pools) — shared-pool and
+    dedicated-pool splits compete on equal footing, so the planner only
+    dedicates when the blended trace rewards it.
     """
     from repro.core.simulator import simulate_deployment  # lazy (cycle)
     simulate = simulate or simulate_deployment
@@ -299,14 +328,16 @@ def plan(
         stride = len(cands) / max_candidates
         cands = [cands[int(i * stride)] for i in range(max_candidates)]
     ranked = []
-    for dep in cands:
-        cand_grid = (grid if (joint and rank_full_grid)
-                     else (chunk_by_degree.get(dep.decode[0].tp, 0),))
-        for c in cand_grid:
-            sessions = make_trace()
-            r = sim(dep.with_chunk(c) if c else dep, sessions, c)
-            ranked.append((dep.with_chunk(c) if c else dep,
-                           r.slo_attainment, r.p95_e2e))
+    for base in cands:
+        variants = [base] + (classed_variants(base) if classed else [])
+        for dep in variants:
+            cand_grid = (grid if (joint and rank_full_grid)
+                         else (chunk_by_degree.get(dep.decode[0].tp, 0),))
+            for c in cand_grid:
+                sessions = make_trace()
+                r = sim(dep.with_chunk(c) if c else dep, sessions, c)
+                ranked.append((dep.with_chunk(c) if c else dep,
+                               r.slo_attainment, r.p95_e2e))
     ranked.sort(key=lambda t: (-t[1], t[2]))
     return PlanResult(ilp=ilp, ranked=ranked, tau_pre=tau_pre,
                       tau_dec=tau_dec, chunk_by_degree=chunk_by_degree)
@@ -373,23 +404,34 @@ class PlanLattice:
     @staticmethod
     def split_candidates(fleet_size: int, tp: int,
                          chunk_grid: Sequence[int] = (0,),
+                         classed: bool = False,
                          ) -> List[Deployment]:
         """Every x-prefill / (fleet_size - x)-decode split at uniform tp,
-        crossed with the decode chunk grid (0 = unchunked)."""
+        crossed with the decode chunk grid (0 = unchunked).  ``classed``
+        additionally enumerates, for every split with >= 2 prefill
+        workers, each dedication of them into first-prompt / incremental
+        pools (DESIGN.md §19) — 3-way splits compete with the shared-pool
+        2-way ones."""
         out = []
         for x in range(1, fleet_size):
             for c in chunk_grid:
-                out.append(Deployment((WorkerGroup(tp, x),),
-                                      (WorkerGroup(tp, fleet_size - x, c),)))
+                base = Deployment((WorkerGroup(tp, x),),
+                                  (WorkerGroup(tp, fleet_size - x, c),))
+                out.append(base)
+                if classed:
+                    out.extend(classed_variants(base))
         return out
 
     @classmethod
     def enumerate_cell(cls, perf, make_sessions, fleet_size: int, bucket: int,
                        slo, *, tp: int = 1, scheduler: str = "ampd",
                        chunk_grid: Sequence[int] = (0,), seed: int = 0,
-                       simulate=None) -> LatticeCell:
+                       classed: bool = False, simulate=None) -> LatticeCell:
         """Best split for one lattice point by full-simulation attainment
-        (ties broken by p95 e2e, then enumeration order — deterministic)."""
+        (ties broken by p95 e2e, then enumeration order — deterministic).
+        ``classed`` extends the candidate set with per-class prefill pools
+        (DESIGN.md §19); ``scores`` stays keyed by prefill-worker count,
+        keeping the max over a count's shared and dedicated variants."""
         from repro.core.simulator import simulate_deployment  # lazy (cycle)
         simulate = simulate or simulate_deployment
         if fleet_size < 2:
@@ -397,7 +439,8 @@ class PlanLattice:
                 f"fleet_size={fleet_size}: need >= 1 prefill + 1 decode")
         best = None
         scores: Dict[int, float] = {}
-        for dep in cls.split_candidates(fleet_size, tp, chunk_grid):
+        for dep in cls.split_candidates(fleet_size, tp, chunk_grid,
+                                        classed=classed):
             c = dep.decode[0].chunk_tokens
             r = simulate(perf, dep, make_sessions(), slo,
                          scheduler=scheduler, seed=seed, chunk_tokens=c)

@@ -14,23 +14,34 @@ tie-break winner.
 from __future__ import annotations
 
 from itertools import permutations
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Union
 
 from repro.core.types import PrefillTask
+
+#: a scalar TTFT threshold, or a per-task deadline resolver (prefill
+#: classing, DESIGN.md §19 — e.g. ``RoutingConfig.deadline_for``)
+Deadline = Union[float, Callable[[PrefillTask], float]]
+
+
+def _deadline_fn(ttft_thres: Deadline) -> Callable[[PrefillTask], float]:
+    if callable(ttft_thres):
+        return ttft_thres
+    return lambda _task: ttft_thres
 
 
 def predict_satisfied(
     ordering: Sequence[PrefillTask],
     now: float,
-    ttft_thres: float,
+    ttft_thres: Deadline,
     est_time: Callable[[PrefillTask], float],
 ) -> int:
     """Eq. (3)-(4): completion times under `ordering`, count SLO-satisfying."""
+    dl = _deadline_fn(ttft_thres)
     t, sat = 0.0, 0
     for task in ordering:
         t += est_time(task)                      # C^{pi(k)}
         waited = now - task.enqueue_time
-        if waited + t <= ttft_thres:
+        if waited + t <= dl(task):
             sat += 1
     return sat
 
@@ -38,7 +49,7 @@ def predict_satisfied(
 def reorder_queue(
     queue: List[PrefillTask],
     now: float,
-    ttft_thres: float,
+    ttft_thres: Deadline,
     est_time: Callable[[PrefillTask], float],
     w: int = 3,
 ) -> List[PrefillTask]:

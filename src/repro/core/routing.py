@@ -19,7 +19,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.perf_model import PerfModel
-from repro.core.types import PrefillTask
+from repro.core.types import ClassThresholds, PrefillTask
 
 
 @dataclass(frozen=True)
@@ -28,6 +28,54 @@ class RoutingConfig:
     beta: float = 0.85               # decode-side slack factor
     ttft_thres: float = 2.0          # seconds
     itl_thres: float = 0.1           # seconds
+    # -- prefill classing (DESIGN.md §19) -------------------------------
+    # Deadline for round>0 incremental tasks (TTIT); None keeps the
+    # class-blind behaviour of pricing every round against ttft_thres.
+    ttit_thres: Optional[float] = None
+    # tenant name -> ClassThresholds overrides.  A plain dict is fine on a
+    # frozen dataclass as long as configs are never hashed (they aren't).
+    tenants: Optional[Dict[str, ClassThresholds]] = None
+
+    def deadline_for(self, task) -> float:
+        """Per-class routing/ordering deadline for one prefill task: TTFT
+        for round-0 first prompts, TTIT for incremental rounds, resolved
+        through the task's tenant overrides."""
+        ct = (self.tenants or {}).get(getattr(task, "tenant", "default"))
+        if getattr(task, "round_idx", 0) == 0:
+            if ct is not None and ct.ttft is not None:
+                return ct.ttft
+            return self.ttft_thres
+        for v in ((ct.ttit if ct else None), self.ttit_thres,
+                  (ct.ttft if ct else None)):
+            if v is not None:
+                return v
+        return self.ttft_thres
+
+    def itl_for(self, obj) -> float:
+        """Per-tenant ITL threshold; ``obj`` is anything carrying a
+        ``tenant`` attribute (task, session, live session view)."""
+        ct = (self.tenants or {}).get(getattr(obj, "tenant", "default"))
+        if ct is not None and ct.itl is not None:
+            return ct.itl
+        return self.itl_thres
+
+    @classmethod
+    def from_slo(cls, slo, *, alpha: float = 0.9,
+                 beta: float = 0.85) -> "RoutingConfig":
+        """Mirror an SLOSpec's thresholds — including the per-class/tenant
+        extensions — into a routing config, so the scheduler prices slack
+        against the same deadlines attainment is judged by."""
+        return cls(alpha=alpha, beta=beta,
+                   ttft_thres=slo.ttft_thres, itl_thres=slo.itl_thres,
+                   ttit_thres=getattr(slo, "ttit_thres", None),
+                   tenants=getattr(slo, "tenants", None))
+
+
+def class_eligible(worker, task: PrefillTask) -> bool:
+    """A prefill worker dedicated to a class (``pclass`` attribute) only
+    serves tasks of that class; an unset/empty pclass serves any."""
+    pc = getattr(worker, "pclass", "")
+    return (not pc) or pc == task.prefill_class
 
 
 def local_first_routing(ttft_thres: float, itl_thres: float) -> RoutingConfig:
@@ -66,31 +114,35 @@ def route_prefill(
     discounts each candidate's Eq. (2) history read by its resident pages —
     absent (or for workers missing from it), the read is priced as a full
     miss, the pre-pool behaviour."""
-    # lines 1-3: slack on the prefill side (random probe order)
+    # lines 1-3: slack on the prefill side (random probe order).  The
+    # deadline is the *task's* (class/tenant-resolved) deadline, and the
+    # decision carries the worker's stable id — never its list position,
+    # which an autoscaler hot swap can reshuffle mid-decision.
+    deadline = cfg.deadline_for(task)
     if prefill_workers:
         order = list(range(len(prefill_workers)))
         rng.shuffle(order)
         for i in order:
             w = prefill_workers[i]
-            if not getattr(w, "alive", True):
+            if not getattr(w, "alive", True) or not class_eligible(w, task):
                 continue
-            if w.windowed_ttft <= cfg.alpha * cfg.ttft_thres:
-                return RouteDecision("remote", i, reason="ttft-slack")
+            if w.windowed_ttft <= cfg.alpha * deadline:
+                return RouteDecision("remote", w.idx, reason="ttft-slack")
 
     # lines 4-5: slack on the decode side
-    if decode_worker.windowed_itl <= cfg.beta * cfg.itl_thres:
+    if decode_worker.windowed_itl <= cfg.beta * cfg.itl_for(task):
         return RouteDecision("local", reason="itl-slack")
 
     # lines 6-9: cost comparison
     t_local = perf.local_cost(task, decode_worker)
     best = RouteDecision("local", est_cost=t_local, reason="cost")
-    for i, w in enumerate(prefill_workers):
-        if not getattr(w, "alive", True):
+    for w in prefill_workers:
+        if not getattr(w, "alive", True) or not class_eligible(w, task):
             continue
         plan = plans.get(w.idx) if plans else None
         t_r = perf.remote_cost(task, decode_worker, w, plan=plan)
         if t_r < best.est_cost:
-            best = RouteDecision("remote", i, est_cost=t_r, reason="cost")
+            best = RouteDecision("remote", w.idx, est_cost=t_r, reason="cost")
     return best
 
 
@@ -105,11 +157,11 @@ def always_remote(
 ) -> RouteDecision:
     """Dynamo-style baseline: every prefill goes to the least-loaded prefill
     worker (pure disaggregation, no local execution)."""
-    alive = [(i, w) for i, w in enumerate(prefill_workers)
-             if getattr(w, "alive", True)]
+    alive = [w for w in prefill_workers
+             if getattr(w, "alive", True) and class_eligible(w, task)]
     if not alive:
         return RouteDecision("local", reason="no-prefill-workers")
-    i, _ = min(alive, key=lambda iw: perf.remote_cost(
-        task, decode_worker, iw[1],
-        plan=plans.get(iw[1].idx) if plans else None))
-    return RouteDecision("remote", i, reason="always-remote")
+    w = min(alive, key=lambda w: perf.remote_cost(
+        task, decode_worker, w,
+        plan=plans.get(w.idx) if plans else None))
+    return RouteDecision("remote", w.idx, reason="always-remote")

@@ -46,6 +46,7 @@ from repro.runtime import (
     ServingRuntime,
     StealingConfig,
     WindowStat,
+    class_attainment,
     mean,
     p95,
 )
@@ -64,6 +65,7 @@ class SimWorker:
     alive: bool = True
     colocated: bool = False
     chunk_tokens: int = 0         # planner-chosen per-worker chunk (§11)
+    pclass: str = ""              # dedicated prefill class, "" = any (§19)
     prefill_queue: List[PrefillTask] = field(default_factory=list)
     sessions: List[Session] = field(default_factory=list)
     mem_tokens: int = 0
@@ -142,6 +144,9 @@ class SimResult:
     kv_promotes: int = 0
     replans: int = 0              # §18 counters (0 when autoscale disabled)
     role_swaps: int = 0
+    #: tenant -> SLO attainment fraction (§19); {"default": ...} when the
+    #: trace carries no tenant labels
+    class_attainment: Dict[str, float] = field(default_factory=dict)
 
 
 class Simulation:
@@ -181,6 +186,8 @@ class Simulation:
                         w = self._new_worker(i, grp.tp, kind)
                         if kind == "decode":
                             w.chunk_tokens = grp.chunk_tokens
+                        elif getattr(grp, "pclass", ""):
+                            w.pclass = grp.pclass   # dedicated pool (§19)
                         ws.append(w)
                         i += 1
         if straggler:
@@ -341,6 +348,7 @@ class Simulation:
             kv_promotes=self.coordinator.sched.kv_promotes,
             replans=self.coordinator.sched.replans,
             role_swaps=self.coordinator.sched.role_swaps,
+            class_attainment=class_attainment(ss, self.slo),
         )
 
 
@@ -357,8 +365,6 @@ def simulate_deployment(perf: PerfModel, deployment: Deployment,
                             adaptive_chunk=adaptive_chunk,
                             work_stealing=work_stealing,
                             decode_offload=decode_offload,
-                            routing=RoutingConfig(
-                                ttft_thres=slo.ttft_thres,
-                                itl_thres=slo.itl_thres))
+                            routing=RoutingConfig.from_slo(slo))
     sim = Simulation(perf, deployment, sessions, slo, base, **kw)
     return sim.run()

@@ -4,7 +4,25 @@ both — DESIGN.md §2)."""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Dict, List, Optional
+
+# Prefill class tags (DESIGN.md §19).  A round-0 prefill is a bulk
+# "first-prompt" job priced against TTFT; every later round is a
+# latency-critical "incremental" job priced against TTIT.
+FIRST_PROMPT = "first-prompt"
+INCREMENTAL = "incremental"
+
+
+@dataclass(frozen=True)
+class ClassThresholds:
+    """Per-tenant SLO-class thresholds (DESIGN.md §19).
+
+    Any field left ``None`` falls back to the owning spec/config scalar, so
+    a tenant entry only has to name what it tightens.
+    """
+    ttft: Optional[float] = None       # round-0 deadline (seconds)
+    ttit: Optional[float] = None       # round>0 incremental deadline (seconds)
+    itl: Optional[float] = None        # per-token deadline (seconds)
 
 
 @dataclass
@@ -40,10 +58,19 @@ class PrefillTask:
     # import cycle); None when pooling is off or nothing is resident.
     # Plain data — it rides on the task over proc/tcp RPC.
     cache_plan: Optional[object] = None
+    # -- prefill classing (DESIGN.md §19) -------------------------------
+    # Tenant SLO class of the owning session; stamped at task creation and
+    # propagated through chunk splits, reabsorbs and recovery re-prefills.
+    tenant: str = "default"
 
     @property
     def total_ctx(self) -> int:
         return self.l_hist + self.l_incr
+
+    @property
+    def prefill_class(self) -> str:
+        """Derived, never stored: chunks of round 0 stay first-prompt."""
+        return FIRST_PROMPT if self.round_idx == 0 else INCREMENTAL
 
 
 @dataclass
@@ -70,6 +97,9 @@ class Session:
     # prompt / tool schema).  The modeled backend derives its KV-pool
     # page symbols from this; live sessions carry real token ids instead.
     prefix_group: Optional[tuple] = None
+    # -- multi-tenant SLO classes (DESIGN.md §19) -----------------------
+    tenant: str = "default"            # SLO class ("interactive" | "batch" | ...)
+    trace: str = ""                    # component trace name in a mixed trace
 
     @property
     def num_rounds(self) -> int:
@@ -94,6 +124,35 @@ class SLOSpec:
     ttft_thres: float                  # seconds, per round
     itl_thres: float                   # seconds, per token
     itl_quantile: Optional[float] = None   # None = mean TPOT
+    # -- prefill classing (DESIGN.md §19) -------------------------------
+    # Deadline for round>0 incremental prefills (TTIT).  None keeps the
+    # pre-classing behaviour: every round is held to ttft_thres.
+    ttit_thres: Optional[float] = None
+    # tenant name -> ClassThresholds; unlisted tenants use the scalars.
+    tenants: Optional[Dict[str, ClassThresholds]] = None
+
+    def _tenant(self, tenant: str) -> Optional[ClassThresholds]:
+        return (self.tenants or {}).get(tenant)
+
+    def round_deadline(self, round_idx: int, tenant: str = "default") -> float:
+        """Round-0 rounds answer to TTFT; later rounds to TTIT, falling back
+        through tenant-ttit -> spec-ttit -> tenant-ttft -> spec-ttft."""
+        ct = self._tenant(tenant)
+        if round_idx == 0:
+            if ct is not None and ct.ttft is not None:
+                return ct.ttft
+            return self.ttft_thres
+        for v in ((ct.ttit if ct else None), self.ttit_thres,
+                  (ct.ttft if ct else None)):
+            if v is not None:
+                return v
+        return self.ttft_thres
+
+    def itl_for(self, tenant: str = "default") -> float:
+        ct = self._tenant(tenant)
+        if ct is not None and ct.itl is not None:
+            return ct.itl
+        return self.itl_thres
 
     def itl_stat(self, itls: List[float]) -> float:
         if not itls:
@@ -106,8 +165,10 @@ class SLOSpec:
     def satisfied(self, s: Session) -> bool:
         if not s.ttfts or len(s.ttfts) < s.num_rounds:
             return False               # never completed
-        if any(t > self.ttft_thres for t in s.ttfts):
+        tenant = getattr(s, "tenant", "default")
+        if any(t > self.round_deadline(i, tenant)
+               for i, t in enumerate(s.ttfts)):
             return False
-        if s.itls and self.itl_stat(s.itls) > self.itl_thres:
+        if s.itls and self.itl_stat(s.itls) > self.itl_for(tenant):
             return False
         return True

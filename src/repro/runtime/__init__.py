@@ -41,6 +41,7 @@ from repro.runtime.kv_pool import (  # noqa: F401
 from repro.runtime.metrics import (  # noqa: F401
     SchedCounters,
     WindowStat,
+    class_attainment,
     mean,
     p95,
     quantile,

@@ -23,8 +23,10 @@ draining — on three triggers:
 Role reassignment is by stable id: surplus workers are *retired in place*
 (``ServingRuntime.retire_worker`` — alive=False, queued chunks re-routed,
 decode residents rebound) and deficits are filled by appending fresh
-workers at max-id+1.  Worker lists are never pruned, which keeps
-``RouteDecision.worker_idx`` (a list position) equal to the stable id and
+workers at max-id+1.  ``RouteDecision.worker_idx`` is a STABLE id resolved
+through ``ServingRuntime.worker_by_id`` — never a list position — so a
+swap that reorders or extends ``prefill_workers`` between pricing and
+dispatch cannot cross wires; worker lists are still never pruned, which
 preserves every existing decision-log golden.
 
 Every swap emits one ``replan`` decision-log event

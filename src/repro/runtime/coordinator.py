@@ -53,6 +53,7 @@ from repro.core.routing import (
     RouteDecision,
     RoutingConfig,
     always_remote,
+    class_eligible,
     route_prefill,
 )
 from repro.core.types import PrefillTask
@@ -280,12 +281,16 @@ class Coordinator:
 
     def laxity(self, task: PrefillTask, worker, now: float) -> float:
         """SLO-slack priority: time to spare before this chunk must START to
-        meet its round's TTFT deadline, priced by the PerfModel.  Lower =
-        more urgent.  ``deadline - now - T_pre`` — note the ordering between
-        two tasks on one worker is independent of ``now`` (it cancels),
-        which keeps the priority order identical across the modeled and
-        live backends on the same queue state."""
-        deadline = task.arrival_time + self.routing.ttft_thres
+        meet its round's deadline, priced by the PerfModel.  Lower = more
+        urgent.  The deadline is the task's CLASS deadline (DESIGN.md §19):
+        TTFT for round-0 first prompts, TTIT for incremental rounds — the
+        pre-classing code priced every round against ttft_thres, so an
+        urgent increment (tight TTIT, tiny T_pre) ordered behind any long
+        first prompt that arrived earlier.  ``deadline - now - T_pre`` —
+        the ordering between two tasks on one worker is independent of
+        ``now`` (it cancels), which keeps the priority order identical
+        across the modeled and live backends on the same queue state."""
+        deadline = task.arrival_time + self.routing.deadline_for(task)
         return deadline - now - self.perf.t_pre(
             task.l_hist, task.l_incr, worker.tp, worker.speed)
 
@@ -360,6 +365,8 @@ class Coordinator:
                 s = sessions.get(k.session_id)
                 if s is None or k.gen != getattr(s, "_rt_gen", 0):
                     continue                    # superseded by a rebind
+                if not class_eligible(thief, k):
+                    continue                    # class-dedicated pool (§19)
                 examined = True
                 move_read = 0.0
                 if (k.l_hist > 0 and getattr(s, "_rt_chain_worker", None)
@@ -445,7 +452,12 @@ class Coordinator:
         off = self.offload
         if off is None:
             return None
-        hi = off.guard * self.routing.itl_thres
+        # the guard protects the decoding batch's ITL: under per-tenant
+        # classes the STRICTEST resident tenant's threshold governs (§19)
+        itl = self.routing.itl_thres
+        if self.routing.tenants and decoding_batch:
+            itl = min(self.routing.itl_for(s) for s in decoding_batch)
+        hi = off.guard * itl
         lo = off.hysteresis * hi
         run_cost, queued = self._stall_parts(decode_worker, decoding_batch)
         stall = run_cost + sum(c for _k, c in queued)
@@ -485,6 +497,8 @@ class Coordinator:
                 drain += self.perf.t_pre(mine.l_hist, mine.l_incr, w.tp,
                                          w.speed)
             for k, stay, s in chunks:
+                if not class_eligible(w, k):
+                    continue                # class-dedicated pool (§19)
                 move_read = 0.0
                 if (k.l_hist > 0 and getattr(s, "_rt_chain_worker", None)
                         != ("prefill", w.idx)):
@@ -520,9 +534,13 @@ class Coordinator:
         if self.preemptive:
             # SLO-slack priority: least laxity first; the sort is stable so
             # equal-laxity tasks keep FCFS order.  (now cancels in the
-            # comparison — sort on the time-independent part.)
-            q.sort(key=lambda t: t.arrival_time - self.perf.t_pre(
-                t.l_hist, t.l_incr, worker.tp, worker.speed))
+            # comparison — sort on the time-independent part.)  The
+            # per-class deadline term no longer cancels across tasks of
+            # different classes, so it stays in the key (DESIGN.md §19).
+            q.sort(key=lambda t: t.arrival_time
+                   + self.routing.deadline_for(t)
+                   - self.perf.t_pre(t.l_hist, t.l_incr, worker.tp,
+                                     worker.speed))
             # Overload refinement (§14, found by the scheduling-oracle
             # suite): pure least-laxity is longest-job-first among
             # near-equal arrivals — exactly inverted from the
@@ -539,13 +557,14 @@ class Coordinator:
             # the w-task window.
             est = lambda t: self.perf.t_pre(t.l_hist, t.l_incr, worker.tp,
                                             worker.speed)
-            reorder_queue(q, now, self.routing.ttft_thres, est,
+            reorder_queue(q, now, self.routing.deadline_for, est,
                           self.reorder_w)
             return
         if self.scheduler in REORDERING:
             est = lambda t: self.perf.t_pre(t.l_hist, t.l_incr, worker.tp,
                                             worker.speed)
-            reorder_queue(q, now, self.routing.ttft_thres, est, self.reorder_w)
+            reorder_queue(q, now, self.routing.deadline_for, est,
+                          self.reorder_w)
         elif self.scheduler == "continuum":
             # session priority: tasks reusing cached KV first (stable)
             q.sort(key=lambda t: t.l_hist == 0)

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass
-from typing import List, Sequence
+from typing import Dict, List, Sequence
 
 
 @dataclass
@@ -55,6 +55,19 @@ def quantile(vals: Sequence[float], q: float) -> float:
 
 def mean(vals: Sequence[float]) -> float:
     return sum(vals) / len(vals) if vals else 0.0
+
+
+def class_attainment(sessions: Sequence, slo) -> Dict[str, float]:
+    """Per-tenant SLO attainment (prefill classing, DESIGN.md §19):
+    tenant name -> fraction of its sessions that satisfied the spec.
+    Judged by the same ``slo.satisfied`` as the aggregate number — which
+    resolves per-tenant thresholds itself — so the per-class fractions
+    always decompose the headline attainment exactly."""
+    groups: Dict[str, List] = {}
+    for s in sessions:
+        groups.setdefault(getattr(s, "tenant", "default"), []).append(s)
+    return {t: sum(1 for s in ss if slo.satisfied(s)) / len(ss)
+            for t, ss in groups.items()}
 
 
 class WindowStat:

@@ -182,7 +182,8 @@ class ServingRuntime:
         task = PrefillTask(
             session_id=s.session_id, round_idx=0, l_hist=0,
             l_incr=self.backend.incr_len(s, 0), enqueue_time=self.now,
-            arrival_time=self.now, is_initial=True, gen=s._rt_gen)
+            arrival_time=self.now, is_initial=True, gen=s._rt_gen,
+            tenant=getattr(s, "tenant", "default"))
         self._dispatch(s, task)
 
     # -- dispatch: chunk split + routing (§3 step 2 / §4.1) -----------------
@@ -205,7 +206,8 @@ class ServingRuntime:
                 enqueue_time=task.enqueue_time,
                 arrival_time=task.arrival_time, is_initial=task.is_initial,
                 incr_offset=task.incr_offset,
-                is_final_chunk=rest.is_final_chunk, gen=task.gen)
+                is_final_chunk=rest.is_final_chunk, gen=task.gen,
+                tenant=task.tenant)
         if self._chunked:
             d = self._bound_decode(s)
             batch = []
@@ -226,13 +228,14 @@ class ServingRuntime:
             l_hist=task.l_hist, l_incr=c,
             enqueue_time=task.enqueue_time, arrival_time=task.arrival_time,
             is_initial=task.is_initial, incr_offset=task.incr_offset,
-            is_final_chunk=False, gen=task.gen)
+            is_final_chunk=False, gen=task.gen, tenant=task.tenant)
         rest = PrefillTask(
             session_id=task.session_id, round_idx=task.round_idx,
             l_hist=task.l_hist + c, l_incr=task.l_incr - c,
             enqueue_time=task.enqueue_time, arrival_time=task.arrival_time,
             is_initial=task.is_initial, incr_offset=task.incr_offset + c,
-            is_final_chunk=task.is_final_chunk, gen=task.gen)
+            is_final_chunk=task.is_final_chunk, gen=task.gen,
+            tenant=task.tenant)
         return first, rest
 
     def _route_one(self, s, task: PrefillTask) -> None:
@@ -240,8 +243,8 @@ class ServingRuntime:
         if not d.alive:
             self._rebind(s, task)
             return
-        # full list: Alg. 1 skips dead workers itself, and worker_idx must
-        # index the canonical list
+        # full list: Alg. 1 skips dead/ineligible workers itself; the
+        # decision names its worker by STABLE id
         dec = self.coordinator.route(task, self.now, d, self.prefill_workers)
         task.enqueue_time = self.now
         s.state = "prefill_wait"
@@ -264,7 +267,10 @@ class ServingRuntime:
             d.prefill_queue.append(task)
             self._kick(d)
         else:
-            w = self.prefill_workers[dec.worker_idx]
+            # resolve by stable id: an autoscaler hot swap may have
+            # reordered prefill_workers since the decision was priced
+            w = self.worker_by_id("prefill", dec.worker_idx)
+            assert w is not None, f"routed to unknown worker {dec.worker_idx}"
             task.routed_to = f"remote:{w.idx}"
             w.prefill_queue.append(task)
             self._kick(w)
@@ -633,7 +639,8 @@ class ServingRuntime:
             session_id=s.session_id, round_idx=s.current_round,
             l_hist=s.context_len,
             l_incr=self.backend.incr_len(s, s.current_round),
-            enqueue_time=self.now, arrival_time=self.now, gen=s._rt_gen)
+            enqueue_time=self.now, arrival_time=self.now, gen=s._rt_gen,
+            tenant=getattr(s, "tenant", "default"))
         self._dispatch(s, task)
 
     # -- failures / recovery (§6 / §13) -------------------------------------
@@ -754,6 +761,7 @@ class ServingRuntime:
         rtask = self.backend.make_recovery_task(s, task, self.now, pending,
                                                 d_new, rplan)
         rtask.gen = s._rt_gen
+        rtask.tenant = getattr(s, "tenant", "default")
         resident = rtask.l_hist     # live may fall back to 0 (slot pressure)
         if pm is not None and resident > 0:
             # the rebind target already held a prefix of the dead context:

@@ -31,10 +31,11 @@ the old ~25 flat kwargs keep working through a deprecation shim.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 import warnings
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -51,6 +52,7 @@ from repro.runtime import (
     PoolManager,
     ServingRuntime,
     StealingConfig,
+    class_attainment,
     mean,
     p95,
 )
@@ -115,6 +117,10 @@ class LiveResult:
     kv_promote_bytes: int = 0     # measured host->hbm read-back bytes
     replans: int = 0              # §18 counters (0 when autoscale disabled)
     role_swaps: int = 0
+    #: tenant -> SLO attainment fraction (§19); {"default": ...} when the
+    #: trace carries no tenant labels
+    class_attainment: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
 
 
 def _shim_legacy_kwargs(spec, transport, policy, legacy):
@@ -206,6 +212,9 @@ class LiveCluster:
             workers = self._pool.spawn_many(specs)
             self.prefill_workers = workers[:spec.n_prefill]
             self.decode_workers = workers[spec.n_prefill:]
+            for i, w in enumerate(self.prefill_workers):
+                if i < len(policy.prefill_classes):
+                    w.pclass = policy.prefill_classes[i]   # dedicated (§19)
         else:
             key = __import__("jax").random.PRNGKey(seed)
             shared_engine_params = None
@@ -213,8 +222,10 @@ class LiveCluster:
                 eng = Engine(cfg, max_len=spec.max_len, key=key,
                              params=shared_engine_params, tp=spec.tp)
                 shared_engine_params = eng.params
-                self.prefill_workers.append(
-                    LivePrefillWorker(i, eng, tp=spec.tp))
+                w = LivePrefillWorker(i, eng, tp=spec.tp)
+                if i < len(policy.prefill_classes):
+                    w.pclass = policy.prefill_classes[i]   # dedicated (§19)
+                self.prefill_workers.append(w)
             for i in range(spec.n_decode):
                 eng = Engine(cfg, max_len=spec.max_len, key=key,
                              params=shared_engine_params, tp=spec.tp)
@@ -272,8 +283,7 @@ class LiveCluster:
             pool_mgr.listener = self.kv_store
         self.coordinator = Coordinator(
             perf=self.perf,
-            routing=RoutingConfig(ttft_thres=self.slo.ttft_thres,
-                                  itl_thres=self.slo.itl_thres),
+            routing=RoutingConfig.from_slo(self.slo),
             scheduler=policy.scheduler, seed=seed, chunk_tuner=tuner,
             stealing=stealing, offload=offload, pool_mgr=pool_mgr,
             cache_aware=policy.kv_cache_aware)
@@ -490,6 +500,7 @@ class LiveCluster:
                               if self.kv_store else 0),
             replans=self.coordinator.sched.replans,
             role_swaps=self.coordinator.sched.role_swaps,
+            class_attainment=class_attainment(sessions, self.slo),
         )
 
 
@@ -497,7 +508,9 @@ def make_live_sessions(cfg: ModelConfig, *, num_sessions: int = 4,
                        rounds: int = 3, prefill_len: int = 24,
                        decode_len: int = 6, arrival_gap: float = 0.01,
                        seed: int = 0,
-                       shared_prefix: int = 0) -> List[LiveSession]:
+                       shared_prefix: int = 0,
+                       tenants: Optional[List[str]] = None,
+                       ) -> List[LiveSession]:
     """Synthetic multi-round sessions over real token ids.
 
     ``shared_prefix``: the first N tokens of every round-0 prompt are drawn
@@ -506,7 +519,10 @@ def make_live_sessions(cfg: ModelConfig, *, num_sessions: int = 4,
     shared-prefix structure the global KV pool dedups (DESIGN.md §17).
     Unique tails keep the sessions' page chains divergent from the first
     private token onward, so greedy decode cannot manufacture extra
-    sharing the modeled twin would miss."""
+    sharing the modeled twin would miss.
+
+    ``tenants``: optional per-session tenant SLO-class labels, cycled over
+    the session list (DESIGN.md §19)."""
     rng = np.random.default_rng(seed)
     shared = (rng.integers(0, cfg.vocab_size,
                            min(shared_prefix, prefill_len)).astype(np.int32)
@@ -522,5 +538,7 @@ def make_live_sessions(cfg: ModelConfig, *, num_sessions: int = 4,
                 [shared, prompts[0][len(shared):]]).astype(np.int32)
         out.append(LiveSession(session_id=sid,
                                arrival_time=sid * arrival_gap,
-                               rounds=rs, prompt_tokens=prompts))
+                               rounds=rs, prompt_tokens=prompts,
+                               tenant=(tenants[sid % len(tenants)]
+                                       if tenants else "default")))
     return out

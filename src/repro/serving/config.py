@@ -96,6 +96,11 @@ class SchedPolicy:
     offload_min_profit_s: float = 0.0
     # -- ragged packed fused path (DESIGN.md §15) -------------------------
     packed: Optional[bool] = None    # None = auto (on when arch supports it)
+    # -- prefill classing (DESIGN.md §19) ---------------------------------
+    # Per-prefill-worker dedicated class ("" = shared), in worker order —
+    # like decode_chunk_tokens, a per-worker tuple the simulator instead
+    # derives from Deployment groups, so deliberately NOT mirrored.
+    prefill_classes: Tuple[str, ...] = ()
     # -- global KV pool (DESIGN.md §17) -----------------------------------
     kv_pool: bool = False            # content-addressed paged KV + tiering
     kv_page_tokens: int = 8          # tokens per content-addressed page

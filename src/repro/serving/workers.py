@@ -53,6 +53,9 @@ class LiveSession:
     ttfts: List[float] = field(default_factory=list)
     itls: List[float] = field(default_factory=list)
     finish_time: Optional[float] = None
+    # -- multi-tenant SLO classes (DESIGN.md §19) -----------------------
+    tenant: str = "default"
+    trace: str = ""
 
     @property
     def num_rounds(self) -> int:
@@ -87,6 +90,7 @@ class WorkerSchedState:
         self.tp = tp
         self.speed = 1.0
         self.alive = True
+        self.pclass = ""                # dedicated prefill class, "" = any (§19)
         self.prefill_queue: List[PrefillTask] = []
         self.ttft_stat = WindowStat(window_s)
         self.itl_stat = WindowStat(window_s)

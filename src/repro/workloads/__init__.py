@@ -1,8 +1,10 @@
 from repro.workloads.traces import (  # noqa: F401
+    DEFAULT_TENANTS,
     TRACES,
     TraceSpec,
     diurnal_rate,
     make_diurnal_trace,
+    make_mixed_trace,
     make_trace,
     trace_stats,
 )

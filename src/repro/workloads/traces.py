@@ -18,7 +18,8 @@ from __future__ import annotations
 import math
 import random
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from functools import lru_cache
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.types import RoundSpec, Session
 
@@ -53,13 +54,44 @@ def _lognormal(rng: random.Random, mean: float, sigma: float) -> float:
     return rng.lognormvariate(mu, sigma)
 
 
+#: cap on rounds per session — keeps one pathological geometric draw from
+#: dominating a whole benchmark run
+ROUNDS_CAP = 64
+
+
+@lru_cache(maxsize=None)
+def _geom_p(mean: float, cap: int = ROUNDS_CAP) -> float:
+    """Success probability for the CAP-CENSORED shifted geometric so its
+    mean equals ``mean`` exactly.
+
+    ``_num_rounds`` draws n ∈ [1, cap] with the tail mass absorbed at cap,
+    whose mean is E[min(G_p, cap)] = (1 - (1-p)^cap) / p — strictly below
+    the uncensored 1/p.  The old code used p = 1/mean anyway, silently
+    biasing long-tailed traces low (GAIA's 11.32-round mean sampled at
+    ~11.0).  Invert the censored mean by bisection (monotone in p)."""
+    if mean <= 1.0:
+        return 1.0
+    if mean >= cap:
+        raise ValueError(f"mean_rounds={mean} unreachable under cap={cap}")
+    lo, hi = 1e-9, 1.0      # censored mean: cap at p->0, 1 at p=1
+    for _ in range(100):
+        mid = (lo + hi) / 2.0
+        m = (1.0 - (1.0 - mid) ** cap) / mid
+        if m > mean:
+            lo = mid
+        else:
+            hi = mid
+    return (lo + hi) / 2.0
+
+
 def _num_rounds(rng: random.Random, spec: TraceSpec) -> int:
     if spec.fixed_rounds is not None:
         return spec.fixed_rounds
-    # shifted geometric with mean = spec.mean_rounds (support >= 1)
-    p = 1.0 / spec.mean_rounds
+    # shifted geometric, censored at ROUNDS_CAP with a cap-aware p so the
+    # sample mean still reproduces Table 1 (support 1..ROUNDS_CAP)
+    p = _geom_p(spec.mean_rounds)
     n = 1
-    while rng.random() > p and n < 64:
+    while rng.random() > p and n < ROUNDS_CAP:
         n += 1
     return n
 
@@ -167,13 +199,73 @@ def make_diurnal_trace(
 
 
 def trace_stats(sessions: List[Session]) -> Dict[str, float]:
+    """Table-1 summary means; guarded so an empty session list (a filter
+    that matched nothing, a zero-weight mixed component) reports zeros
+    instead of raising ZeroDivisionError."""
     n = len(sessions)
     rounds = [s.num_rounds for s in sessions]
     pf = [r.prefill_len for s in sessions for r in s.rounds]
     dc = [r.decode_len for s in sessions for r in s.rounds]
     return {
         "sessions": n,
-        "avg_rounds": sum(rounds) / n,
-        "avg_prefill_len": sum(pf) / len(pf),
-        "avg_decode_len": sum(dc) / len(dc),
+        "avg_rounds": sum(rounds) / n if n else 0.0,
+        "avg_prefill_len": sum(pf) / len(pf) if pf else 0.0,
+        "avg_decode_len": sum(dc) / len(dc) if dc else 0.0,
     }
+
+
+# ---------------------------------------------------------------------------
+# Mixed multi-tenant traces (prefill classing, DESIGN.md §19)
+# ---------------------------------------------------------------------------
+
+#: default trace -> tenant SLO class: agent/RAG chat loops a user watches
+#: live are "interactive"; long-horizon assistant jobs are "batch"
+DEFAULT_TENANTS: Dict[str, str] = {
+    "toolbench": "interactive",
+    "hotpotqa": "interactive",
+    "gaia": "batch",
+    "dureader": "batch",
+}
+
+
+def make_mixed_trace(
+    names: Sequence[str] = ("toolbench", "gaia", "hotpotqa", "dureader"),
+    *,
+    num_sessions: int = 200,
+    arrival_rate: float = 2.0,          # requests / second (Poisson)
+    seed: int = 0,
+    weights: Optional[Sequence[float]] = None,
+    tenants: Optional[Dict[str, str]] = None,
+    shared_prefix_tokens: int = 0,
+) -> List[Session]:
+    """Blend several Table-1 traces into ONE concurrent arrival stream.
+
+    A single Poisson process at ``arrival_rate`` drives all arrivals; each
+    arrival draws its component trace by ``weights`` (uniform by default),
+    so components interleave rather than run solo — the multi-tenant load
+    the per-class scheduler (DESIGN.md §19) is judged against.  Every
+    session is labeled with its component (``s.trace``) and its tenant SLO
+    class (``s.tenant``, from ``tenants`` over :data:`DEFAULT_TENANTS`);
+    both labels are deterministic under a fixed seed.  With
+    ``shared_prefix_tokens``, each component gets its OWN prefix group
+    (system prompts are shared per workload, not across workloads)."""
+    names = list(names)
+    if not names:
+        raise ValueError("make_mixed_trace needs at least one trace name")
+    ws = list(weights) if weights is not None else [1.0] * len(names)
+    if len(ws) != len(names):
+        raise ValueError(f"{len(ws)} weights for {len(names)} traces")
+    tmap = dict(DEFAULT_TENANTS)
+    tmap.update(tenants or {})
+    rng = random.Random(seed)
+    sessions: List[Session] = []
+    t = 0.0
+    for sid in range(num_sessions):
+        t += rng.expovariate(arrival_rate)
+        name = rng.choices(names, weights=ws)[0]
+        s = _make_session(rng, TRACES[name], sid, t, shared_prefix_tokens,
+                          prefix_group=names.index(name))
+        s.trace = name
+        s.tenant = tmap.get(name, "default")
+        sessions.append(s)
+    return sessions

@@ -1,0 +1,384 @@
+"""Prefill classing + tenant SLO classes (DESIGN.md §19) and the two
+scheduling fixes the feature is anchored on:
+
+  * **incremental-deadline fix** — ``Coordinator.laxity`` (and the
+    preemptive queue order) used to price EVERY round against
+    ``ttft_thres``; an urgent increment with a tight TTIT deadline ordered
+    behind any long first prompt that merely arrived earlier.  Deadlines
+    now resolve per task class (TTFT for round 0, TTIT for round > 0,
+    tenant overrides on top).
+  * **stale-index routing fix** — ``route_prefill`` / ``always_remote``
+    used to return the candidate's *enumerate position* in
+    ``RouteDecision.worker_idx`` while cache plans (and every other
+    consumer) key workers by stable id; a §18 hot swap reordering the
+    prefill list between pricing and dispatch crossed wires.  Decisions
+    now carry the stable id end to end and dispatch resolves through
+    ``ServingRuntime.worker_by_id``.
+
+Plus the trace-layer satellites: the cap-censored geometric round sampler
+(GAIA's Table-1 mean no longer biased low by the 64-round cap), guarded
+``trace_stats`` on empty lists, and the blended multi-tenant
+``make_mixed_trace`` with deterministic per-tenant labels.
+"""
+import dataclasses
+import random
+from collections import Counter
+
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    Deployment,
+    PerfModel,
+    RoutingConfig,
+    SimConfig,
+    Simulation,
+    SLOSpec,
+    WorkerGroup,
+    route_prefill,
+    simulate_deployment,
+)
+from repro.core.planner import classed_variants
+from repro.core.routing import always_remote, class_eligible
+from repro.core.simulator import SimWorker, WindowStat
+from repro.core.types import (
+    FIRST_PROMPT,
+    INCREMENTAL,
+    ClassThresholds,
+    PrefillTask,
+    RoundSpec,
+    Session,
+)
+from repro.runtime import Coordinator
+from repro.runtime.coordinator import StealingConfig
+from repro.workloads import DEFAULT_TENANTS, TRACES, make_mixed_trace, make_trace
+from repro.workloads.traces import ROUNDS_CAP, _geom_p, trace_stats
+
+
+def _perf():
+    return PerfModel(get_config("qwen3-32b"))
+
+
+def _task(sid=0, round_idx=0, l_hist=0, l_incr=512, arrival=0.0,
+          tenant="default"):
+    return PrefillTask(session_id=sid, round_idx=round_idx, l_hist=l_hist,
+                       l_incr=l_incr, enqueue_time=arrival,
+                       arrival_time=arrival, tenant=tenant)
+
+
+def _worker(kind, idx=0, tp=4, ttft=0.0, itl=0.0, queue=(), pclass=""):
+    w = SimWorker(idx, tp, kind)
+    w.windowed_ttft = ttft
+    w.windowed_itl = itl
+    w.prefill_queue = list(queue)
+    w.pclass = pclass
+    return w
+
+
+# ---------------------------------------------------------------------------
+# task / SLO classing surface
+# ---------------------------------------------------------------------------
+
+def test_prefill_class_derived_from_round():
+    assert _task(round_idx=0).prefill_class == FIRST_PROMPT
+    assert _task(round_idx=3).prefill_class == INCREMENTAL
+    # chunks of round 0 (incr_offset > 0) are still the first prompt
+    chunk = PrefillTask(session_id=0, round_idx=0, l_hist=256, l_incr=256,
+                        enqueue_time=0.0, arrival_time=0.0, incr_offset=256)
+    assert chunk.prefill_class == FIRST_PROMPT
+
+
+def test_class_eligibility_gate():
+    first = _worker("prefill", idx=0, pclass=FIRST_PROMPT)
+    incr = _worker("prefill", idx=1, pclass=INCREMENTAL)
+    shared = _worker("prefill", idx=2)
+    t0, t3 = _task(round_idx=0), _task(round_idx=3)
+    assert class_eligible(first, t0) and not class_eligible(first, t3)
+    assert class_eligible(incr, t3) and not class_eligible(incr, t0)
+    assert class_eligible(shared, t0) and class_eligible(shared, t3)
+
+
+def test_slo_round_deadline_fallback_chain():
+    slo = SLOSpec(ttft_thres=2.0, itl_thres=0.1, ttit_thres=0.5,
+                  tenants={"interactive": ClassThresholds(ttit=0.3),
+                           "gold": ClassThresholds(ttft=1.0, itl=0.05)})
+    assert slo.round_deadline(0, "default") == 2.0
+    assert slo.round_deadline(0, "gold") == 1.0
+    assert slo.round_deadline(3, "default") == 0.5       # spec ttit
+    assert slo.round_deadline(3, "interactive") == 0.3   # tenant ttit
+    assert slo.round_deadline(3, "gold") == 0.5          # spec ttit wins
+    assert slo.itl_for("gold") == 0.05 and slo.itl_for("default") == 0.1
+    # no spec ttit: a tenant's ttft is its increments' fallback deadline
+    t_only = SLOSpec(ttft_thres=2.0, itl_thres=0.1,
+                     tenants={"gold": ClassThresholds(ttft=1.0)})
+    assert t_only.round_deadline(3, "gold") == 1.0
+    # no ttit anywhere -> class-blind: every round against ttft
+    blind = SLOSpec(ttft_thres=2.0, itl_thres=0.1)
+    assert blind.round_deadline(5, "default") == 2.0
+
+
+def test_slo_satisfied_judges_increments_by_ttit():
+    slo = SLOSpec(ttft_thres=2.0, itl_thres=10.0, ttit_thres=0.5)
+    s = Session(session_id=0, arrival_time=0.0,
+                rounds=[RoundSpec(64, 4, 0.0), RoundSpec(64, 4, 0.0)])
+    s.ttfts = [1.5, 1.5]          # round 1 misses its 0.5s TTIT
+    s.itls = [0.01] * 8
+    assert not slo.satisfied(s)
+    s.ttfts = [1.5, 0.4]
+    assert slo.satisfied(s)
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: incremental rounds get their own deadline in laxity/ordering
+# ---------------------------------------------------------------------------
+
+def test_urgent_increment_outranks_long_first_prompt():
+    """Pre-fix pathology: under overload, a round-3 increment with a 0.5s
+    TTIT deadline was priced against the 10s TTFT threshold and ordered
+    BEHIND a huge round-0 prompt that arrived earlier.  With class
+    deadlines the increment's laxity is far smaller and it runs first."""
+    perf = _perf()
+    routing = RoutingConfig(ttft_thres=10.0, itl_thres=0.1, ttit_thres=0.5)
+    co = Coordinator(perf=perf, routing=routing, stealing=StealingConfig())
+    w = _worker("prefill", idx=0)
+    first = _task(sid=0, round_idx=0, l_incr=8192, arrival=0.0)
+    incr = _task(sid=1, round_idx=3, l_hist=2048, l_incr=128, arrival=1.0)
+    now = 1.0
+    # deadline = arrival + class threshold: 10.0 vs 1.0 + 0.5
+    assert co.laxity(incr, w, now) < co.laxity(first, w, now)
+    w.prefill_queue = [first, incr]
+    co.order_queue(w, now)
+    assert w.prefill_queue[0] is incr, (
+        "urgent increment must preempt the long first prompt at the head")
+    # class-blind config (no ttit): both priced against ttft -> the earlier
+    # arrival keeps the head, i.e. the fix only engages with class deadlines
+    blind = Coordinator(perf=perf, stealing=StealingConfig(),
+                        routing=RoutingConfig(ttft_thres=10.0, itl_thres=0.1))
+    w2 = _worker("prefill", idx=0, queue=[first, incr])
+    blind.order_queue(w2, now)
+    assert w2.prefill_queue[0] is first
+
+
+def test_tenant_override_tightens_increment_deadline():
+    routing = RoutingConfig(ttft_thres=10.0, itl_thres=0.1, ttit_thres=2.0,
+                            tenants={"interactive": ClassThresholds(ttit=0.2)})
+    hot = _task(sid=1, round_idx=2, l_incr=128, tenant="interactive")
+    warm = _task(sid=2, round_idx=2, l_incr=128, tenant="batch")
+    assert routing.deadline_for(hot) == 0.2
+    assert routing.deadline_for(warm) == 2.0
+    assert routing.deadline_for(_task(round_idx=0, tenant="interactive")) == 10.0
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: RouteDecision carries the stable id, not a list position
+# ---------------------------------------------------------------------------
+
+def test_route_decision_is_stable_id_under_list_reorder():
+    """A §18 hot swap may reorder/extend ``prefill_workers`` between
+    pricing and dispatch: the decision must name the SAME worker under any
+    list order — i.e. by its stable id, never its enumerate position."""
+    cfg = RoutingConfig(ttft_thres=2.0, itl_thres=0.1)
+    perf = _perf()
+    d = _worker("decode", idx=0, itl=0.5)
+    idle = _worker("prefill", idx=9, ttft=0.1)
+    busy = _worker("prefill", idx=4, ttft=100.0,
+                   queue=[_task(l_incr=8000) for _ in range(20)])
+    for order in ([busy, idle], [idle, busy]):
+        dec = route_prefill(_task(), d, order, perf, cfg, random.Random(0))
+        assert dec.kind == "remote" and dec.worker_idx == idle.idx
+        dec2 = always_remote(_task(), d, order, perf, cfg, random.Random(0))
+        assert dec2.worker_idx == idle.idx
+    # cost path (nobody has slack, local expensive): the cheaper worker,
+    # named by stable id under either list order
+    busy_d = _worker("decode", idx=0, itl=0.5,
+                     queue=[_task(l_incr=4096) for _ in range(4)])
+    slow = _worker("prefill", idx=7, ttft=5.0)
+    slow.speed = 0.25
+    fast = _worker("prefill", idx=3, ttft=5.0)
+    for order in ([slow, fast], [fast, slow]):
+        dec = route_prefill(_task(l_incr=4096), busy_d, order, perf, cfg,
+                            random.Random(0))
+        assert dec.kind == "remote" and dec.worker_idx == fast.idx
+
+
+def test_dispatch_resolves_stable_id_across_hot_swap_reorder():
+    """End to end through ``ServingRuntime``: reorder the live prefill list
+    the way an autoscaler swap does (retire-in-place + append means ids
+    stop matching positions) and the trace still drains with every remote
+    chunk landing on the worker the decision named."""
+    ss = make_trace("toolbench", num_sessions=30, arrival_rate=2.0, seed=11)
+    dep = Deployment((WorkerGroup(4, 3),), (WorkerGroup(4, 2),))
+    slo = SLOSpec(ttft_thres=3.0, itl_thres=0.15)
+    sim = Simulation(_perf(), dep, ss, slo, SimConfig(scheduler="dynamo"))
+    sim.coordinator.record_decisions = True
+    # ids [2, 0, 1]: every position now disagrees with its stable id
+    sim.runtime.prefill_workers[:] = (sim.runtime.prefill_workers[2:]
+                                      + sim.runtime.prefill_workers[:2])
+    r = sim.run()
+    assert all(s.finish_time is not None for s in r.sessions)
+    ids = {w.idx for w in sim.prefill_workers}
+    remotes = [w_idx for (_s, _r, _o, kind, w_idx)
+               in sim.coordinator.decision_log if kind == "remote"]
+    assert remotes and all(w_idx in ids for w_idx in remotes)
+    # the id a decision names is the worker that did the work: every
+    # prefill worker saw tasks (dynamo spreads by cost across all three)
+    assert all(w.tasks_done > 0 for w in sim.prefill_workers)
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: cap-censored geometric rounds + guarded trace stats
+# ---------------------------------------------------------------------------
+
+def test_geom_p_inverts_censored_mean():
+    # E[min(G_p, cap)] = (1-(1-p)^cap)/p must equal the requested mean
+    for mean in (2.0, 3.96, 11.32, 40.0):
+        p = _geom_p(mean)
+        m = (1.0 - (1.0 - p) ** ROUNDS_CAP) / p
+        assert abs(m - mean) < 1e-6, (mean, m)
+    assert _geom_p(1.0) == 1.0
+    assert _geom_p(0.5) == 1.0
+    with pytest.raises(ValueError):
+        _geom_p(float(ROUNDS_CAP))
+
+
+def test_gaia_round_mean_is_cap_corrected():
+    """The old p=1/mean sampler under the 64-round cap biased GAIA's
+    sample mean to ~11.0 against the 11.32 Table-1 target; the censored
+    inversion recovers it within sampling noise."""
+    ss = make_trace("gaia", num_sessions=20000, arrival_rate=10.0, seed=1)
+    mean = sum(s.num_rounds for s in ss) / len(ss)
+    assert max(s.num_rounds for s in ss) <= ROUNDS_CAP
+    assert abs(mean - TRACES["gaia"].mean_rounds) < 0.15, mean
+
+
+def test_trace_stats_empty_is_zero_not_crash():
+    st = trace_stats([])
+    assert st == {"sessions": 0, "avg_rounds": 0.0,
+                  "avg_prefill_len": 0.0, "avg_decode_len": 0.0}
+
+
+# ---------------------------------------------------------------------------
+# satellite 4: blended multi-tenant trace regression
+# ---------------------------------------------------------------------------
+
+def test_mixed_trace_blends_components_concurrently():
+    ss = make_mixed_trace(num_sessions=2000, arrival_rate=4.0, seed=3)
+    comps = Counter(s.trace for s in ss)
+    assert set(comps) == {"toolbench", "gaia", "hotpotqa", "dureader"}
+    # one arrival stream, interleaved — not four back-to-back blocks
+    times = [s.arrival_time for s in ss]
+    assert times == sorted(times)
+    first_half = Counter(s.trace for s in ss[:1000])
+    assert set(first_half) == set(comps)
+    # per-component bodies still reproduce their Table-1 means
+    for name, spec in TRACES.items():
+        st = trace_stats([s for s in ss if s.trace == name])
+        assert st["sessions"] > 0
+        assert abs(st["avg_rounds"] - spec.mean_rounds) \
+            < 0.15 * spec.mean_rounds
+        assert abs(st["avg_prefill_len"] - spec.mean_prefill) \
+            < 0.2 * spec.mean_prefill
+    # tenants follow the default map; labels + bodies deterministic per seed
+    assert all(s.tenant == DEFAULT_TENANTS[s.trace] for s in ss)
+    again = make_mixed_trace(num_sessions=2000, arrival_rate=4.0, seed=3)
+    assert [(s.trace, s.tenant, s.num_rounds) for s in again] \
+        == [(s.trace, s.tenant, s.num_rounds) for s in ss]
+
+
+def test_mixed_trace_weights_and_overrides():
+    ss = make_mixed_trace(("toolbench", "gaia"), num_sessions=300,
+                          arrival_rate=4.0, seed=5, weights=(1.0, 0.0),
+                          tenants={"toolbench": "gold"})
+    assert {s.trace for s in ss} == {"toolbench"}
+    assert {s.tenant for s in ss} == {"gold"}
+    with pytest.raises(ValueError):
+        make_mixed_trace((), num_sessions=10)
+    with pytest.raises(ValueError):
+        make_mixed_trace(("toolbench",), num_sessions=10, weights=(1.0, 2.0))
+
+
+# ---------------------------------------------------------------------------
+# per-class attainment on both result types; classed planner variants
+# ---------------------------------------------------------------------------
+
+CLASSED_SLO = SLOSpec(
+    ttft_thres=3.0, itl_thres=0.15, ttit_thres=1.5,
+    tenants={"interactive": ClassThresholds(ttit=1.0)})
+
+
+def test_sim_result_reports_per_class_attainment():
+    ss = make_mixed_trace(("toolbench", "hotpotqa", "gaia"), num_sessions=60,
+                          arrival_rate=1.0, seed=7)
+    dep = Deployment((WorkerGroup(4, 2),), (WorkerGroup(4, 2),))
+    r = simulate_deployment(_perf(), dep, ss, CLASSED_SLO, scheduler="ampd")
+    assert set(r.class_attainment) == {s.tenant for s in ss}
+    assert all(0.0 <= v <= 1.0 for v in r.class_attainment.values())
+    # per-class numbers decompose the scalar attainment exactly
+    by = Counter(s.tenant for s in r.sessions)
+    recomposed = sum(r.class_attainment[t] * n for t, n in by.items()) \
+        / sum(by.values())
+    assert abs(recomposed - r.slo_attainment) < 1e-9
+
+
+def test_classed_deployment_dedicates_pools():
+    """A classed Deployment (planner pclass groups) must keep first
+    prompts off the incremental pool and vice versa in a full sim run."""
+    ss = make_mixed_trace(("toolbench", "hotpotqa"), num_sessions=40,
+                          arrival_rate=1.5, seed=9)
+    dep = Deployment((WorkerGroup(4, 1, pclass=FIRST_PROMPT),
+                      WorkerGroup(4, 1, pclass=INCREMENTAL)),
+                     (WorkerGroup(4, 2),))
+    sim = Simulation(_perf(), dep, ss, CLASSED_SLO,
+                     SimConfig(scheduler="dynamo"))
+    sim.coordinator.record_decisions = True
+    r = sim.run()
+    assert all(s.finish_time is not None for s in r.sessions)
+    assert [w.pclass for w in sim.prefill_workers] \
+        == [FIRST_PROMPT, INCREMENTAL]
+    for sid, round_idx, _off, kind, w_idx in sim.coordinator.decision_log:
+        if kind == "remote":
+            assert w_idx == (0 if round_idx == 0 else 1), (
+                f"round {round_idx} leaked onto worker {w_idx}")
+
+
+def test_classed_variants_split_prefill_pool():
+    base = Deployment((WorkerGroup(4, 3),), (WorkerGroup(4, 2),))
+    vs = classed_variants(base)
+    assert len(vs) == 2                      # nf in {1, 2}
+    for v in vs:
+        assert sum(g.count for g in v.prefill) == 3
+        assert {g.pclass for g in v.prefill} == {FIRST_PROMPT, INCREMENTAL}
+        assert v.decode == base.decode
+    # too small to split
+    assert classed_variants(
+        Deployment((WorkerGroup(4, 1),), (WorkerGroup(4, 1),))) == []
+
+
+def test_live_result_has_class_attainment_field():
+    from repro.serving.cluster import LiveResult
+    f = {x.name for x in dataclasses.fields(LiveResult)}
+    assert "class_attainment" in f
+
+
+def test_live_cluster_reports_per_class_attainment():
+    """End to end on the measured backend: classed prefill pools via
+    SchedPolicy.prefill_classes + tenant labels from make_live_sessions
+    populate LiveResult.class_attainment."""
+    from repro.serving import (
+        ClusterSpec, LiveCluster, SchedPolicy, make_live_sessions)
+    cfg = get_config("qwen2.5-14b").reduced()
+    cl = LiveCluster(
+        cfg, spec=ClusterSpec(n_prefill=2, n_decode=1, max_slots=4,
+                              max_len=128),
+        policy=SchedPolicy(scheduler="dynamo",
+                           prefill_classes=(FIRST_PROMPT, INCREMENTAL)),
+        slo=CLASSED_SLO, seed=0, profile=False)
+    assert [w.pclass for w in cl.prefill_workers] \
+        == [FIRST_PROMPT, INCREMENTAL]
+    sessions = make_live_sessions(cfg, num_sessions=4, rounds=2,
+                                  prefill_len=16, decode_len=4,
+                                  tenants=["interactive", "batch"])
+    r = cl.run_trace(sessions)
+    assert all(s.finish_time is not None for s in sessions)
+    assert set(r.class_attainment) == {"interactive", "batch"}
+    assert all(0.0 <= v <= 1.0 for v in r.class_attainment.values())

@@ -41,7 +41,7 @@ from repro.core import (
 )
 from repro.core.perf_model import KvCoeffs, LinkTopology
 from repro.core.routing import RouteDecision, RoutingConfig
-from repro.core.types import RoundSpec, Session
+from repro.core.types import FIRST_PROMPT, INCREMENTAL, RoundSpec, Session
 from repro.runtime import Coordinator
 from repro.runtime.kv_pool import KVPoolConfig, PoolManager
 
@@ -126,9 +126,9 @@ class ForcedCoordinator(Coordinator):
 
 
 def _sim(case, cfg, coordinator=None, perf=None):
-    dep = Deployment(
-        (WorkerGroup(case["tp"], case["n_pre"]),) if case["n_pre"] else (),
-        (WorkerGroup(case["tp"], case["n_dec"]),))
+    pgroups = case.get("pgroups") or (
+        (WorkerGroup(case["tp"], case["n_pre"]),) if case["n_pre"] else ())
+    dep = Deployment(pgroups, (WorkerGroup(case["tp"], case["n_dec"]),))
     ss = fresh_sessions(case)
     sim = Simulation(perf or PERF, dep, ss, case["slo"], cfg)
     if coordinator is not None:
@@ -452,6 +452,99 @@ def test_autoscale_within_tolerance_of_reduced_fleet_oracle():
     assert att >= best_reduced - tol, (
         f"hot-swapped fleet at {att:.3f}, more than one session below the "
         f"enumerated reduced-fleet optimum {best_reduced:.3f}")
+
+
+# ---------------------------------------------------------------------------
+# class-constrained oracle (DESIGN.md §19): dedicated per-class prefill pools
+# — one worker serves only round-0 first prompts, the other only incremental
+# rounds — shrink the legal placement space.  The enumeration below only
+# visits class-ELIGIBLE placements, which is exactly the space the classed
+# production router (route_prefill + class_eligible) draws from, so the
+# never-beats upper bound verifies the router actually honors the pools: a
+# router that leaked an increment onto the first-prompt worker could land
+# OUTSIDE the enumerated space and beat the "exhaustive" optimum.  Deadlines
+# are per class (TTFT for round 0, the tighter TTIT for increments) on BOTH
+# sides — routing prices against RoutingConfig.from_slo(slo) and attainment
+# is judged by slo.round_deadline — keeping the differential apples-to-
+# apples with the satellite laxity fix in Coordinator.laxity.
+# ---------------------------------------------------------------------------
+
+def make_classed_case(seed: int) -> dict:
+    rng = random.Random(seed)
+    tp = rng.choice([2, 4])
+    n_dec = rng.choice([1, 2])
+    sessions = []
+    t = 0.0
+    for sid in range(3):                 # 3 sessions x 2 rounds, 2 eligible
+        t += rng.uniform(0.0, 0.4)       # choices each -> 2^6 = 64 placements
+        rs = [RoundSpec(prefill_len=rng.choice([1024, 2048]),
+                        decode_len=rng.randint(4, 12),
+                        env_delay=rng.uniform(0.0, 0.3)),
+              RoundSpec(prefill_len=rng.choice([128, 256]),
+                        decode_len=rng.randint(4, 12),
+                        env_delay=rng.uniform(0.0, 0.2))]
+        sessions.append(Session(session_id=sid, arrival_time=t, rounds=rs))
+    # class-resolved deadlines near their respective knees: the TTFT knee is
+    # a long first prompt, the TTIT knee a short increment dragging its
+    # accumulated history — tight enough to discriminate placements
+    t_first = PERF.t_pre(0, 1024, tp)
+    t_incr = PERF.t_pre(2048, 256, tp)
+    slo = SLOSpec(ttft_thres=rng.uniform(1.5, 3.0) * t_first + 0.05,
+                  ttit_thres=rng.uniform(1.5, 3.0) * t_incr + 0.05,
+                  itl_thres=3.0 * PERF.dec[tp].alpha)
+    pgroups = (WorkerGroup(tp, 1, pclass=FIRST_PROMPT),   # stable id 0
+               WorkerGroup(tp, 1, pclass=INCREMENTAL))    # stable id 1
+    return dict(n_pre=2, n_dec=n_dec, tp=tp, rounds=2, sessions=sessions,
+                slo=slo, seed=seed, pgroups=pgroups)
+
+
+def _classed_cfg(case, **kw) -> SimConfig:
+    # from_slo carries ttit_thres through, so routing/ordering price every
+    # increment against the SAME class deadline attainment is judged by
+    return SimConfig(scheduler="ampd", seed=case["seed"],
+                     routing=RoutingConfig.from_slo(case["slo"]), **kw)
+
+
+def run_forced_classed(case, placements) -> float:
+    cfg = _classed_cfg(case)
+    co = ForcedCoordinator(placements, perf=PERF, routing=cfg.routing,
+                           scheduler=cfg.scheduler, seed=cfg.seed)
+    return _sim(case, cfg, co).slo_attainment
+
+
+def oracle_classed_attainment(case) -> float:
+    """Exhaustive max over class-eligible placements only: a round-0 task
+    may run local or on the first-prompt worker (id 0), a later round local
+    or on the incremental worker (id 1) — worker ids are sequential across
+    Deployment groups, so group order pins the ids."""
+    tasks = [(s.session_id, r) for s in case["sessions"]
+             for r in range(len(s.rounds))]
+    per_task = [[None, 0] if r == 0 else [None, 1] for (_sid, r) in tasks]
+    best = 0.0
+    for combo in itertools.product(*per_task):
+        best = max(best, run_forced_classed(case, dict(zip(tasks, combo))))
+        if best >= 1.0:
+            return best
+    return best
+
+
+@property_seeds
+def test_production_within_tolerance_of_classed_oracle(seed):
+    """Classed production — per-class pools + per-class deadlines — stays
+    within one session of the class-constrained enumerated optimum, and
+    never beats it (the router never leaks a task onto an ineligible
+    pool, so its schedule is a point inside the constrained space)."""
+    case = make_classed_case(seed)
+    best = oracle_classed_attainment(case)
+    att = _sim(case, _classed_cfg(case)).slo_attainment
+    tol = _tolerance(case)
+    assert att >= best - tol, (
+        f"classed production {att:.3f} more than one session below the "
+        f"class-constrained oracle {best:.3f} (case seed {seed})")
+    assert att <= best + 1e-9, (
+        f"classed production {att:.3f} beat the class-constrained oracle "
+        f"{best:.3f} — a task leaked onto an ineligible pool "
+        f"(case seed {seed})")
 
 
 @property_seeds

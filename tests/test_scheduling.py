@@ -30,8 +30,8 @@ def _task(l_hist=0, l_incr=512):
                        l_incr=l_incr, enqueue_time=0.0, arrival_time=0.0)
 
 
-def _worker(kind, tp=4, ttft=0.0, itl=0.0, queue=()):
-    w = SimWorker(0, tp, kind)
+def _worker(kind, tp=4, ttft=0.0, itl=0.0, queue=(), idx=0):
+    w = SimWorker(idx, tp, kind)
     w.windowed_ttft = ttft
     w.windowed_itl = itl
     w.prefill_queue = list(queue)
@@ -142,12 +142,13 @@ def test_straggler_cost_routing_prefers_fast_worker():
     # decode worker busy with queued local prefills -> local is expensive
     d = _worker("decode", tp=4, itl=0.5,
                 queue=[_task(l_incr=4096) for _ in range(4)])
-    slow = _worker("prefill", tp=4, ttft=5.0)
+    slow = _worker("prefill", tp=4, ttft=5.0, idx=7)
     slow.speed = 0.25
-    fast = _worker("prefill", tp=4, ttft=5.0)
+    fast = _worker("prefill", tp=4, ttft=5.0, idx=3)
     dec = route_prefill(_task(l_incr=4096), d, [slow, fast], perf, cfg,
                         random.Random(0))
-    assert dec.kind == "remote" and dec.worker_idx == 1
+    # the decision names the winner by STABLE id, not list position
+    assert dec.kind == "remote" and dec.worker_idx == fast.idx
 
 
 def test_straggler_receives_fewer_tasks_under_load():
